@@ -1,0 +1,68 @@
+"""Shared benchmark utilities: timing + the standard small FL problem."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fl import FLConfig, FLRun
+from repro.data import federated_classification
+
+KEY = jax.random.PRNGKey(0)
+DIM, CLASSES = 8, 3
+
+
+def time_call(fn, *args, reps: int = 20, warmup: int = 3) -> float:
+    """Median wall-time (us) of a jitted callable."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2] * 1e6
+
+
+def mlp_problem(key=KEY, K: int = 6, S: int = 16, hidden: int = 16,
+                alpha=None):
+    """Returns (data=(x, y), init_fn, loss_fn, acc_fn)."""
+    x, y = federated_classification(key, K, S, dim=DIM, n_classes=CLASSES,
+                                    alpha=alpha)
+
+    def init(key):
+        k1, k2 = jax.random.split(key)
+        return {"w1": 0.3 * jax.random.normal(k1, (DIM, hidden)),
+                "b1": jnp.zeros(hidden),
+                "w2": 0.3 * jax.random.normal(k2, (hidden, CLASSES)),
+                "b2": jnp.zeros(CLASSES)}
+
+    def loss_fn(p, batch):
+        xx, yy = batch
+        h = jnp.tanh(xx @ p["w1"] + p["b1"])
+        logits = h @ p["w2"] + p["b2"]
+        return -jnp.take_along_axis(jax.nn.log_softmax(logits),
+                                    yy[:, None], 1).mean()
+
+    def acc_fn(p, batch):
+        xx, yy = batch
+        h = jnp.tanh(xx @ p["w1"] + p["b1"])
+        return float((jnp.argmax(h @ p["w2"] + p["b2"], -1) == yy).mean())
+
+    return (x, y), init, loss_fn, acc_fn
+
+
+def run_method(cfg: FLConfig, data, init, loss_fn, collect=False):
+    """Run a method; returns (run, x_traj, views_client0)."""
+    run = FLRun(cfg, init(KEY), loss_fn)
+    xs, views = [], []
+    for t in range(cfg.rounds):
+        if collect:
+            xs.append(run.x)
+            v = run.step(data, collect_views=True)
+            views.append(v[0] if v is not None else jnp.zeros(run.n))
+        else:
+            run.step(data)
+    return run, xs, views

@@ -1,0 +1,53 @@
+"""Theorem 3.2 benchmark: convergence of ERIS(+DSC) vs FedAvg vs
+SoteriaFL-style compression on the standard MLP problem (the loss-curve
+evidence behind Table 1's 'FedAvg-level utility')."""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import mlp_problem, run_method, time_call, KEY
+from repro.core.compressors import QSGD, RandP
+from repro.core.fl import FLConfig
+
+
+def run(quick: bool = True):
+    rounds = 120 if quick else 400
+    data, init, loss_fn, acc_fn = mlp_problem()
+    full = (data[0].reshape(-1, data[0].shape[-1]), data[1].reshape(-1))
+    cases = {
+        "fedavg": FLConfig(method="fedavg", K=6, rounds=rounds, lr=0.3),
+        "eris_A8": FLConfig(method="eris", K=6, A=8, rounds=rounds, lr=0.3),
+        "eris_dsc_p0.2": FLConfig(method="eris", K=6, A=8, rounds=rounds,
+                                  lr=0.3, use_dsc=True,
+                                  compressor=RandP(p=0.2)),
+        "eris_dsc_qsgd4": FLConfig(method="eris", K=6, A=8, rounds=rounds,
+                                   lr=0.3, use_dsc=True,
+                                   compressor=QSGD(s=4)),
+        "soteriafl_p0.2": FLConfig(method="soteriafl", K=6, rounds=rounds,
+                                   lr=0.3, compressor=RandP(p=0.2)),
+        "shatter": FLConfig(method="shatter", K=6, rounds=rounds, lr=0.3,
+                            shatter_chunks=8, shatter_r=3),
+        "secure_agg": FLConfig(method="secure_agg", K=6, rounds=rounds,
+                               lr=0.3),
+        "eris_fedadam": FLConfig(method="eris", K=6, A=8, rounds=rounds,
+                                 lr=0.05, server_opt="fedadam"),
+        "eris_ef_topk": FLConfig(method="eris", K=6, A=8, rounds=rounds,
+                                 lr=0.3, use_ef=True,
+                                 compressor=__import__(
+                                     "repro.core.compressors",
+                                     fromlist=["TopK"]).TopK(k=16)),
+        "eris_partial_50pct": FLConfig(method="eris", K=6, A=8,
+                                       rounds=rounds, lr=0.3,
+                                       participation=0.5),
+    }
+    rows = []
+    for name, cfg in cases.items():
+        run_obj, _, _ = run_method(cfg, data, init, loss_fn)
+        loss = float(loss_fn(run_obj.params(), full))
+        acc = acc_fn(run_obj.params(), full)
+        t_round = time_call(lambda: run_obj.step(data) or 0)
+        rows.append({"name": f"convergence/{name}",
+                     "us_per_call": t_round,
+                     "derived": f"final_loss={loss:.4f} acc={acc:.3f} "
+                                f"rounds={rounds}"})
+    return rows

@@ -1,0 +1,40 @@
+"""Theorem B.1 benchmark: FSA == FedAvg bit-exactness over many rounds +
+per-round cost of the sharded vs centralized aggregation (App. B)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import time_call
+from repro.core import baselines, fsa, masks
+
+
+def run(quick: bool = True):
+    rows = []
+    n, K, T = (4096, 16, 50) if quick else (65536, 64, 200)
+    key = jax.random.PRNGKey(0)
+    for A in (2, 8, 32):
+        assign = masks.make_assignment(n, A, "strided")
+        x_f = x_c = jax.random.normal(key, (n,))
+        max_dev = 0.0
+        for t in range(T):
+            g = jax.random.normal(jax.random.fold_in(key, t), (K, n))
+            x_f = fsa.fsa_round_sharded(x_f, g, assign, A, 0.05,
+                                        keep_views=False).x_new
+            x_c = baselines.fedavg_round(x_c, g, 0.05)
+            max_dev = max(max_dev, float(jnp.abs(x_f - x_c).max()))
+        g = jax.random.normal(key, (K, n))
+        t_sharded = time_call(jax.jit(
+            lambda x, g: fsa.fsa_round_sharded(x, g, assign, A, 0.05,
+                                               keep_views=False).x_new),
+            x_f, g)
+        t_central = time_call(jax.jit(
+            lambda x, g: baselines.fedavg_round(x, g, 0.05)), x_c, g)
+        rows.append({
+            "name": f"equivalence/thmB1/A={A}",
+            "us_per_call": t_sharded,
+            "derived": (f"max_dev_over_{T}_rounds={max_dev:.2e} "
+                        f"central_us={t_central:.0f} n={n} K={K}"),
+        })
+    return rows

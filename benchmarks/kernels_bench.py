@@ -1,0 +1,46 @@
+"""Kernel micro-benchmarks: wall time of the jnp reference paths on this
+host (the Pallas kernels themselves are TPU programs validated in
+interpret mode — interpret wall-time is not meaningful) + derived
+bytes/flops so the TPU-side roofline expectation is recorded."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import time_call
+from repro.kernels import ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def run(quick: bool = True):
+    rows = []
+    n = 1 << 20 if quick else 1 << 24
+    g = jax.random.normal(KEY, (n,))
+    s = jax.random.normal(jax.random.fold_in(KEY, 1), (n,))
+    f = jax.jit(lambda g, s: ref.dsc_update_ref(g, s, jnp.uint32(1), 0.1,
+                                                0.5))
+    us = time_call(f, g, s)
+    bytes_moved = n * (4 + 4 + 4 + 4)
+    rows.append({"name": "kernels/dsc_update_ref",
+                 "us_per_call": us,
+                 "derived": f"n={n} hbm_bytes={bytes_moved} "
+                            f"tpu_time_at_819GBps_us="
+                            f"{bytes_moved/819e9*1e6:.1f}"})
+    q = jax.jit(lambda x: ref.quantize_ref(x, jnp.uint32(3)))
+    us = time_call(q, g)
+    rows.append({"name": "kernels/quantize_ref",
+                 "us_per_call": us,
+                 "derived": f"n={n} wire_bytes={n + 4*n//256} "
+                            f"compression_vs_bf16={2*n/(n+4*n//256):.2f}x"})
+    B, H, S, d = (1, 4, 1024, 64) if quick else (4, 16, 4096, 128)
+    qkv = [jax.random.normal(jax.random.fold_in(KEY, i), (B, H, S, d))
+           for i in range(3)]
+    fa = jax.jit(lambda a, b, c: ref.flash_attention_ref(a, b, c))
+    us = time_call(fa, *qkv)
+    flops = 4 * B * H * S * S * d
+    rows.append({"name": "kernels/flash_attention_ref",
+                 "us_per_call": us,
+                 "derived": f"BHSd={B}x{H}x{S}x{d} flops={flops:.2e} "
+                            f"tpu_time_at_197TFs_us={flops/197e12*1e6:.1f}"})
+    return rows

@@ -1,0 +1,75 @@
+"""Figure 2 + Figure 5 benchmark: MIA attack strength vs the number of
+aggregators A (FSA), vs compression retention p (DSC), and vs the size of
+a colluding coalition (Cor. D.2) — plus the matching MI bounds."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import KEY, mlp_problem, run_method
+from repro.core import masks as masks_lib
+from repro.core import privacy
+from repro.core.compressors import RandP
+from repro.core.fl import FLConfig
+
+
+def _mia_once(A: int, rounds: int, seed: int, compressor=None,
+              a_c: int = 1):
+    M = 8
+    data, init, loss_fn, _ = mlp_problem(jax.random.PRNGKey(seed),
+                                         K=4, S=2 * M)
+    x, y = data
+    y_can = jax.random.randint(jax.random.fold_in(KEY, seed + 3),
+                               y.shape, 0, 3)
+    x_tr, y_tr = x[:, :M], y_can[:, :M]
+    kw = dict(use_dsc=True, compressor=compressor) if compressor else {}
+    cfg = FLConfig(method="eris", K=4, A=A, rounds=rounds, lr=0.4,
+                   seed=seed, **kw)
+    run_obj, xs, views = run_method(cfg, (x_tr, y_tr), init, loss_fn,
+                                    collect=True)
+    assign = masks_lib.make_assignment(run_obj.n, A, "strided")
+    obs = sum(masks_lib.mask_for(assign, a) for a in range(a_c))
+    grad_fn = jax.grad(lambda xf, c: loss_fn(
+        run_obj.unravel(xf),
+        (c[:-1][None], c[-1][None].astype(jnp.int32))))
+    members = jnp.concatenate([x[0, :M], y_can[0, :M, None]], 1)
+    non = jnp.concatenate([x[0, M:], y_can[0, M:, None]], 1)
+    res = privacy.mia_audit(KEY, grad_fn, jnp.stack(xs),
+                            jnp.stack(views) * obs, obs, members, non)
+    return res["auc"]
+
+
+def _mia_for(A: int, rounds: int, compressor=None, a_c: int = 1,
+             n_seeds: int = 3):
+    import numpy as np
+    return float(np.mean([_mia_once(A, rounds, s, compressor, a_c)
+                          for s in range(n_seeds)]))
+
+
+def run(quick: bool = True):
+    rounds = 30 if quick else 60
+    rows = []
+    n_model = 339   # params of the standard MLP problem
+    # --- Fig. 2 left: vary A
+    for A in (1, 2, 4, 8):
+        auc = _mia_for(A, rounds)
+        bound = privacy.mi_bound(n_model, rounds, 1.0, A)
+        rows.append({"name": f"privacy/fig2_fsa/A={A}",
+                     "us_per_call": 0.0,
+                     "derived": f"mia_auc={auc:.3f} mi_bound={bound:.0f}"})
+    # --- Fig. 2 right: fix A, vary DSC retention p
+    for p in (1.0, 0.5, 0.2):
+        comp = None if p == 1.0 else RandP(p=p)
+        auc = _mia_for(4, rounds, compressor=comp)
+        bound = privacy.mi_bound(n_model, rounds, p, 4)
+        rows.append({"name": f"privacy/fig2_dsc/p={p}",
+                     "us_per_call": 0.0,
+                     "derived": f"mia_auc={auc:.3f} mi_bound={bound:.0f}"})
+    # --- Fig. 5: colluding aggregators (A=8 fixed)
+    for a_c in (1, 2, 4, 8):
+        auc = _mia_for(8, rounds, a_c=a_c)
+        bound = privacy.mi_bound(n_model, rounds, 1.0, 8, a_c=a_c)
+        rows.append({"name": f"privacy/fig5_collusion/Ac={a_c}",
+                     "us_per_call": 0.0,
+                     "derived": f"mia_auc={auc:.3f} mi_bound={bound:.0f}"})
+    return rows

@@ -1,0 +1,112 @@
+"""Roofline analysis (deliverable g): three terms per (arch x shape x mesh)
+from the dry-run artifacts.
+
+  compute term    = HLO_FLOPs(per dev)            / peak_FLOP/s
+  memory term     = HBM traffic proxy (per dev)   / HBM_bw
+  collective term = weighted collective bytes     / link_bw
+
+Collective weights (ring algorithms on a 1D slice of the mesh):
+  all-gather / reduce-scatter: (n-1)/n x payload crosses each link
+  all-reduce: 2x that;  all-to-all: payload/n;  collective-permute: 1x.
+HLO FLOPs / bytes are trip-count-aware (repro.launch.hlo_analysis).
+
+Also reports MODEL_FLOPS = 6 * N_active * tokens and the usefulness ratio
+MODEL_FLOPS / (devices * HLO_FLOPs) — catching remat/redundancy waste.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.launch.mesh import PEAK_FLOPS_BF16, HBM_BW, ICI_BW
+from repro.launch.shapes import SHAPES
+
+DRYRUN_DIR = Path("experiments/dryrun")
+
+
+def collective_seconds(coll: dict, devices: int) -> tuple[float, dict]:
+    """Convert per-kind payload bytes into link-seconds."""
+    n = devices
+    w = {"all-gather": (n - 1) / n, "reduce-scatter": (n - 1) / n,
+         "all-reduce": 2 * (n - 1) / n, "all-to-all": 1.0 / n,
+         "collective-permute": 1.0}
+    per_kind = {k: coll.get(k, 0.0) * w[k] / ICI_BW for k in w}
+    return sum(per_kind.values()), per_kind
+
+
+def model_flops(rec: dict) -> float:
+    shape = SHAPES[rec["shape"]]
+    if rec["kind"] == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * rec["active_params"] * tokens
+    if rec["kind"] == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * rec["active_params"] * tokens
+    # decode: one token per sequence
+    return 2.0 * rec["active_params"] * shape.global_batch
+
+
+def analyze_record(rec: dict) -> dict:
+    n = rec["devices"]
+    t_compute = rec["flops_per_device"] / PEAK_FLOPS_BF16
+    t_memory = rec["bytes_accessed_per_device"] / HBM_BW
+    t_coll, per_kind = collective_seconds(
+        rec["collective_bytes_per_device"], n)
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(rec)
+    useful = mf / (n * rec["flops_per_device"]) if rec["flops_per_device"] \
+        else float("nan")
+    bound = max(terms.values())
+    mfu_upper = (mf / n / PEAK_FLOPS_BF16) / bound if bound else float("nan")
+    return {**{k: rec[k] for k in ("arch", "shape", "mesh", "devices",
+                                   "kind", "tag")},
+            "terms_s": terms, "dominant": dominant,
+            "collective_per_kind_s": per_kind,
+            "model_flops": mf, "useful_ratio": useful,
+            "mfu_upper_bound": mfu_upper}
+
+
+def load_records(dryrun_dir=DRYRUN_DIR, tag=""):
+    recs = []
+    for f in sorted(Path(dryrun_dir).glob("*.json")):
+        r = json.loads(f.read_text())
+        if r.get("tag", "") == tag:
+            recs.append(r)
+    return recs
+
+
+def run(quick: bool = True):
+    rows = []
+    for rec in load_records():
+        a = analyze_record(rec)
+        rows.append({
+            "name": f"roofline/{a['arch']}/{a['shape']}/{a['mesh']}",
+            "us_per_call": a["terms_s"][a["dominant"]] * 1e6,
+            "derived": (f"dom={a['dominant']} "
+                        f"comp={a['terms_s']['compute']*1e3:.2f}ms "
+                        f"mem={a['terms_s']['memory']*1e3:.2f}ms "
+                        f"coll={a['terms_s']['collective']*1e3:.2f}ms "
+                        f"useful={a['useful_ratio']:.2f} "
+                        f"mfu_ub={a['mfu_upper_bound']:.3f}"),
+        })
+    return rows
+
+
+def markdown_table(tag="") -> str:
+    lines = ["| arch | shape | mesh | compute (ms) | memory (ms) | "
+             "collective (ms) | dominant | useful | MFU-UB |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for rec in load_records(tag=tag):
+        a = analyze_record(rec)
+        t = a["terms_s"]
+        lines.append(
+            f"| {a['arch']} | {a['shape']} | {a['mesh']} "
+            f"| {t['compute']*1e3:.2f} | {t['memory']*1e3:.2f} "
+            f"| {t['collective']*1e3:.2f} | **{a['dominant']}** "
+            f"| {a['useful_ratio']:.2f} | {a['mfu_upper_bound']:.3f} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(markdown_table())

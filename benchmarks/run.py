@@ -1,0 +1,57 @@
+"""Benchmark driver — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  ``--full`` runs the slower
+settings; default is the quick profile.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+MODULES = [
+    ("equivalence", "Thm B.1: FSA == FedAvg + aggregation cost"),
+    ("convergence", "Thm 3.2 / Table 1: loss & accuracy per method"),
+    ("utility_privacy", "Table 1: accuracy vs MIA leakage per method"),
+    ("privacy_curves", "Fig. 2 + Fig. 5: leakage vs A, p, collusion"),
+    ("reconstruction", "Fig. 12 / Table 7: DLG inversion vs exposure"),
+    ("scalability", "Table 2 / F.2: upload + distribution time model"),
+    ("robustness", "F.5: aggregator dropout + link failures"),
+    ("pareto", "Fig. 4 / F.10: utility-privacy Pareto analysis"),
+    ("kernels_bench", "kernel reference timings + TPU expectations"),
+    ("roofline", "dry-run roofline terms per (arch x shape x mesh)"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    quick = not args.full
+    only = {m for m in args.only.split(",") if m}
+    print("name,us_per_call,derived")
+    failures = []
+    for mod_name, desc in MODULES:
+        if only and mod_name not in only:
+            continue
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
+            rows = mod.run(quick=quick)
+            for r in rows:
+                print(f"{r['name']},{r['us_per_call']:.1f},"
+                      f"\"{r['derived']}\"", flush=True)
+        except Exception as e:  # keep the suite running
+            failures.append((mod_name, repr(e)))
+            print(f"{mod_name}/ERROR,0,\"{e!r}\"", flush=True)
+        print(f"# {mod_name} ({desc}) took {time.time()-t0:.1f}s",
+              file=sys.stderr, flush=True)
+    if failures:
+        print(f"# FAILURES: {failures}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Table 2 / Appendix F.2 benchmark: per-client upload and minimum
+distribution time per round — the paper's analytic model (Eqs. 52-55)
+instantiated for our architectures, plus measured compressed payloads.
+
+Rates: homogeneous 20 MB/s up/down (Table 2's setting)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import KEY
+from repro.core.compressors import RandP
+from repro.configs import get_config
+from repro.models.transformer import param_count
+
+RATE = 20e6                      # bytes/s
+
+
+def d_fedavg(K: int, b: float) -> float:
+    """Eq. 52 with homogeneous rates."""
+    return max(K * b / RATE, b / RATE) + max(K * b / RATE, b / RATE)
+
+
+def d_eris(K: int, A: int, b_up: float, b_down: float) -> float:
+    """Eq. 53 with homogeneous rates."""
+    up = max((K - 1) * b_up / (A * RATE), b_up / RATE)
+    down = max((K - 1) * b_down / (A * RATE), b_down / RATE)
+    return up + down
+
+
+def d_ako(b: float) -> float:
+    return max(b / RATE, b / RATE)                      # Eq. 54
+
+
+def d_shatter(K: int, b: float, r: int = 4) -> float:   # Eq. 55
+    return max(b / RATE, r * b / RATE, r * b / (K * RATE))
+
+
+def run(quick: bool = True):
+    rows = []
+    K = 50
+    for arch in ("eris-gptneo-1.3b", "qwen2-0.5b", "xlstm-350m"):
+        cfg = get_config(arch)
+        n = param_count(cfg)
+        b = 4.0 * n                       # fp32 update, paper convention
+        # measured DSC payload (rand-p wire format, p=0.05)
+        comp = RandP(p=0.05)
+        b_dsc = float(comp.wire_bits(n)) / 8.0
+        cases = {
+            "fedavg": (b, d_fedavg(K, b)),
+            "shatter": (b, d_shatter(K, b)),
+            "ako": (b, d_ako(b)),
+            "priprune_p0.1": (0.9 * b, d_fedavg(K, 0.9 * b) * 0.95),
+            "soteriafl_5pct": (0.05 * b,
+                               max(K * 0.05 * b / RATE, 0.05 * b / RATE)
+                               + max(K * b / RATE, b / RATE)),
+            "eris_A2": (b, d_eris(K, 2, b, b)),
+            "eris_A50": (b, d_eris(K, 50, b, b)),
+            "eris_dsc_A50": (b_dsc, d_eris(K, 50, b_dsc, b)),
+        }
+        base = cases["fedavg"][1]
+        for name, (upload, dist) in cases.items():
+            rows.append({
+                "name": f"scalability/{arch}/{name}",
+                "us_per_call": dist * 1e6,
+                "derived": (f"upload_MB={upload/1e6:.2f} "
+                            f"dist_s={dist:.2f} "
+                            f"speedup_vs_fedavg={base/dist:.1f}x"),
+            })
+    return rows

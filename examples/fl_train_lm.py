@@ -1,0 +1,79 @@
+"""End-to-end driver: federated training of a transformer LM with ERIS.
+
+The full paper pipeline on a real model: K clients hold disjoint token
+streams; every round each client computes an update on its own data, DSC
+shift-compresses it, FSA shards it across A aggregators; the reassembled
+model is identical to centralized FedAvg.  Runs a reduced-family config
+(selectable with --arch) on CPU, a few hundred rounds, with checkpointing
+and perplexity eval.
+
+    PYTHONPATH=src python examples/fl_train_lm.py --arch qwen2-0.5b \
+        --rounds 200 [--dsc] [--A 8]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import save
+from repro.configs import get_config
+from repro.core.compressors import RandP
+from repro.core.fl import FLConfig, FLRun
+from repro.data import lm_token_batches
+from repro.models import transformer as tr
+
+KEY = jax.random.PRNGKey(0)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--rounds", type=int, default=200)
+    ap.add_argument("--K", type=int, default=4)
+    ap.add_argument("--A", type=int, default=8)
+    ap.add_argument("--dsc", action="store_true")
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--lr", type=float, default=0.1)
+    ap.add_argument("--ckpt", default="/tmp/eris_lm.msgpack")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).smoke()      # reduced same-family variant
+    params0 = tr.init_params(KEY, cfg)
+    n_params = sum(int(jnp.size(p)) for p in jax.tree.leaves(params0))
+    print(f"arch={cfg.name} family={cfg.family} params={n_params/1e6:.2f}M "
+          f"K={args.K} A={args.A} dsc={args.dsc}")
+
+    # disjoint client token streams
+    toks = lm_token_batches(jax.random.fold_in(KEY, 1), args.K, args.batch,
+                            args.seq, cfg.vocab)          # (K, B, S)
+    eval_toks = lm_token_batches(jax.random.fold_in(KEY, 2), 1, 8,
+                                 args.seq, cfg.vocab)[0]
+
+    def loss_fn(params, batch):
+        return tr.loss_fn(params, cfg, {"tokens": batch})
+
+    fl_cfg = FLConfig(method="eris", K=args.K, A=args.A,
+                      rounds=args.rounds, lr=args.lr,
+                      use_dsc=args.dsc,
+                      compressor=RandP(p=0.25) if args.dsc else
+                      RandP(p=1.0))
+    run = FLRun(fl_cfg, params0, loss_fn)
+    t0 = time.time()
+    for t in range(args.rounds):
+        run.step(toks)
+        if t % 20 == 0 or t == args.rounds - 1:
+            ppl = float(jnp.exp(loss_fn(run.params(), eval_toks)))
+            print(f"round {t:4d}  eval_ppl={ppl:9.2f}  "
+                  f"({time.time()-t0:.0f}s)", flush=True)
+    save(args.ckpt, run.params())
+    print(f"saved checkpoint to {args.ckpt}")
+    ppl0 = float(jnp.exp(loss_fn(params0, eval_toks)))
+    ppl1 = float(jnp.exp(loss_fn(run.params(), eval_toks)))
+    print(f"perplexity: init={ppl0:.1f} -> final={ppl1:.1f} "
+          f"(vocab={cfg.vocab}, structured-token task)")
+
+
+if __name__ == "__main__":
+    main()

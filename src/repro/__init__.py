@@ -1,0 +1,2 @@
+"""repro: production-grade JAX reproduction of ERIS (FSA + DSC serverless FL)."""
+__version__ = "1.0.0"

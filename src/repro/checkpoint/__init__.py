@@ -1,0 +1,1 @@
+from repro.checkpoint.msgpack_ckpt import save, restore  # noqa: F401

@@ -1,0 +1,45 @@
+"""Minimal msgpack checkpointing for pytrees of arrays.
+
+Stores dtype/shape + raw bytes per leaf with the flattened tree path as
+key; restores onto a target structure (shape/dtype checked).  Enough for
+the FL simulator and the examples; a real deployment would swap in
+Orbax/tensorstore behind the same two calls.
+"""
+from __future__ import annotations
+
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _key(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                    for p in path)
+
+
+def save(path: str | Path, tree) -> None:
+    leaves = {}
+    for p, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        arr = np.asarray(leaf)
+        leaves[_key(p)] = {"dtype": str(arr.dtype),
+                           "shape": list(arr.shape),
+                           "data": arr.tobytes()}
+    Path(path).write_bytes(msgpack.packb(leaves))
+
+
+def restore(path: str | Path, target):
+    raw = msgpack.unpackb(Path(path).read_bytes())
+    paths, treedef = jax.tree_util.tree_flatten_with_path(target)
+    out = []
+    for p, leaf in paths:
+        rec = raw[_key(p)]
+        arr = np.frombuffer(rec["data"], dtype=rec["dtype"]).reshape(
+            rec["shape"])
+        if tuple(arr.shape) != tuple(np.shape(leaf)):
+            raise ValueError(f"shape mismatch at {_key(p)}: "
+                             f"{arr.shape} vs {np.shape(leaf)}")
+        out.append(jnp.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, out)

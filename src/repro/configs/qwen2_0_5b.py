@@ -1,0 +1,9 @@
+"""Qwen2-0.5B: dense, GQA kv=2, QKV bias, tied embeddings.
+[arXiv:2407.10671]"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-0.5b", family="dense",
+    n_layers=24, d_model=896, n_heads=14, n_kv_heads=2, d_ff=4864,
+    vocab=151936, qkv_bias=True, tie_embeddings=True,
+    source="arXiv:2407.10671")

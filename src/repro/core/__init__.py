@@ -1,0 +1,4 @@
+"""ERIS core: Federated Shard Aggregation + Distributed Shifted Compression."""
+from repro.core import (baselines, compressors, dsc, eris,  # noqa: F401
+                        error_feedback, fl, fsa, masks, privacy,
+                        secure_agg, server_opt)

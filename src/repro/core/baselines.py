@@ -1,0 +1,117 @@
+"""Baseline FL methods the paper compares against (Section 4.1).
+
+All baselines share the ERIS engine's conventions: flat model vector x,
+client gradients (K, n) from a vmapped grad_fn, one update per round.
+
+* FedAvg           — McMahan et al. 2017 (no defense, no compression)
+* FedAvgLDP        — per-client clipping + Gaussian noise (LDP-FL style)
+* SoteriaFL        — centralized shifted compression + LDP noise (Li et al.
+                     2022); == ERIS DSC with A=1 plus DP perturbation
+* PriPrune         — withhold the top-|g| fraction of coordinates
+* ShatterLite      — chunked partial exchange over random r-subsets
+                     (neighborhood-only; deviates from FedAvg on purpose)
+* MinLeakage       — FedAvg iterates, but the adversary sees only the final
+                     model (idealized lower bound; relevant to privacy only)
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dsc as dsc_lib
+from repro.core.compressors import Compressor, Identity
+
+
+def gaussian_sigma(eps: float, delta: float, clip: float) -> float:
+    """Classic Gaussian-mechanism calibration sigma = C sqrt(2 ln(1.25/d))/eps."""
+    return clip * math.sqrt(2.0 * math.log(1.25 / delta)) / eps
+
+
+def clip_by_norm(g: jax.Array, clip: float) -> jax.Array:
+    nrm = jnp.linalg.norm(g)
+    return g * jnp.minimum(1.0, clip / jnp.maximum(nrm, 1e-12))
+
+
+# ---------------------------------------------------------------- FedAvg
+def fedavg_round(x, grads, lr, weights=None):
+    K = grads.shape[0]
+    w = jnp.full((K,), 1.0 / K) if weights is None else weights / weights.sum()
+    return x - lr * jnp.einsum("k,kn->n", w, grads)
+
+
+# ----------------------------------------------------------- FedAvg-LDP
+@dataclasses.dataclass(frozen=True)
+class LDPConfig:
+    eps: float = 10.0
+    delta: float = 1e-5
+    clip: float = 1.0
+
+
+def ldp_perturb(key, grads: jax.Array, cfg: LDPConfig) -> jax.Array:
+    sigma = gaussian_sigma(cfg.eps, cfg.delta, cfg.clip)
+    clipped = jax.vmap(lambda g: clip_by_norm(g, cfg.clip))(grads)
+    noise = sigma * jax.random.normal(key, grads.shape)
+    return clipped + noise
+
+
+def fedavg_ldp_round(key, x, grads, lr, cfg: LDPConfig):
+    return fedavg_round(x, ldp_perturb(key, grads, cfg), lr)
+
+
+# ------------------------------------------------------------ SoteriaFL
+class SoteriaState(NamedTuple):
+    dsc: dsc_lib.DSCState
+
+
+def soteriafl_round(key, x, grads, lr, state: SoteriaState,
+                    compressor: Compressor, gamma: float,
+                    ldp: LDPConfig | None = None):
+    """Centralized shifted compression (+ optional LDP noise pre-compression)."""
+    k_noise, k_comp = jax.random.split(key)
+    if ldp is not None:
+        grads = ldp_perturb(k_noise, grads, ldp)
+    v, s_clients = dsc_lib.client_compress(state.dsc, grads, compressor,
+                                           gamma, k_comp)
+    v_global, s_agg = dsc_lib.aggregate(state.dsc, v, gamma)
+    return x - lr * v_global, SoteriaState(dsc_lib.DSCState(s_clients, s_agg))
+
+
+# ------------------------------------------------------------- PriPrune
+def priprune_round(x, grads, lr, prune_rate: float):
+    """Withhold the most informative (largest-magnitude) prune_rate fraction
+    of each client update before transmission."""
+    n = grads.shape[-1]
+    k = max(1, int(round(prune_rate * n)))
+
+    def prune(g):
+        thresh = jax.lax.top_k(jnp.abs(g), k)[0][-1]
+        return jnp.where(jnp.abs(g) >= thresh, 0.0, g)
+
+    return fedavg_round(x, jax.vmap(prune)(grads), lr)
+
+
+# ---------------------------------------------------------- ShatterLite
+def shatter_round(key, x, grads, lr, n_chunks: int, r: int):
+    """Chunked partial gradient exchange: coordinates are split into
+    n_chunks contiguous chunks; each chunk is averaged over a random
+    r-subset of the K clients (gossip-neighborhood approximation).  This
+    intentionally deviates from full averaging, matching the utility drop
+    the paper reports for Shatter when training from scratch."""
+    K, n = grads.shape
+    chunk_id = jnp.minimum(jnp.arange(n) * n_chunks // n, n_chunks - 1)
+    # random r-subset per chunk
+    scores = jax.random.uniform(key, (n_chunks, K))
+    thresh = jax.lax.top_k(scores, r)[0][:, -1:]
+    member = (scores >= thresh).astype(jnp.float32)       # (n_chunks, K)
+    member = member / jnp.maximum(member.sum(1, keepdims=True), 1.0)
+    w_per_coord = member[chunk_id]                        # (n, K)
+    update = jnp.einsum("nk,kn->n", w_per_coord, grads)
+    return x - lr * update
+
+
+# ---------------------------------------------------------- MinLeakage
+min_leakage_round = fedavg_round  # identical iterates; differs in adversary view

@@ -1,0 +1,177 @@
+"""Unbiased omega-compression operators (Definition 3.1 of the paper).
+
+A randomized map C: R^n -> R^n is an omega-compressor if
+    E[C(x)] = x   and   E[||C(x) - x||^2] <= omega * ||x||^2.
+
+All compressors operate on flat f32 vectors.  Each returns the compressed
+vector *densely represented* (zeros at dropped coordinates); the number of
+coordinates/bits actually transmitted on a wire is reported by
+``wire_bits`` so scalability benchmarks can account payloads exactly, as
+the paper does in Table 2 / Appendix F.2.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Compressor:
+    """Base class.  Subclasses implement __call__(key, x) -> x_hat."""
+
+    name: str = "identity"
+
+    def __call__(self, key: jax.Array, x: jax.Array) -> jax.Array:
+        del key
+        return x
+
+    def omega(self, n: int) -> float:
+        """Variance parameter of Definition 3.1."""
+        del n
+        return 0.0
+
+    def retention(self, n: int) -> float:
+        """Expected fraction of coordinates present in the output."""
+        del n
+        return 1.0
+
+    def wire_bits(self, n: int) -> float:
+        """Expected number of bits on the wire for an n-vector."""
+        return 32.0 * n
+
+    @property
+    def unbiased(self) -> bool:
+        return True
+
+
+@dataclasses.dataclass(frozen=True)
+class Identity(Compressor):
+    name: str = "identity"
+
+
+@dataclasses.dataclass(frozen=True)
+class RandP(Compressor):
+    """Random (Bernoulli) sparsification: keep each coordinate w.p. p,
+    scale kept coordinates by 1/p.  omega = (1-p)/p (paper, Sec. 3.2.2)."""
+
+    p: float = 0.1
+    name: str = "rand_p"
+
+    def __call__(self, key, x):
+        mask = jax.random.bernoulli(key, self.p, x.shape)
+        return jnp.where(mask, x / self.p, 0.0)
+
+    def omega(self, n):
+        return (1.0 - self.p) / self.p
+
+    def retention(self, n):
+        return self.p
+
+    def wire_bits(self, n):
+        # value + index per surviving coordinate
+        return self.p * n * (32.0 + jnp.ceil(jnp.log2(max(n, 2))))
+
+
+@dataclasses.dataclass(frozen=True)
+class RandK(Compressor):
+    """Random-k sparsification: keep exactly k uniformly chosen coordinates,
+    scale by n/k.  omega = n/k - 1."""
+
+    k: int = 128
+    name: str = "rand_k"
+
+    def __call__(self, key, x):
+        n = x.shape[-1]
+        # Gumbel top-k gives a uniform k-subset without a full permutation.
+        scores = jax.random.gumbel(key, (n,))
+        thresh = jax.lax.top_k(scores, self.k)[0][-1]
+        mask = scores >= thresh
+        return jnp.where(mask, x * (n / self.k), 0.0)
+
+    def omega(self, n):
+        return n / self.k - 1.0
+
+    def retention(self, n):
+        return self.k / n
+
+    def wire_bits(self, n):
+        return self.k * (32.0 + jnp.ceil(jnp.log2(max(n, 2))))
+
+
+@dataclasses.dataclass(frozen=True)
+class QSGD(Compressor):
+    """QSGD stochastic quantization (Alistarh et al. 2017) with s levels.
+
+    C(x) = ||x||_2 * sign(x_i) * xi_i where xi_i in {0, 1/s, ..., 1} is a
+    stochastic rounding of |x_i|/||x||_2.  Unbiased; omega <= min(n/s^2,
+    sqrt(n)/s).
+    """
+
+    s: int = 16
+    name: str = "qsgd"
+
+    def __call__(self, key, x):
+        norm = jnp.linalg.norm(x)
+        safe = jnp.where(norm > 0, norm, 1.0)
+        y = jnp.abs(x) / safe * self.s          # in [0, s]
+        low = jnp.floor(y)
+        prob = y - low
+        up = jax.random.bernoulli(key, prob, x.shape)
+        q = (low + up) / self.s
+        out = norm * jnp.sign(x) * q
+        return jnp.where(norm > 0, out, 0.0)
+
+    def omega(self, n):
+        return float(min(n / self.s**2, (n**0.5) / self.s))
+
+    def retention(self, n):
+        return 1.0  # all coordinates exposed (quantized)
+
+    def wire_bits(self, n):
+        import math
+        return 32.0 + n * (1 + math.ceil(math.log2(self.s + 1)))
+
+
+@dataclasses.dataclass(frozen=True)
+class TopK(Compressor):
+    """Top-k by magnitude.  BIASED (not an omega-compressor); included as a
+    baseline ingredient (PriPrune-style defenses, Table 7)."""
+
+    k: int = 128
+    name: str = "top_k"
+
+    def __call__(self, key, x):
+        del key
+        thresh = jax.lax.top_k(jnp.abs(x), self.k)[0][-1]
+        return jnp.where(jnp.abs(x) >= thresh, x, 0.0)
+
+    def omega(self, n):
+        return float("nan")
+
+    def retention(self, n):
+        return self.k / n
+
+    def wire_bits(self, n):
+        return self.k * (32.0 + jnp.ceil(jnp.log2(max(n, 2))))
+
+    @property
+    def unbiased(self) -> bool:
+        return False
+
+
+def get_compressor(name: str, n: Optional[int] = None, **kw) -> Compressor:
+    name = name.lower()
+    if name in ("identity", "none"):
+        return Identity()
+    if name == "rand_p":
+        return RandP(p=kw.get("p", 0.1))
+    if name == "rand_k":
+        return RandK(k=kw.get("k", max(1, (n or 1024) // 10)))
+    if name == "qsgd":
+        return QSGD(s=kw.get("s", 16))
+    if name == "top_k":
+        return TopK(k=kw.get("k", max(1, (n or 1024) // 10)))
+    raise ValueError(f"unknown compressor {name!r}")

@@ -1,0 +1,106 @@
+"""ERIS round engine — Algorithm 1 (FSA with optional DSC).
+
+The round step is a pure function over an ``ErisState`` and is jit- and
+scan-friendly.  Client gradients are produced by a user-supplied
+``grad_fn(x, client_batch) -> (n,)`` which is vmapped over clients.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dsc as dsc_lib
+from repro.core import fsa as fsa_lib
+from repro.core import masks as masks_lib
+from repro.core.compressors import Compressor, Identity
+
+
+class ErisState(NamedTuple):
+    x: jax.Array           # global model (n,)
+    dsc: dsc_lib.DSCState  # reference vectors (zeros when DSC disabled)
+    t: jax.Array           # round counter
+    key: jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class ErisConfig:
+    A: int = 4                      # number of client-side aggregators
+    lr: float = 0.1
+    compressor: Compressor = Identity()
+    gamma: Optional[float] = None   # None -> gamma*(omega) of Thm 3.2
+    mask_scheme: str = "strided"
+    fresh_masks: bool = False       # re-draw random masks each round (m^t)
+    use_dsc: bool = False
+
+    def gamma_value(self, n: int) -> float:
+        if self.gamma is not None:
+            return self.gamma
+        if not self.use_dsc:
+            return 0.0
+        return dsc_lib.gamma_star(self.compressor.omega(n))
+
+
+def init(key: jax.Array, x0: jax.Array, K: int) -> ErisState:
+    n = x0.shape[0]
+    return ErisState(x0, dsc_lib.init_state(K, n), jnp.zeros((), jnp.int32),
+                     key)
+
+
+def round_step(state: ErisState, cfg: ErisConfig,
+               grad_fn: Callable[[jax.Array, jax.Array], jax.Array],
+               client_batches, weights: jax.Array | None = None,
+               keep_views: bool = False):
+    """One ERIS round.  Returns (new_state, aux) where aux carries the
+    adversary-observable shard views when ``keep_views`` (privacy evals).
+    """
+    n = state.x.shape[0]
+    key, k_mask, k_comp = jax.random.split(state.key, 3)
+    assign = masks_lib.make_assignment(
+        n, cfg.A, "random" if cfg.fresh_masks else cfg.mask_scheme,
+        key=k_mask if cfg.fresh_masks else None)
+
+    # --- client-side: local stochastic gradients (Algorithm 1 line 3)
+    grads = jax.vmap(lambda b: grad_fn(state.x, b))(client_batches)  # (K, n)
+
+    gamma = cfg.gamma_value(n)
+    if cfg.use_dsc:
+        v, s_clients = dsc_lib.client_compress(
+            state.dsc, grads, cfg.compressor, gamma, k_comp)
+    else:
+        v, s_clients = grads, state.dsc.s_clients
+
+    # --- FSA partition + aggregator-side (lines 5-13)
+    out = fsa_lib.fsa_round_sharded(
+        jnp.zeros_like(state.x), v, assign, cfg.A, 1.0,
+        weights=weights, keep_views=keep_views) if keep_views else None
+    v_global, s_agg = dsc_lib.aggregate(
+        state.dsc._replace(s_agg=state.dsc.s_agg if cfg.use_dsc
+                           else jnp.zeros_like(state.dsc.s_agg)),
+        v, gamma, weights)
+    if not cfg.use_dsc:
+        s_agg = state.dsc.s_agg
+    x_new = state.x - cfg.lr * v_global
+
+    new_state = ErisState(x_new,
+                          dsc_lib.DSCState(s_clients, s_agg),
+                          state.t + 1, key)
+    aux = {"assign": assign, "transmitted": v,
+           "shard_views": out.shard_views if keep_views else None}
+    return new_state, aux
+
+
+def run(key: jax.Array, x0: jax.Array, cfg: ErisConfig, grad_fn,
+        client_batches_per_round, T: int, weights=None):
+    """Run T rounds with static per-round client batches
+    (client_batches_per_round has leading dims (T, K, ...))."""
+    state = init(key, x0, client_batches_per_round.shape[1])
+
+    def body(st, batches):
+        st, _ = round_step(st, cfg, grad_fn, batches, weights)
+        return st, st.x
+
+    state, xs = jax.lax.scan(body, state, client_batches_per_round)
+    return state, xs

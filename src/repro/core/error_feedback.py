@@ -1,0 +1,36 @@
+"""Error feedback (EF21-style) for BIASED compressors.
+
+The paper's DSC requires unbiased omega-compressors (Def. 3.1); top-k is
+biased and provably non-convergent alone.  Error feedback accumulates the
+compression residual e_k and transmits C(g_k + e_k), restoring
+convergence (Karimireddy et al. 2019).  This composes with FSA exactly
+like DSC does — it only changes the vector FSA shards — giving a
+beyond-paper third compression mode: {none, DSC(unbiased), EF(biased)}.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.compressors import Compressor
+
+
+class EFState(NamedTuple):
+    e: jax.Array     # (K, n) per-client residual memory
+
+
+def init_state(K: int, n: int) -> EFState:
+    return EFState(jnp.zeros((K, n)))
+
+
+def client_compress(state: EFState, grads: jax.Array,
+                    compressor: Compressor, key: jax.Array
+                    ) -> tuple[jax.Array, EFState]:
+    """v_k = C(g_k + e_k);  e_k <- g_k + e_k - v_k."""
+    K = grads.shape[0]
+    keys = jax.random.split(key, K)
+    target = grads + state.e
+    v = jax.vmap(lambda k, t: compressor(k, t))(keys, target)
+    return v, EFState(target - v)

@@ -1,0 +1,97 @@
+"""Federated Shard Aggregation (Section 3.2.1, Algorithm 1 without DSC).
+
+Two equivalent implementations are provided:
+
+* ``fsa_round_sharded`` — the literal protocol: per-aggregator masked
+  shards are materialized, aggregated independently, and reassembled.
+  This is the view an honest-but-curious aggregator has (used by the
+  privacy attacks) and the form used to *prove* Theorem B.1 in tests.
+* ``fsa_round`` — the algebraic shortcut: because masks are disjoint and
+  complete, the reassembled model equals the centralized FedAvg update.
+  This is what the production runtime lowers to (reduce-scatter +
+  all-gather over the client axis; see repro.launch.train).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import masks as masks_lib
+
+
+class FSAOutput(NamedTuple):
+    x_new: jax.Array          # reassembled global model (n,)
+    shard_views: jax.Array | None   # (A, K, n) what each aggregator saw
+
+
+def shard_update(v: jax.Array, assign: jax.Array, A: int) -> jax.Array:
+    """Partition one client update into A masked shards -> (A, n)."""
+    m = masks_lib.masks_stacked(assign, A)          # (A, n)
+    return m * v[None, :]
+
+
+def reassemble(x_shards: jax.Array, assign: jax.Array, A: int) -> jax.Array:
+    """x^{t+1} = sum_a m_(a) ⊙ x_(a)^{t+1}  (Algorithm 1 line 14)."""
+    m = masks_lib.masks_stacked(assign, A)
+    return (m * x_shards).sum(0)
+
+
+def fsa_round_sharded(x: jax.Array, client_updates: jax.Array,
+                      assign: jax.Array, A: int, lr: float,
+                      weights: jax.Array | None = None,
+                      keep_views: bool = True) -> FSAOutput:
+    """Literal Algorithm 1 (no DSC): shard, aggregate per-aggregator,
+    update each model segment, broadcast, reassemble.
+
+    client_updates: (K, n); weights: optional per-client sample weights S_k.
+    """
+    K, n = client_updates.shape
+    if weights is None:
+        weights = jnp.full((K,), 1.0 / K)
+    else:
+        weights = weights / weights.sum()
+    # each client shards its update: (K, A, n)
+    shards = jax.vmap(lambda v: shard_update(v, assign, A))(client_updates)
+    shard_views = jnp.swapaxes(shards, 0, 1)        # (A, K, n) adversary view
+    # aggregator a: v_(a) = sum_k w_k v_{k,(a)}   (Eq. 2, weighted form)
+    v_a = jnp.einsum("k,akn->an", weights, shard_views)
+    # each aggregator updates its model segment: x_(a)^{t+1} = x_(a) - lr v_(a)
+    m = masks_lib.masks_stacked(assign, A)
+    x_a = m * x[None, :] - lr * v_a
+    x_new = reassemble(x_a, assign, A)
+    return FSAOutput(x_new, shard_views if keep_views else None)
+
+
+def fsa_round(x: jax.Array, client_updates: jax.Array, lr: float,
+              weights: jax.Array | None = None) -> jax.Array:
+    """Algebraic form (Theorem B.1): identical iterates to FedAvg."""
+    K = client_updates.shape[0]
+    if weights is None:
+        weights = jnp.full((K,), 1.0 / K)
+    else:
+        weights = weights / weights.sum()
+    return x - lr * jnp.einsum("k,kn->n", weights, client_updates)
+
+
+def fsa_round_with_failures(x: jax.Array, client_updates: jax.Array,
+                            assign: jax.Array, A: int, lr: float,
+                            agg_alive: jax.Array,
+                            link_alive: jax.Array) -> jax.Array:
+    """Failure-injected round (Appendix F.5).
+
+    agg_alive: (A,) bool — dropped aggregators contribute no segment update
+    (their model shard stays at x_(a)^t for the round).
+    link_alive: (K, A) bool — a failed client->aggregator link drops that
+    client's shard; the aggregator renormalizes over received shards.
+    """
+    K, n = client_updates.shape
+    m = masks_lib.masks_stacked(assign, A)                 # (A, n)
+    shards = jnp.einsum("an,kn->akn", m, client_updates)   # (A, K, n)
+    w = link_alive.T.astype(jnp.float32)                   # (A, K)
+    cnt = jnp.maximum(w.sum(1, keepdims=True), 1.0)
+    v_a = jnp.einsum("ak,akn->an", w / cnt, shards)
+    v_a = v_a * agg_alive[:, None].astype(jnp.float32)
+    x_a = m * x[None, :] - lr * v_a
+    return reassemble(x_a, assign, A)

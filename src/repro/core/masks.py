@@ -1,0 +1,86 @@
+"""FSA shard masks (Section 3.2.1).
+
+A mask set {m_(a)}_{a=1..A} over R^n must be *disjoint*
+(m_a ⊙ m_a' = 0 for a != a') and *complete* (sum_a m_a = 1_n).  We store
+the set as a single integer *assignment vector* ``assign`` of shape (n,)
+with values in [0, A): coordinate i belongs to aggregator assign[i].  This
+is memory-proportional to n rather than A*n and makes disjointness and
+completeness true by construction.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def make_assignment(n: int, A: int, scheme: str = "strided",
+                    key: jax.Array | None = None) -> jax.Array:
+    """Build the shard assignment for n coordinates over A aggregators.
+
+    Schemes:
+      * ``strided``    — round robin (i mod A); balanced to within 1.
+      * ``contiguous`` — A contiguous coordinate blocks.
+      * ``random``     — random permutation of the strided assignment
+                         (fresh masks per round when a per-round key is
+                         supplied, matching the paper's m^t notation).
+    """
+    if A < 1:
+        raise ValueError("need A >= 1 aggregators")
+    base = jnp.arange(n, dtype=jnp.int32) % A
+    if scheme == "strided":
+        return base
+    if scheme == "contiguous":
+        return jnp.minimum(jnp.arange(n, dtype=jnp.int32) * A // max(n, 1),
+                           A - 1).astype(jnp.int32)
+    if scheme == "random":
+        if key is None:
+            raise ValueError("random scheme needs a PRNG key")
+        return jax.random.permutation(key, base)
+    raise ValueError(f"unknown scheme {scheme!r}")
+
+
+def mask_for(assign: jax.Array, a) -> jax.Array:
+    """Binary mask m_(a) for aggregator a (float32, shape (n,))."""
+    return (assign == a).astype(jnp.float32)
+
+
+def masks_stacked(assign: jax.Array, A: int) -> jax.Array:
+    """All masks as an (A, n) stack (small-n simulator/testing only)."""
+    return jax.nn.one_hot(assign, A, dtype=jnp.float32).T
+
+
+def check_disjoint_complete(assign: jax.Array, A: int) -> bool:
+    m = masks_stacked(assign, A)
+    disjoint = bool(jnp.all((m[:, None] * m[None]).sum(-1)
+                            * (1 - jnp.eye(A)) == 0))
+    complete = bool(jnp.all(m.sum(0) == 1))
+    return disjoint and complete
+
+
+def make_weighted_assignment(n: int, weights, key: jax.Array | None = None
+                             ) -> jax.Array:
+    """Heterogeneous shards (paper Sec. 5 'Limitations'): aggregator a
+    receives a fraction weights[a] of the coordinates — larger shards for
+    stronger aggregators, smaller for bandwidth-constrained ones.  Only
+    disjointness+completeness are required, so any weight vector works;
+    worst-case leakage becomes max_a weights[a] * n * C_max per round
+    instead of n/A."""
+    import numpy as np
+    w = np.asarray(weights, dtype=np.float64)
+    w = w / w.sum()
+    bounds = np.floor(np.cumsum(w) * n + 0.5).astype(np.int32)
+    assign = np.zeros(n, dtype=np.int32)
+    start = 0
+    for a, b in enumerate(bounds):
+        assign[start:b] = a
+        start = b
+    out = jnp.asarray(assign)
+    if key is not None:
+        out = jax.random.permutation(key, out)
+    return out
+
+
+def shard_sizes(assign: jax.Array, A: int) -> jax.Array:
+    """Number of coordinates per aggregator (worst-case leakage is driven
+    by the largest shard — Sec. 5 'Limitations')."""
+    return jnp.bincount(assign, length=A)

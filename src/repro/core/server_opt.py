@@ -1,0 +1,70 @@
+"""Server-side federated optimizers (paper Sec. 5 'Benefits': FSA supports
+any centralized FL algorithm — FedAdam, FedYogi, FedNova — because the
+sharded aggregation is exact and these optimizers are coordinate-wise).
+
+Each takes the aggregated pseudo-gradient v^t = mean_k v_k^t and produces
+the model delta; under FSA every aggregator runs the same update on its
+disjoint segment, which equals the centralized update (tested in
+tests/test_server_opt.py)."""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class ServerOpt(NamedTuple):
+    init: Callable[[jax.Array], Any]
+    update: Callable[[jax.Array, Any], tuple[jax.Array, Any]]
+    name: str
+
+
+def fedavg_server(lr: float) -> ServerOpt:
+    return ServerOpt(lambda x: (),
+                     lambda v, s: (-lr * v, s), "fedavg")
+
+
+def fedadam(lr: float, b1: float = 0.9, b2: float = 0.99,
+            tau: float = 1e-3) -> ServerOpt:
+    """Reddi et al. 2021, Alg. 2 (Adam variant)."""
+    def init(x):
+        return (jnp.zeros_like(x), jnp.zeros_like(x))
+
+    def update(v, state):
+        m, u = state
+        m = b1 * m + (1 - b1) * v
+        u = b2 * u + (1 - b2) * v * v
+        delta = -lr * m / (jnp.sqrt(u) + tau)
+        return delta, (m, u)
+
+    return ServerOpt(init, update, "fedadam")
+
+
+def fedyogi(lr: float, b1: float = 0.9, b2: float = 0.99,
+            tau: float = 1e-3) -> ServerOpt:
+    """Reddi et al. 2021, Alg. 2 (Yogi variant): sign-controlled second
+    moment, less drift under heterogeneity."""
+    def init(x):
+        return (jnp.zeros_like(x), jnp.zeros_like(x))
+
+    def update(v, state):
+        m, u = state
+        m = b1 * m + (1 - b1) * v
+        u = u - (1 - b2) * v * v * jnp.sign(u - v * v)
+        delta = -lr * m / (jnp.sqrt(jnp.abs(u)) + tau)
+        return delta, (m, u)
+
+    return ServerOpt(init, update, "fedyogi")
+
+
+def fednova_scale(local_steps: jax.Array) -> jax.Array:
+    """FedNova (Wang et al. 2020) normalization weights for heterogeneous
+    local-step counts tau_k: w_k ∝ 1 (objective-consistent re-weighting of
+    normalized updates v_k / tau_k); returns per-client scale 1/tau_k."""
+    return 1.0 / jnp.maximum(local_steps.astype(jnp.float32), 1.0)
+
+
+def get_server_opt(name: str, lr: float) -> ServerOpt:
+    return {"fedavg": fedavg_server, "fedadam": fedadam,
+            "fedyogi": fedyogi}[name](lr)

@@ -1,0 +1,2 @@
+from repro.data.synthetic import (federated_classification,  # noqa: F401
+                                  lm_token_batches, dirichlet_partition)

@@ -1,0 +1,77 @@
+"""Synthetic data pipeline: federated classification + LM token streams.
+
+The paper evaluates on MNIST/CIFAR/IMDB/CNN-DailyMail; at laptop scale we
+use controlled synthetic analogues (cluster-structured classification with
+Dirichlet label skew, Zipf token streams) so the convergence/privacy
+mechanics are exercised with reproducible statistics and no downloads.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def make_classification(key, n_samples: int, dim: int, n_classes: int,
+                        noise: float = 0.5):
+    """Gaussian cluster classification (linearly separable up to noise)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    centers = 2.0 * jax.random.normal(k1, (n_classes, dim))
+    labels = jax.random.randint(k2, (n_samples,), 0, n_classes)
+    x = centers[labels] + noise * jax.random.normal(k3, (n_samples, dim))
+    return x, labels
+
+
+def dirichlet_partition(key, labels: jax.Array, K: int, alpha: float,
+                        n_classes: int):
+    """Non-IID client partition: class proportions per client ~ Dir(alpha).
+    Returns an (n_samples,) client-assignment vector."""
+    props = jax.random.dirichlet(key, alpha * jnp.ones(K), (n_classes,))
+    cum = jnp.cumsum(props, axis=1)                    # (n_classes, K)
+    u = jax.random.uniform(jax.random.fold_in(key, 1), labels.shape)
+    return jnp.argmax(u[:, None] < cum[labels], axis=1)
+
+
+def federated_classification(key, K: int, samples_per_client: int,
+                             dim: int = 16, n_classes: int = 4,
+                             alpha: float | None = None,
+                             noise: float = 0.5):
+    """Returns (x, y) arrays of shape (K, S, dim) / (K, S) — IID when
+    alpha is None, Dirichlet(alpha) label-skewed otherwise."""
+    n = K * samples_per_client
+    kd, kp, ks = jax.random.split(key, 3)
+    x, y = make_classification(kd, 4 * n, dim, n_classes, noise)
+    if alpha is None:
+        idx = jax.random.permutation(kp, 4 * n)[:n]
+        xs, ys = x[idx], y[idx]
+        return (xs.reshape(K, samples_per_client, dim),
+                ys.reshape(K, samples_per_client))
+    owner = dirichlet_partition(kp, y, K, alpha, n_classes)
+    # rejection-style gather: for each client take its first S samples
+    out_x, out_y = [], []
+    owner_np, x_np, y_np = (jax.device_get(owner), jax.device_get(x),
+                            jax.device_get(y))
+    import numpy as np
+    for k in range(K):
+        idx = np.where(owner_np == k)[0]
+        if len(idx) < samples_per_client:   # top up from the global pool
+            extra = np.random.RandomState(k).choice(
+                len(y_np), samples_per_client - len(idx), replace=False)
+            idx = np.concatenate([idx, extra])
+        idx = idx[:samples_per_client]
+        out_x.append(x_np[idx]); out_y.append(y_np[idx])
+    return jnp.asarray(np.stack(out_x)), jnp.asarray(np.stack(out_y))
+
+
+def lm_token_batches(key, K: int, batch: int, seq_len: int, vocab: int,
+                     zipf_a: float = 1.2):
+    """Zipf-distributed next-token-predictable streams: token t+1 is a
+    deterministic mix of token t and noise, so a real LM signal exists."""
+    k1, k2 = jax.random.split(key)
+    ranks = jnp.arange(1, vocab + 1, dtype=jnp.float32)
+    probs = ranks ** (-zipf_a)
+    probs = probs / probs.sum()
+    base = jax.random.choice(k1, vocab, (K, batch, seq_len), p=probs)
+    # inject structure: with prob .5, next token = (prev*7+3) % vocab
+    det = (jnp.roll(base, 1, axis=-1) * 7 + 3) % vocab
+    coin = jax.random.bernoulli(k2, 0.5, base.shape)
+    return jnp.where(coin, det, base).astype(jnp.int32)

@@ -1,0 +1,3 @@
+"""Pallas TPU kernels for the compute hot spots (validated interpret=True
+on CPU): fused DSC update, int8 wire quantization, flash attention."""
+from repro.kernels import ops  # noqa: F401

@@ -1,0 +1,28 @@
+"""Shared kernel utilities: counter-based in-kernel PRNG.
+
+The DSC / QSGD kernels need per-element random bits *inside* the kernel
+(reading a pre-generated mask from HBM would double the memory traffic the
+fusion exists to avoid).  We use a counter-based hash (murmur3 finalizer)
+keyed on (seed, element index): identical in the Pallas kernel and the
+pure-jnp oracle, so correctness tests are exact."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def hash_u32(x):
+    """murmur3 fmix32 — high-quality 32-bit mixer (expressible in both
+    Pallas and plain jnp)."""
+    x = x.astype(jnp.uint32)
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x7FEB352D)
+    x = x ^ (x >> 15)
+    x = x * jnp.uint32(0x846CA68B)
+    x = x ^ (x >> 16)
+    return x
+
+
+def uniform_from_index(idx, seed):
+    """U(0,1) from a global element index and a uint32 seed."""
+    bits = hash_u32(idx.astype(jnp.uint32) ^ seed.astype(jnp.uint32))
+    return (bits >> 8).astype(jnp.float32) * jnp.float32(1.0 / (1 << 24))

@@ -1,0 +1,88 @@
+"""Pallas TPU kernel: blocked online-softmax (flash) causal attention.
+
+The transformer hot spot for prefill.  Grid = (batch*heads, q_blocks);
+each grid step streams K/V blocks through VMEM keeping running
+(max, sum, accumulator) — O(S) memory instead of O(S^2), MXU-aligned
+(BLOCK_Q x BLOCK_K x d matmuls with d a multiple of 128 ideally).
+
+Supports self-attention with Sq == Skv (prefill) and causal masking.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_Q = 128
+BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, *, block_q, block_k, sm_scale,
+            causal, seq_len):
+    qi = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32) * sm_scale       # (bq, d)
+    q_offset = qi * block_q
+    n_kb = seq_len // block_k
+
+    def body(kb, carry):
+        acc, m_prev, l_prev = carry
+        k = k_ref[0, pl.ds(kb * block_k, block_k), :].astype(jnp.float32)
+        v = v_ref[0, pl.ds(kb * block_k, block_k), :].astype(jnp.float32)
+        s = q @ k.T                                   # (bq, bk)
+        if causal:
+            qpos = q_offset + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0)
+            kpos = kb * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(kpos <= qpos, s, NEG_INF)
+        m_cur = jnp.maximum(m_prev, s.max(axis=1))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur[:, None])
+        l_cur = l_prev * alpha + p.sum(axis=1)
+        acc = acc * alpha[:, None] + p @ v
+        return acc, m_cur, l_cur
+
+    d = q.shape[-1]
+    acc0 = jnp.zeros((block_q, d), jnp.float32)
+    m0 = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    if causal:
+        # only k-blocks up to (and including) the diagonal contribute
+        n_iter = (q_offset + block_q + block_k - 1) // block_k
+    else:
+        n_iter = n_kb
+    acc, m, l = jax.lax.fori_loop(0, n_iter, body, (acc0, m0, l0))
+    o_ref[0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    block_q: int = BLOCK_Q, block_k: int = BLOCK_K,
+                    interpret: bool = False):
+    """q, k, v: (B, H, S, d).  Returns (B, H, S, d).  S % block == 0."""
+    B, H, S, d = q.shape
+    assert k.shape == v.shape == (B, H, S, d)
+    block_q = min(block_q, S)
+    block_k = min(block_k, S)
+    assert S % block_q == 0 and S % block_k == 0
+    sm_scale = d ** -0.5
+    qf = q.reshape(B * H, S, d)
+    kf = k.reshape(B * H, S, d)
+    vf = v.reshape(B * H, S, d)
+    grid = (B * H, S // block_q)
+    out = pl.pallas_call(
+        functools.partial(_kernel, block_q=block_q, block_k=block_k,
+                          sm_scale=sm_scale, causal=causal, seq_len=S),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, S, d), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, S, d), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, S, d), q.dtype),
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, H, S, d)

@@ -1,0 +1,38 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute in interpret mode — the
+kernel body runs op-by-op, validating the exact TPU program logic; on a
+real TPU the same call sites compile to Mosaic."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels import dsc_update as _dsc
+from repro.kernels import flash_attention as _fa
+from repro.kernels import quantize as _q
+
+_ON_TPU = jax.default_backend() == "tpu"
+_INTERPRET = not _ON_TPU
+
+
+@functools.partial(jax.jit, static_argnames=("p", "gamma"))
+def dsc_update(g, s, seed, *, p: float, gamma: float):
+    return _dsc.dsc_update(g, s, seed, p=p, gamma=gamma,
+                           interpret=_INTERPRET)
+
+
+@jax.jit
+def quantize(x, seed):
+    return _q.quantize(x, seed, interpret=_INTERPRET)
+
+
+@jax.jit
+def dequantize(q, scale):
+    return _q.dequantize(q, scale, interpret=_INTERPRET)
+
+
+@functools.partial(jax.jit, static_argnames=("causal",))
+def flash_attention(q, k, v, *, causal: bool = True):
+    return _fa.flash_attention(q, k, v, causal=causal, interpret=_INTERPRET)

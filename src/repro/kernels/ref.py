@@ -1,0 +1,69 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth the
+interpret-mode kernels are asserted allclose against)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import uniform_from_index
+
+
+# ------------------------------------------------------------- DSC update
+def dsc_update_ref(g, s, seed, p: float, gamma: float):
+    """Fused DSC client step (Algorithm 1 lines 4+7):
+        v = (g - s) * mask / p          mask ~ Bernoulli(p)
+        s' = s + gamma * v
+    g: any shape (update leaf); s: same shape float32; seed: uint32 scalar.
+    Returns (v, s')."""
+    n = g.size
+    idx = jnp.arange(n, dtype=jnp.uint32).reshape(g.shape)
+    u = uniform_from_index(idx, seed)
+    mask = u < p
+    diff = g.astype(jnp.float32) - s
+    v = jnp.where(mask, diff / p, 0.0)
+    return v.astype(g.dtype), s + gamma * v
+
+
+# --------------------------------------------------------- QSGD quantize
+def quantize_ref(x, seed, block: int = 256):
+    """Per-block stochastic int8 quantization (beyond-paper wire format).
+
+    x is flattened into blocks of ``block``; each block gets scale =
+    max|x| / 127 and values are stochastically rounded to int8.
+    Returns (q int8 [n], scales f32 [n_blocks]).  Unbiased."""
+    n = x.size
+    xf = x.reshape(-1).astype(jnp.float32)
+    pad = (-n) % block
+    xp = jnp.pad(xf, (0, pad))
+    xb = xp.reshape(-1, block)
+    scale = jnp.max(jnp.abs(xb), axis=1) / 127.0
+    safe = jnp.where(scale > 0, scale, 1.0)
+    y = xb / safe[:, None]
+    low = jnp.floor(y)
+    frac = y - low
+    idx = jnp.arange(xp.size, dtype=jnp.uint32).reshape(-1, block)
+    u = uniform_from_index(idx, seed)
+    q = low + (u < frac)
+    q = jnp.clip(q, -127, 127).astype(jnp.int8)
+    return q.reshape(-1)[: n + pad], scale
+
+
+def dequantize_ref(q, scale, block: int = 256):
+    qb = q.reshape(-1, block).astype(jnp.float32)
+    return (qb * scale[:, None]).reshape(-1)
+
+
+# -------------------------------------------------------- flash attention
+def flash_attention_ref(q, k, v, *, causal: bool = True):
+    """Naive attention oracle.  q: (B, H, Sq, d); k/v: (B, H, Skv, d)."""
+    d = q.shape[-1]
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32)
+    scores = scores * (d ** -0.5)
+    if causal:
+        Sq, Skv = q.shape[2], k.shape[2]
+        qpos = jnp.arange(Sq)[:, None] + (Skv - Sq)
+        mask = jnp.arange(Skv)[None, :] <= qpos
+        scores = jnp.where(mask, scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", w, v.astype(jnp.float32)
+                      ).astype(q.dtype)

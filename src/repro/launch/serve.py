@@ -1,0 +1,71 @@
+"""Distributed serve steps: prefill (full forward) + decode (one token).
+
+Decode shapes lower ``serve_step`` — ONE new token against a KV cache of
+``seq_len`` — per the assignment.  Params are in the *use* layout
+(tensor-parallel, replicated over client axes); caches shard the batch dim
+over client axes and kv-heads/state over 'model'.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.dist import sharding as sh
+from repro.launch import shapes as shp
+from repro.models import transformer as tr
+from repro.models.config import ModelConfig
+
+
+def make_decode_step(cfg: ModelConfig, mesh: Mesh,
+                     window: Optional[int] = None):
+    def serve_step(params, cache, token, pos):
+        logits, new_cache = tr.decode_step(params, cfg, cache, token, pos,
+                                           window=window)
+        return logits, new_cache
+    return serve_step
+
+
+def make_prefill_step(cfg: ModelConfig, mesh: Mesh):
+    def prefill_step(params, batch):
+        logits, caches, _ = tr.forward(params, cfg, batch["tokens"],
+                                       batch.get("frontend_embeds"),
+                                       mode="prefill", remat=False)
+        # return only the last-position logits (next-token sampling) + cache
+        return logits[:, -1:], caches
+    return prefill_step
+
+
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(
+        functools.partial(tr.init_params, cfg=cfg), jax.random.PRNGKey(0))
+
+
+def lower_serve_step(cfg: ModelConfig, mesh: Mesh, shape_name: str):
+    """jit(...).lower() of the prefill or decode step for (cfg, shape)."""
+    shape = shp.SHAPES[shape_name]
+    params = abstract_params(cfg)
+    use = sh.param_shardings(cfg, mesh, "use")
+    rep = NamedSharding(mesh, P())
+    if shape.kind == "prefill":
+        step = make_prefill_step(cfg, mesh)
+        batch = shp.input_specs(cfg, shape_name)
+        batch_sh = sh.batch_shardings(cfg, mesh, batch)
+        jitted = jax.jit(step, in_shardings=(use, batch_sh))
+        with mesh:
+            return jitted.lower(params, batch)
+    window = shp.decode_window(cfg, shape)
+    step = make_decode_step(cfg, mesh, window)
+    specs = shp.input_specs(cfg, shape_name)
+    cache_sh = sh.cache_shardings(cfg, mesh, specs["cache"])
+    tok_sh = sh.batch_shardings(cfg, mesh, specs["token"])
+    jitted = jax.jit(step,
+                     in_shardings=(use, cache_sh, tok_sh, rep),
+                     out_shardings=(tok_sh, cache_sh),
+                     donate_argnums=(1,))
+    with mesh:
+        return jitted.lower(params, specs["cache"], specs["token"],
+                            specs["pos"])

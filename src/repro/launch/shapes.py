@@ -1,0 +1,72 @@
+"""Assigned input shapes + ShapeDtypeStruct input specs (no allocation).
+
+  train_4k       seq_len=  4,096  global_batch= 256  (training)
+  prefill_32k    seq_len= 32,768  global_batch=  32  (inference-prefill)
+  decode_32k     seq_len= 32,768  global_batch= 128  (inference-decode)
+  long_500k      seq_len=524,288  global_batch=   1  (long-context-decode)
+
+Decode shapes lower ``serve_step`` (ONE new token + KV cache of seq_len).
+``long_500k`` uses the sub-quadratic path: recurrent state for ssm/hybrid,
+sliding-window (8192) ring cache for full-attention archs (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as tr
+from repro.models.config import ModelConfig
+
+LONG_WINDOW = 8192
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}
+
+
+def decode_window(cfg: ModelConfig, shape: InputShape) -> int | None:
+    """Sliding-window policy: long_500k uses a ring cache for attention
+    archs; ssm archs have no KV cache at all."""
+    if shape.name == "long_500k" and cfg.family != "ssm":
+        return LONG_WINDOW
+    return None
+
+
+def token_spec(cfg: ModelConfig, batch: int, seq: int):
+    n_pre = cfg.n_frontend_tokens if cfg.frontend == "vlm" else 0
+    spec = {"tokens": jax.ShapeDtypeStruct((batch, seq - n_pre), jnp.int32)}
+    if cfg.frontend == "vlm":
+        spec["frontend_embeds"] = jax.ShapeDtypeStruct(
+            (batch, cfg.n_frontend_tokens, cfg.d_frontend), jnp.float16)
+    return spec
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of the step that
+    this (arch, shape) pair lowers — weak-type-correct, shardable, no
+    device allocation."""
+    shape = SHAPES[shape_name]
+    if shape.kind in ("train", "prefill"):
+        return token_spec(cfg, shape.global_batch, shape.seq_len)
+    # decode: one token + cache
+    window = decode_window(cfg, shape)
+    cache = jax.eval_shape(
+        lambda: tr.init_cache(cfg, shape.global_batch, shape.seq_len,
+                              window=window, dtype=jnp.float16))
+    return {"token": jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32),
+            "cache": cache}

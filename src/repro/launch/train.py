@@ -1,0 +1,301 @@
+"""Distributed train step: FSA expressed as explicit TPU collectives.
+
+The step is a ``shard_map`` over the client axes (``pod``/``data``) with
+the ``model`` axis left to GSPMD (tensor parallelism stays automatic):
+
+  1. *FSA broadcast* — stored parameters are sharded over the client axes
+     (each position = one aggregator's disjoint segment, Sec. 3.2.1); the
+     shard_map in_spec requests them replicated, so XLA inserts the
+     all-gather: x^t = sum_a m_(a) . x^t_(a)   (Algorithm 1 line 14).
+  2. *Local update* — each client-axis position computes gradients on its
+     own client group's batch shard (no cross-client reduction yet).
+  3. *DSC (optional)* — each client group shift-compresses its update
+     v_k = C(g_k - s_k), s_k += gamma v_k, before transmission.
+  4. *FSA aggregation* — ``psum_scatter`` over the client axes: each
+     aggregator receives and reduces ONLY its disjoint shard (this is the
+     reduce-scatter that replaces FedAvg's all-reduce; Theorem B.1 is the
+     algebraic identity all_reduce == all_gather . reduce_scatter).
+     Gradients cross the wire in ``grad_dtype`` (bf16 halves the payload).
+  5. *Shard-local optimizer* — aggregator a updates x_(a); optimizer state
+     lives sharded (never materialized globally, ZeRO-style).
+
+With ``fsa=False`` the baseline FedAvg schedule is emitted instead:
+``pmean`` (all-reduce) of gradients + replicated optimizer.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.dist import sharding as sh
+from repro.launch import shapes as shp
+from repro.models import transformer as tr
+from repro.models.config import ModelConfig
+from repro.optim import Optimizer, adam
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainSettings:
+    grad_dtype: str = "bfloat16"     # wire dtype for the FSA reduce-scatter
+    use_dsc: bool = False            # client-side shifted rand-p compression
+    dsc_p: float = 0.1
+    dsc_gamma: float = 0.5
+    remat: bool = True
+    fsa: bool = True                 # False => FedAvg all-reduce baseline
+
+
+def _client_size(mesh: Mesh) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    import numpy as np
+    return int(np.prod([sizes[a] for a in sh.client_axes(mesh)]))
+
+
+def make_train_step(cfg: ModelConfig, mesh: Mesh, opt: Optimizer,
+                    settings: TrainSettings = TrainSettings()):
+    """Returns (train_step, shardings dict)."""
+    ca = sh.client_axes(mesh)
+    caxis = ca if len(ca) > 1 else ca[0]
+    n_client = _client_size(mesh)
+    scatter_dims = sh.fsa_scatter_dims(cfg, mesh) if settings.fsa else None
+    store = sh.param_shardings(cfg, mesh, "store" if settings.fsa else "use")
+
+    def loss_fn(params, batch):
+        return tr.loss_fn(params, cfg, batch)
+
+    # ---------------- the manual (per-client-axis-position) body ----------
+    def fsa_body(params, opt_state, dsc_ref, batch, key):
+        # params arrive replicated over client axes (the all-gather /
+        # broadcast happened at the shard_map boundary); batch is this
+        # client group's shard.
+        loss_val, grads = jax.value_and_grad(loss_fn)(params, batch)
+        loss_val = jax.lax.pmean(loss_val, caxis)
+
+        if settings.use_dsc:
+            # client-side DSC on the local update, before transmission.
+            # dsc_ref leaves are client-stacked (n_client, *param_shape),
+            # so each client-axis position holds its OWN s_k (local (1,...)).
+            aidx = jax.lax.axis_index(caxis)
+            leaves, treedef = jax.tree.flatten(grads)
+            refs = jax.tree.leaves(dsc_ref)
+            vs, refs_new = [], []
+            for i, (g, s_stk) in enumerate(zip(leaves, refs)):
+                s = s_stk[0]
+                k = jax.random.fold_in(jax.random.fold_in(key, i), aidx)
+                mask = jax.random.bernoulli(k, settings.dsc_p, g.shape)
+                v = jnp.where(mask, (g.astype(s.dtype) - s) / settings.dsc_p,
+                              0.0)
+                vs.append(v.astype(g.dtype))
+                refs_new.append((s + settings.dsc_gamma * v)[None])
+            grads = jax.tree.unflatten(treedef, vs)
+            dsc_ref = jax.tree.unflatten(treedef, refs_new)
+
+        # --- FSA aggregation: reduce-scatter the wire-dtype update -------
+        def aggregate(g, dim):
+            g = g.astype(settings.grad_dtype)
+            if settings.fsa and dim >= 0:
+                g = jax.lax.psum_scatter(g, caxis, scatter_dimension=dim,
+                                         tiled=True)
+            else:
+                g = jax.lax.psum(g, caxis)
+            return g / n_client
+
+        if settings.fsa:
+            grads = jax.tree.map(aggregate, grads, scatter_dims)
+        else:
+            grads = jax.tree.map(lambda g: aggregate(g, -1), grads)
+
+        # --- shard-local optimizer on this aggregator's segment ----------
+        def my_shard(p, dim):
+            if not settings.fsa or dim < 0:
+                return p
+            size = p.shape[dim] // n_client
+            idx = jax.lax.axis_index(caxis) * size
+            return jax.lax.dynamic_slice_in_dim(p, idx, size, axis=dim)
+
+        params_shard = (jax.tree.map(my_shard, params, scatter_dims)
+                        if settings.fsa else params)
+        grads = jax.tree.map(lambda g, p: g.astype(p.dtype), grads,
+                             params_shard)
+        delta, opt_state = opt.update(grads, opt_state, params_shard)
+        params_shard = jax.tree.map(jnp.add, params_shard, delta)
+
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in jax.tree.leaves(grads)))
+        gnorm = jax.lax.psum(gnorm * gnorm, caxis) ** 0.5 \
+            if settings.fsa else gnorm
+        metrics = {"loss": loss_val.astype(jnp.float32), "grad_norm": gnorm}
+        return params_shard, opt_state, dsc_ref, metrics
+
+    # ------------------------- shard_map specs ---------------------------
+    def spec_of_store(leaf_dim):
+        if leaf_dim is None or leaf_dim < 0 or not settings.fsa:
+            return P()
+        parts = [None] * (leaf_dim + 1)
+        parts[leaf_dim] = caxis
+        return P(*parts)
+
+    params_abs = jax.eval_shape(
+        functools.partial(tr.init_params, cfg=cfg), jax.random.PRNGKey(0))
+    if settings.fsa:
+        param_specs = jax.tree.map(spec_of_store, scatter_dims)
+    else:
+        param_specs = jax.tree.map(lambda _: P(), params_abs)
+    opt_abs_local = jax.eval_shape(opt.init, params_abs)
+    # opt state mirrors params leaf-wise (positional; scalars replicated)
+    opt_specs = sh.mirror_state_specs(
+        params_abs,
+        jax.tree.leaves(param_specs, is_leaf=lambda x: isinstance(x, P)),
+        opt_abs_local, P())
+    # DSC refs are client-stacked on dim 0 -> shard dim 0 over client axes
+    dsc_specs = jax.tree.map(lambda _: P(caxis) if settings.use_dsc else P(),
+                             params_abs)
+
+    batch_spec_leaf = P(caxis)
+
+    def make_step():
+        def step(params_stored, opt_state, dsc_ref, batch, key):
+            in_specs = (jax.tree.map(lambda _: P(), params_abs),  # broadcast
+                        opt_specs, dsc_specs,
+                        jax.tree.map(lambda _: batch_spec_leaf, batch),
+                        P())
+            out_specs = (param_specs, opt_specs, dsc_specs,
+                         {"loss": P(), "grad_norm": P()})
+            fn = jax.shard_map(fsa_body, mesh=mesh,
+                               in_specs=in_specs, out_specs=out_specs,
+                               axis_names=set(ca), check_vma=False)
+            return fn(params_stored, opt_state, dsc_ref, batch, key)
+        return step
+
+    return make_step(), {"store": store,
+                         "use": sh.param_shardings(cfg, mesh, "use")}
+
+
+def abstract_train_state(cfg: ModelConfig, mesh: Mesh, opt: Optimizer,
+                         settings: TrainSettings = TrainSettings()):
+    """ShapeDtypeStructs of (params_stored, opt_state, dsc_ref).
+
+    With FSA, optimizer/DSC state are *shard-local* (1/n_client of each
+    FSA-sharded dim) — they are shard_map-internal layouts.
+    """
+    n_client = _client_size(mesh) if settings.fsa else 1
+    scatter_dims = sh.fsa_scatter_dims(cfg, mesh)
+    params = jax.eval_shape(
+        functools.partial(tr.init_params, cfg=cfg), jax.random.PRNGKey(0))
+
+    def shard_shape(p, dim):
+        if not settings.fsa or dim < 0:
+            return p
+        shape = list(p.shape)
+        shape[dim] //= n_client
+        return jax.ShapeDtypeStruct(tuple(shape), p.dtype)
+
+    params_shard = jax.tree.map(shard_shape, params, scatter_dims)
+    opt_state = jax.eval_shape(opt.init, params_shard)
+
+    # global (pre-shard_map) views: params stored globally have FULL shape
+    # with store sharding; opt/dsc state globally also full shape (their
+    # shard_map spec re-slices them)
+    opt_state_global = jax.eval_shape(opt.init, params)
+    if settings.use_dsc:
+        dsc_global = jax.tree.map(
+            lambda p: jax.ShapeDtypeStruct((n_client, *p.shape),
+                                           jnp.float32), params)
+    else:
+        dsc_global = jax.tree.map(
+            lambda p: jax.ShapeDtypeStruct((), jnp.float32), params)
+    return params, opt_state_global, dsc_global
+
+
+def lower_train_step(cfg: ModelConfig, mesh: Mesh,
+                     shape_name: str = "train_4k",
+                     settings: TrainSettings = TrainSettings(),
+                     opt: Optional[Optimizer] = None):
+    """jit(...).lower() of the train step for (cfg, mesh, shape)."""
+    opt = opt or adam(3e-4)
+    step, shardings = make_train_step(cfg, mesh, opt, settings)
+    params, opt_state, dsc_ref = abstract_train_state(cfg, mesh, opt,
+                                                      settings)
+    batch = shp.input_specs(cfg, shape_name)
+    batch_sh = sh.batch_shardings(cfg, mesh, batch)
+    store = shardings["store"]
+    opt_sh = sh.opt_state_shardings(cfg, mesh, opt, params)
+    rep = NamedSharding(mesh, P())
+    ca = sh.client_axes(mesh)
+    caxis = ca if len(ca) > 1 else ca[0]
+    dsc_sh = jax.tree.map(
+        lambda _: NamedSharding(mesh, P(caxis)) if settings.use_dsc else rep,
+        dsc_ref)
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    jitted = jax.jit(
+        step,
+        in_shardings=(store, opt_sh, dsc_sh, batch_sh, rep),
+        donate_argnums=(0, 1, 2))
+    with mesh:
+        return jitted.lower(params, opt_state, dsc_ref, batch, key)
+
+
+def main():  # pragma: no cover - thin CLI over the factories
+    """CLI: distributed FSA training on the host devices.
+
+        XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b \
+            --smoke --steps 20
+    """
+    import argparse
+    import time
+    from repro.configs import get_config
+    from repro.data import lm_token_batches
+    from repro.launch.mesh import make_host_mesh
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family variant (CPU-sized)")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-2)
+    ap.add_argument("--dsc", action="store_true")
+    ap.add_argument("--data-axis", type=int, default=None)
+    ap.add_argument("--model-axis", type=int, default=1)
+    args = ap.parse_args()
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.smoke()
+    mesh = make_host_mesh(data=args.data_axis, model=args.model_axis)
+    opt = adam(args.lr)
+    settings = TrainSettings(use_dsc=args.dsc, grad_dtype="float32")
+    step, shardings = make_train_step(cfg, mesh, opt, settings)
+    key = jax.random.PRNGKey(0)
+    n_client = _client_size(mesh)
+    with mesh:
+        params = jax.device_put(tr.init_params(key, cfg),
+                                shardings["store"])
+        opt_state = opt.init(params)
+        if args.dsc:
+            dsc_ref = jax.tree.map(
+                lambda p: jnp.zeros((n_client, *p.shape), jnp.float32),
+                params)
+            dsc_ref = jax.device_put(dsc_ref, jax.tree.map(
+                lambda _: NamedSharding(
+                    mesh, P(sh.client_axes(mesh)[0])), dsc_ref))
+        else:
+            dsc_ref = jax.tree.map(lambda p: jnp.zeros((), jnp.float32),
+                                   params)
+        toks = lm_token_batches(key, 1, args.batch, args.seq, cfg.vocab)[0]
+        batch = {"tokens": toks}
+        jstep = jax.jit(step)
+        t0 = time.time()
+        for i in range(args.steps):
+            params, opt_state, dsc_ref, m = jstep(
+                params, opt_state, dsc_ref, batch, jax.random.PRNGKey(i))
+            print(f"step {i:3d} loss={float(m['loss']):.4f} "
+                  f"({time.time()-t0:.1f}s)", flush=True)
+
+
+if __name__ == "__main__":
+    main()

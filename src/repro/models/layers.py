@@ -1,0 +1,112 @@
+"""Building blocks: RMSNorm, RoPE, chunked-causal GQA attention."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x, scale, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), -1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps).astype(x.dtype)) * scale
+
+
+def rope(x, positions, theta=10000.0):
+    """Rotary embedding.  x: (..., S, H, hd), positions: (..., S)."""
+    hd = x.shape[-1]
+    freqs = theta ** (-jnp.arange(0, hd, 2, dtype=jnp.float32) / hd)
+    angles = positions[..., None].astype(jnp.float32) * freqs   # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]                         # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., : hd // 2], x[..., hd // 2:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+def _attend_block(q, k, v, qpos, kpos, window, scores_f32=True):
+    """q: (B, Cq, KV, G, hd); k/v: (B, Skv, KV, hd); returns (B,Cq,KV,G,hd).
+    Causal + optional sliding-window masking by absolute positions.
+    ``scores_f32=False`` keeps the (chunk x S) score tensor in the compute
+    dtype — halves the dominant HBM traffic of materialized attention
+    (softmax max-subtraction keeps f16 stable); the Pallas flash kernel
+    removes the materialization entirely on real TPUs."""
+    scale = q.shape[-1] ** -0.5
+    sdt = jnp.float32 if scores_f32 else q.dtype
+    neg = jnp.asarray(-1e30 if scores_f32 else -6e4, sdt)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", q, k).astype(sdt) * \
+        jnp.asarray(scale, sdt)
+    mask = kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    scores = jnp.where(mask[None, None, None], scores, neg)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bkgqs,bskh->bqkgh", w, v)
+
+
+def causal_attention(q, k, v, *, q_offset=0, window: Optional[int] = None,
+                     chunk: int = 512, scores_f32: bool = True):
+    """Query-chunked causal GQA attention (memory-efficient; each chunk is
+    rematerialized in the backward pass).
+
+    q: (B, Sq, H, hd); k, v: (B, Skv, KV, hd); H = KV * G.
+    Query i has absolute position q_offset + i; key j has position j.
+    """
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, hd)
+    kpos = jnp.arange(k.shape[1])
+
+    if Sq <= chunk:
+        qpos = q_offset + jnp.arange(Sq)
+        out = _attend_block(qg, k, v, qpos, kpos, window, scores_f32)
+        return out.reshape(B, Sq, H, hd)
+
+    n_chunks = -(-Sq // chunk)
+    pad = n_chunks * chunk - Sq
+    if pad:
+        qg = jnp.pad(qg, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+    qc = qg.reshape(B, n_chunks, chunk, KV, G, hd).swapaxes(0, 1)
+
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def one_chunk(carry, inp):
+        ci, qi = inp
+        qpos = q_offset + ci * chunk + jnp.arange(chunk)
+        return carry, _attend_block(qi, k, v, qpos, kpos, window,
+                                    scores_f32)
+
+    _, outs = jax.lax.scan(one_chunk, (),
+                           (jnp.arange(n_chunks), qc))
+    out = outs.swapaxes(0, 1).reshape(B, n_chunks * chunk, KV, G, hd)
+    return out[:, :Sq].reshape(B, Sq, H, hd)
+
+
+def decode_attention(q, k_cache, v_cache, pos, *, window: Optional[int] = None):
+    """Single-token attention against a (possibly ring-buffered) KV cache.
+
+    q: (B, 1, H, hd); k_cache/v_cache: (B, S, KV, hd); pos: scalar int —
+    the absolute position of the new token.  With a sliding window the
+    cache is a ring buffer of size S=window holding absolute slots
+    j mod window; validity is pos-window < j <= pos.
+    """
+    B, S, KV, hd = k_cache.shape
+    H = q.shape[2]
+    G = H // KV
+    qg = q.reshape(B, 1, KV, G, hd)
+    scale = hd ** -0.5
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qg, k_cache)
+    scores = scores.astype(jnp.float32) * scale
+    slot = jnp.arange(S)
+    if window is None:
+        valid = slot <= pos
+    else:
+        # ring buffer: slot s holds the largest absolute position p <= pos
+        # with p % S == s; valid iff that position has been written
+        abs_pos = pos - (pos - slot) % S
+        valid = abs_pos >= 0
+    scores = jnp.where(valid[None, None, None, None], scores, -1e30)
+    w = jax.nn.softmax(scores, -1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", w, v_cache)
+    return out.reshape(B, 1, H, hd)

@@ -1,0 +1,71 @@
+"""Mixture-of-Experts FFN with grouped capacity-based dispatch.
+
+TPU-native formulation (Switch/MaxText style): tokens are reshaped into
+groups of ``group`` tokens; within each group the router's top-k choices
+are turned into a one-hot dispatch tensor (group, E, capacity) so the
+expert computation is three dense einsums with the expert dimension
+shardable over the 'model' mesh axis.  Tokens beyond an expert's capacity
+are dropped (standard capacity-factor semantics)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def moe_ffn(x, router_w, w_gate, w_up, w_down, *, top_k: int,
+            capacity_factor: float = 1.25, group: int = 256,
+            expert_shard_acts: bool = False):
+    """x: (B, S, D); router_w: (D, E); w_gate/w_up: (E, D, F);
+    w_down: (E, F, D).  Returns (B, S, D) plus aux losses dict."""
+    B, S, D = x.shape
+    E = router_w.shape[-1]
+    T = B * S
+    xt = x.reshape(T, D)
+    group = min(group, T)
+    n_groups = T // group
+    assert n_groups * group == T, (T, group)
+    xg = xt.reshape(n_groups, group, D)
+
+    logits = jnp.einsum("gtd,de->gte", xg, router_w).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, -1)
+    gate_vals, idx = jax.lax.top_k(probs, top_k)          # (g, t, k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    cap = max(1, int(capacity_factor * top_k * group / E))
+    # position of each (token, choice) within its expert's queue
+    onehot = jax.nn.one_hot(idx, E, dtype=jnp.int32)      # (g, t, k, e)
+    flat = onehot.reshape(n_groups, group * top_k, E)
+    pos = jnp.cumsum(flat, axis=1) - flat                 # (g, t*k, e)
+    pos = pos.reshape(n_groups, group, top_k, E)
+    within_cap = pos < cap
+    dispatch = (onehot * within_cap).astype(x.dtype)      # (g,t,k,e) 0/1
+    pos_oh = jax.nn.one_hot(jnp.clip(pos, 0, cap - 1), cap, dtype=x.dtype)
+    # (g, t, e, c): token t of group g goes to slot c of expert e
+    disp = jnp.einsum("gtke,gtkec->gtec", dispatch.astype(x.dtype), pos_oh)
+    comb = jnp.einsum("gtke,gtk,gtkec->gtec",
+                      dispatch.astype(jnp.float32),
+                      gate_vals, pos_oh.astype(jnp.float32)).astype(x.dtype)
+
+    xe = jnp.einsum("gtec,gtd->gecd", disp, xg)           # (g, E, cap, D)
+    if expert_shard_acts:
+        # keep dispatched tokens sharded by EXPERT over 'model' so each
+        # expert's FFN runs where its weights live (the collective becomes
+        # an all-to-all of tokens instead of an all-gather of weights)
+        from jax.sharding import PartitionSpec as _P
+        espec = _P(None, "model")
+        xe = jax.lax.with_sharding_constraint(xe, espec)
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, w_gate)) * \
+        jnp.einsum("gecd,edf->gecf", xe, w_up)
+    ye = jnp.einsum("gecf,efd->gecd", h, w_down)          # (g, E, cap, D)
+    if expert_shard_acts:
+        ye = jax.lax.with_sharding_constraint(ye, espec)
+    y = jnp.einsum("gtec,gecd->gtd", comb, ye)
+
+    # load-balance aux loss (Switch): E * sum_e f_e * p_e
+    density = onehot.astype(jnp.float32).sum(2).mean(1)   # (g, e) token frac
+    p_mean = probs.mean(1)
+    aux = {"load_balance": (E * (density * p_mean).sum(-1)).mean(),
+           "dropped_frac": 1.0 - (dispatch.sum((2, 3)) > 0)
+                                 .astype(jnp.float32).mean()}
+    return y.reshape(B, S, D), aux

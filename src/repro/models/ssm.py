@@ -1,0 +1,159 @@
+"""Recurrent sequence mixers: selective SSM (mamba-style, for hymba) and
+mLSTM (xLSTM family).
+
+Training/prefill use chunked parallel forms (memory-bounded, scan over
+time chunks with rematerialization); decode uses O(1)-per-token recurrent
+state.  Both are validated against naive step-recurrence oracles in
+tests/test_ssm.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+# ----------------------------------------------------------- selective SSM
+def ssm_scan(u, dt, B, C, A_log, D_skip, *, chunk: int = 128,
+             scan_f32: bool = True):
+    """Chunked selective state-space scan.
+
+    u: (Bt, T, Di) inputs; dt: (Bt, T, Di) positive step sizes;
+    B, C: (Bt, T, N) input/output maps; A_log: (Di, N) (A = -exp(A_log));
+    D_skip: (Di,).  h_t = exp(dt A) h_{t-1} + dt * B_t * u_t ;
+    y_t = C_t . h_t + D u_t.  Returns (y, h_final).
+    """
+    Bt, T, Di = u.shape
+    N = B.shape[-1]
+    A = -jnp.exp(A_log.astype(jnp.float32))                      # (Di, N)
+    chunk = min(chunk, T)
+    n_chunks = T // chunk
+    assert n_chunks * chunk == T, (T, chunk)
+
+    def reshape_c(x):
+        return x.reshape(Bt, n_chunks, chunk, *x.shape[2:]).swapaxes(0, 1)
+
+    uc, dtc, Bc, Cc = map(reshape_c, (u, dt, B, C))
+
+    el_dtype = jnp.float32 if scan_f32 else u.dtype
+
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def body(h, inp):
+        ui, dti, Bi, Ci = inp                                     # (Bt,c,...)
+        a = jnp.exp(dti.astype(jnp.float32)[..., None] * A)       # (Bt,c,Di,N)
+        b = (dti * ui).astype(jnp.float32)[..., None] * \
+            Bi.astype(jnp.float32)[..., None, :]                  # (Bt,c,Di,N)
+        a = a.astype(el_dtype)
+        b = b.astype(el_dtype)
+
+        def combine(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a2 * a1, a2 * b1 + b2
+
+        a_cum, b_scan = jax.lax.associative_scan(combine, (a, b), axis=1)
+        hseq = b_scan.astype(jnp.float32) + \
+            a_cum.astype(jnp.float32) * h[:, None]                # (Bt,c,Di,N)
+        y = jnp.einsum("bcdn,bcn->bcd", hseq, Ci.astype(jnp.float32))
+        y = y + D_skip.astype(jnp.float32) * ui.astype(jnp.float32)
+        return hseq[:, -1], y.astype(u.dtype)
+
+    h0 = jnp.zeros((Bt, Di, N), jnp.float32)
+    h_final, ys = jax.lax.scan(body, h0, (uc, dtc, Bc, Cc))
+    return ys.swapaxes(0, 1).reshape(Bt, T, Di), h_final
+
+
+def ssm_decode_step(h, u, dt, B, C, A_log, D_skip):
+    """One recurrent step.  u/dt: (Bt, Di); B/C: (Bt, N); h: (Bt, Di, N)."""
+    A = -jnp.exp(A_log.astype(jnp.float32))
+    a = jnp.exp(dt.astype(jnp.float32)[..., None] * A)
+    h_new = a * h + (dt * u).astype(jnp.float32)[..., None] * \
+        B.astype(jnp.float32)[:, None, :]
+    y = jnp.einsum("bdn,bn->bd", h_new, C.astype(jnp.float32))
+    y = y + D_skip.astype(jnp.float32) * u.astype(jnp.float32)
+    return h_new, y.astype(u.dtype)
+
+
+# ------------------------------------------------------------------- mLSTM
+def _mlstm_decay(i_pre, f_pre):
+    """Stabilized decay quantities.  i_pre/f_pre: (B, H, T) pre-activations.
+    Returns (b, m) with b_s = i_s - F_s (log-space key weight) and
+    m_t = F_t + cummax_s<=t(b_s) subsumed: we return F (cumulative log
+    forget) and b; weights are exp(b_s - cummax(b)_t) for s <= t."""
+    logf = jax.nn.log_sigmoid(f_pre.astype(jnp.float32))
+    F = jnp.cumsum(logf, axis=-1)                       # (B,H,T)
+    b = i_pre.astype(jnp.float32) - F
+    m = jax.lax.cummax(b, axis=b.ndim - 1)              # running max
+    return F, b, m
+
+
+def mlstm_parallel(q, k, v, i_pre, f_pre, *, chunk: int = 512,
+                   scores_f32: bool = True):
+    """Quadratic (attention-like) stabilized mLSTM forward.
+
+    q,k,v: (B, T, H, hd); i_pre, f_pre: (B, T, H).
+    Causal weights W_ts = exp(b_s - m_t) * (q_t . k_s)/sqrt(hd);
+    h_t = sum_s W_ts v_s / max(|sum_s exp(b_s - m_t) q_t.k_s/sqrt(hd)|, 1).
+    Query-chunked like attention; O(T^2) compute, O(T*chunk) memory.
+    """
+    B, T, H, hd = q.shape
+    i_t = jnp.swapaxes(i_pre, 1, 2)                     # (B,H,T)
+    f_t = jnp.swapaxes(f_pre, 1, 2)
+    _, b, m = _mlstm_decay(i_t, f_t)
+    scale = hd ** -0.5
+    kpos = jnp.arange(T)
+    chunk = min(chunk, T)
+    n_chunks = -(-T // chunk)
+    pad = n_chunks * chunk - T
+    qp = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else q
+    qc = qp.reshape(B, n_chunks, chunk, H, hd).swapaxes(0, 1)
+
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def one_chunk(carry, inp):
+        ci, qi = inp                                     # qi: (B,c,H,hd)
+        qpos = ci * chunk + jnp.arange(chunk)
+        m_q = m[..., jnp.clip(qpos, 0, T - 1)]           # (B,H,c)
+        logits = jnp.einsum("bqhd,bshd->bhqs", qi, k).astype(jnp.float32)
+        w = logits * scale * jnp.exp(b[:, :, None, :] - m_q[..., None])
+        causal = kpos[None, :] <= qpos[:, None]
+        w = jnp.where(causal[None, None], w, 0.0)
+        den = jnp.abs(w.sum(-1))                         # (B,H,c)
+        if not scores_f32:
+            # decay weights are stabilized to <= 1, safe in f16; the
+            # denominator above is still accumulated in f32
+            w = w.astype(v.dtype)
+        num = jnp.einsum("bhqs,bshd->bqhd", w,
+                         v.astype(w.dtype)).astype(jnp.float32)
+        h = num / jnp.maximum(den, 1.0)[..., None].swapaxes(1, 2)
+        return carry, h.astype(q.dtype)
+
+    _, outs = jax.lax.scan(one_chunk, (), (jnp.arange(n_chunks), qc))
+    out = outs.swapaxes(0, 1).reshape(B, n_chunks * chunk, H, hd)
+    return out[:, :T]
+
+
+def mlstm_decode_step(state, q, k, v, i_pre, f_pre):
+    """Recurrent mLSTM step.
+
+    state: dict(C: (B,H,hd,hd), n: (B,H,hd), m: (B,H));
+    q,k,v: (B,H,hd); i_pre,f_pre: (B,H).  Matches mlstm_parallel.
+    """
+    C, n, m = state["C"], state["n"], state["m"]
+    hd = q.shape[-1]
+    scale = hd ** -0.5
+    logf = jax.nn.log_sigmoid(f_pre.astype(jnp.float32))
+    i32 = i_pre.astype(jnp.float32)
+    m_new = jnp.maximum(logf + m, i32)
+    f_eff = jnp.exp(logf + m - m_new)                    # (B,H)
+    i_eff = jnp.exp(i32 - m_new)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    C_new = f_eff[..., None, None] * C + \
+        i_eff[..., None, None] * (kf[..., :, None] * vf[..., None, :])
+    n_new = f_eff[..., None] * n + i_eff[..., None] * kf
+    qf = q.astype(jnp.float32) * scale
+    num = jnp.einsum("bhd,bhde->bhe", qf, C_new)
+    den = jnp.abs(jnp.einsum("bhd,bhd->bh", qf, n_new))
+    h = num / jnp.maximum(den, 1.0)[..., None]
+    return {"C": C_new, "n": n_new, "m": m_new}, h.astype(q.dtype)

@@ -1,0 +1,388 @@
+"""Composable decoder: parameter spec / init / forward / loss / decode.
+
+All per-layer parameters are stacked along a leading L axis so the layer
+stack is a single ``jax.lax.scan`` (O(1) trace & HLO size regardless of
+depth — essential for the 512-device dry-run compiles).  Every block type
+(dense / moe / hybrid / ssm) shares this contract:
+
+    block(cfg, lp, x, mode, cache) -> (x, new_cache, aux)
+
+where lp is one layer's parameter slice and cache is that layer's decode
+state (None in train/prefill).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.config import ModelConfig
+
+
+# ============================================================ param spec
+def param_spec(cfg: ModelConfig) -> dict:
+    """Shapes of every parameter (single source of truth; init + counting
+    + sharding rules all derive from this)."""
+    D, V, Lyr = cfg.d_model, cfg.vocab, cfg.n_layers
+    F, Q, KV, hd, H = cfg.d_ff, cfg.q_dim, cfg.kv_dim, cfg.hd, cfg.n_heads
+    blk: dict[str, tuple] = {"ln1": (Lyr, D), "ln2": (Lyr, D)}
+    if cfg.family != "ssm":
+        blk.update(wq=(Lyr, D, Q), wk=(Lyr, D, KV), wv=(Lyr, D, KV),
+                   wo=(Lyr, Q, D))
+        if cfg.qkv_bias:
+            blk.update(bq=(Lyr, Q), bk=(Lyr, KV), bv=(Lyr, KV))
+        if cfg.qk_norm:
+            blk.update(q_norm=(Lyr, hd), k_norm=(Lyr, hd))
+    if cfg.family == "moe":
+        E = cfg.n_experts
+        blk.update(router=(Lyr, D, E), w_gate=(Lyr, E, D, F),
+                   w_up=(Lyr, E, D, F), w_down=(Lyr, E, F, D))
+    elif cfg.family == "ssm":
+        blk.update(xq=(Lyr, D, Q), xk=(Lyr, D, Q), xv=(Lyr, D, Q),
+                   xo=(Lyr, Q, D), w_i=(Lyr, D, H), w_f=(Lyr, D, H),
+                   b_i=(Lyr, H), b_f=(Lyr, H),
+                   p_up=(Lyr, D, 2 * D), p_gate=(Lyr, D, 2 * D),
+                   p_down=(Lyr, 2 * D, D))
+    elif cfg.family == "hybrid":
+        Di, N = D, cfg.ssm_state
+        blk.update(m_in=(Lyr, D, 2 * Di), m_dt=(Lyr, D, Di),
+                   m_bc=(Lyr, D, 2 * N), m_A=(Lyr, Di, N),
+                   m_D=(Lyr, Di), m_out=(Lyr, Di, D), m_ln=(Lyr, Di),
+                   w_gate=(Lyr, D, F), w_up=(Lyr, D, F), w_down=(Lyr, F, D))
+    else:                                   # dense / audio / vlm
+        blk.update(w_gate=(Lyr, D, F), w_up=(Lyr, D, F), w_down=(Lyr, F, D))
+    spec = {"embed": (V, D), "ln_f": (D,), "blocks": blk}
+    if not cfg.tie_embeddings:
+        spec["lm_head"] = (D, V)
+    if cfg.frontend == "vlm":
+        spec["proj_in"] = (cfg.d_frontend, D)
+    return spec
+
+
+def param_count(cfg: ModelConfig) -> int:
+    import numpy as np
+    spec = param_spec(cfg)
+    total = 0
+    for k, v in spec.items():
+        if k == "blocks":
+            total += sum(int(np.prod(s)) for s in v.values())
+        else:
+            total += int(np.prod(v))
+    return total
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    """Params touched per token (MoE: top_k of n_experts expert FFNs)."""
+    total = param_count(cfg)
+    if cfg.family == "moe":
+        expert = 3 * cfg.d_model * cfg.d_ff
+        total -= cfg.n_layers * (cfg.n_experts - cfg.top_k) * expert
+    return total
+
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> dict:
+    spec = param_spec(cfg)
+    dtype = jnp.dtype(cfg.dtype)
+
+    def one(key, name, shape):
+        if name.startswith(("ln", "q_norm", "k_norm", "m_ln")):
+            return jnp.ones(shape, dtype)
+        if name.startswith("b") or name in ("m_D",):
+            return jnp.zeros(shape, dtype)
+        if name == "b_f":
+            return jnp.full(shape, 2.0, dtype)      # open forget gates
+        if name == "m_A":
+            return jnp.log(jnp.broadcast_to(
+                jnp.arange(1, shape[-1] + 1, dtype=jnp.float32),
+                shape)).astype(dtype)               # S4D-real init
+        fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+        return (jax.random.normal(key, shape, jnp.float32) *
+                (fan_in ** -0.5)).astype(dtype)
+
+    flat: dict[str, Any] = {}
+    idx = 0
+    for name, shape in spec.items():
+        if name == "blocks":
+            flat["blocks"] = {}
+            for bn, bs in shape.items():
+                flat["blocks"][bn] = one(jax.random.fold_in(key, idx), bn, bs)
+                idx += 1
+        else:
+            flat[name] = one(jax.random.fold_in(key, idx), name, shape)
+            idx += 1
+    return flat
+
+
+# ================================================================= blocks
+def _attn(cfg: ModelConfig, lp, x, positions, mode, cache, window):
+    B, S, D = x.shape
+    h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+    q = h @ lp["wq"]
+    k = h @ lp["wk"]
+    v = h @ lp["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + lp["bq"], k + lp["bk"], v + lp["bv"]
+    q = q.reshape(B, S, cfg.n_heads, cfg.hd)
+    k = k.reshape(B, S, cfg.n_kv_heads, cfg.hd)
+    v = v.reshape(B, S, cfg.n_kv_heads, cfg.hd)
+    if cfg.qk_norm:
+        q = L.rms_norm(q, lp["q_norm"], cfg.norm_eps)
+        k = L.rms_norm(k, lp["k_norm"], cfg.norm_eps)
+    q = L.rope(q, positions, cfg.rope_theta)
+    k = L.rope(k, positions, cfg.rope_theta)
+    if cfg.attn_batch_shard and mode != "decode":
+        from jax.sharding import PartitionSpec as _P
+        bs = _P("model")
+        q, k, v = (jax.lax.with_sharding_constraint(t, bs)
+                   for t in (q, k, v))
+    if mode == "decode":
+        pos = positions[0, 0]
+        size = cache["k"].shape[1]
+        slot = pos % size if window is not None else pos
+        k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"],
+                                                      k.astype(cache["k"].dtype), slot, 1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"],
+                                                      v.astype(cache["v"].dtype), slot, 1)
+        out = L.decode_attention(q, k_cache, v_cache, pos, window=window)
+        new_cache = {"k": k_cache, "v": v_cache}
+    else:
+        out = L.causal_attention(q, k, v, window=window, chunk=cfg.attn_chunk,
+                                 scores_f32=cfg.attn_scores_f32)
+        if cfg.attn_batch_shard:
+            from jax.sharding import PartitionSpec as _P
+            out = jax.lax.with_sharding_constraint(out, _P("model"))
+        new_cache = ({"k": k, "v": v} if mode == "prefill" else None)
+    return x + out.reshape(B, S, cfg.q_dim) @ lp["wo"], new_cache
+
+
+def _ffn(cfg, lp, x):
+    h = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+    y = (jax.nn.silu(h @ lp["w_gate"]) * (h @ lp["w_up"])) @ lp["w_down"]
+    return x + y
+
+
+def _mamba(cfg, lp, x, mode, state):
+    """Selective-SSM branch (hybrid).  Returns (delta, new_state)."""
+    B, S, D = x.shape
+    zu = x @ lp["m_in"]
+    z, u = jnp.split(zu, 2, axis=-1)
+    u = jax.nn.silu(u)
+    dt = jax.nn.softplus(x @ lp["m_dt"])
+    bc = x @ lp["m_bc"]
+    Bm, Cm = jnp.split(bc, 2, axis=-1)
+    if mode == "decode":
+        h_new, y = ssm_lib.ssm_decode_step(
+            state, u[:, 0], dt[:, 0], Bm[:, 0], Cm[:, 0],
+            lp["m_A"], lp["m_D"])
+        y = y[:, None]
+    else:
+        y, h_new = ssm_lib.ssm_scan(u, dt, Bm, Cm, lp["m_A"], lp["m_D"],
+                                    chunk=cfg.scan_chunk,
+                                    scan_f32=cfg.ssm_scan_f32)
+        h_new = h_new if mode == "prefill" else None
+    y = L.rms_norm(y, lp["m_ln"], cfg.norm_eps) * jax.nn.silu(z)
+    return y @ lp["m_out"], h_new
+
+
+def _mlstm(cfg, lp, x, mode, state):
+    B, S, D = x.shape
+    h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+    q = (h @ lp["xq"]).reshape(B, S, cfg.n_heads, cfg.hd)
+    k = (h @ lp["xk"]).reshape(B, S, cfg.n_heads, cfg.hd)
+    v = (h @ lp["xv"]).reshape(B, S, cfg.n_heads, cfg.hd)
+    i_pre = h @ lp["w_i"] + lp["b_i"]
+    f_pre = h @ lp["w_f"] + lp["b_f"]
+    if cfg.attn_batch_shard and mode != "decode":
+        from jax.sharding import PartitionSpec as _P
+        bs = _P("model")
+        q, k, v, i_pre, f_pre = (jax.lax.with_sharding_constraint(t, bs)
+                                 for t in (q, k, v, i_pre, f_pre))
+    if mode == "decode":
+        new_state, out = ssm_lib.mlstm_decode_step(
+            state, q[:, 0], k[:, 0], v[:, 0], i_pre[:, 0], f_pre[:, 0])
+        out = out[:, None]
+    else:
+        out = ssm_lib.mlstm_parallel(q, k, v, i_pre, f_pre,
+                                     chunk=cfg.attn_chunk,
+                                     scores_f32=cfg.attn_scores_f32)
+        new_state = None
+        if mode == "prefill":
+            # build the recurrent state by replaying the last step math:
+            # run a cheap recurrent pass is O(T); instead fold the whole
+            # prefix with the recurrence once (scan) — acceptable at
+            # prefill time, states are tiny.
+            def step(st, inp):
+                qq, kk, vv, ii, ff = inp
+                st, _ = ssm_lib.mlstm_decode_step(st, qq, kk, vv, ii, ff)
+                return st, ()
+            st0 = init_mlstm_state(cfg, B, x.dtype)
+            elems = (q.swapaxes(0, 1), k.swapaxes(0, 1), v.swapaxes(0, 1),
+                     i_pre.swapaxes(0, 1), f_pre.swapaxes(0, 1))
+            new_state, _ = jax.lax.scan(step, st0, elems)
+    return x + out.reshape(B, S, cfg.q_dim) @ lp["xo"], new_state
+
+
+def init_mlstm_state(cfg, B, dtype=jnp.float32):
+    H, hd = cfg.n_heads, cfg.hd
+    return {"C": jnp.zeros((B, H, hd, hd), jnp.float32),
+            "n": jnp.zeros((B, H, hd), jnp.float32),
+            "m": jnp.full((B, H), -1e30, jnp.float32)}
+
+
+def _block(cfg: ModelConfig, lp, x, positions, mode, cache, window):
+    aux = {}
+    if cfg.family == "ssm":
+        x, mix_state = _mlstm(cfg, lp, x, mode,
+                              cache["mix"] if cache else None)
+        h = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+        y = (jax.nn.silu(h @ lp["p_gate"]) * (h @ lp["p_up"])) @ lp["p_down"]
+        x = x + y
+        new_cache = {"mix": mix_state} if mode != "train" else None
+        return x, new_cache, aux
+    if cfg.family == "hybrid":
+        attn_out, kv = _attn(cfg, lp, x, positions, mode,
+                             cache.get("kv") if cache else None, window)
+        m_out, m_state = _mamba(cfg, lp, x, mode,
+                                cache.get("ssm") if cache else None)
+        x = 0.5 * (attn_out + (x + m_out))       # parallel heads, averaged
+        x = _ffn(cfg, lp, x)
+        new_cache = ({"kv": kv, "ssm": m_state} if mode != "train" else None)
+        return x, new_cache, aux
+    # dense / moe / audio / vlm
+    x, kv = _attn(cfg, lp, x, positions, mode,
+                  cache.get("kv") if cache else None, window)
+    if cfg.family == "moe":
+        h = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+        y, aux = moe_lib.moe_ffn(h, lp["router"], lp["w_gate"], lp["w_up"],
+                                 lp["w_down"], top_k=cfg.top_k,
+                                 capacity_factor=cfg.capacity_factor,
+                                 group=cfg.moe_group_size,
+                                 expert_shard_acts=cfg.moe_expert_shard_acts)
+        x = x + y
+    else:
+        x = _ffn(cfg, lp, x)
+    new_cache = {"kv": kv} if mode != "train" else None
+    return x, new_cache, aux
+
+
+# ================================================================ forward
+def embed_inputs(params, cfg: ModelConfig, tokens,
+                 frontend_embeds=None):
+    """Token embedding; VLM prepends projected patch embeddings."""
+    x = params["embed"][tokens]
+    if cfg.frontend == "vlm":
+        assert frontend_embeds is not None
+        img = frontend_embeds.astype(x.dtype) @ params["proj_in"]
+        x = jnp.concatenate([img, x], axis=1)
+    return x
+
+
+def forward(params, cfg: ModelConfig, tokens, frontend_embeds=None,
+            mode: str = "train", window: Optional[int] = None,
+            remat: bool = True):
+    """Full-sequence forward.  Returns (logits, caches, aux).
+
+    caches is the per-layer stacked decode state when mode == 'prefill'.
+    With ``remat`` each layer is rematerialized in the backward pass
+    (activation memory = one carry per layer instead of all residuals).
+    """
+    x = embed_inputs(params, cfg, tokens, frontend_embeds)
+    B, S, D = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    def body(carry, lp):
+        h = carry
+        h, cache, aux = _block(cfg, lp, h, positions, mode, None, window)
+        return h, (cache, aux.get("load_balance", jnp.zeros((), jnp.float32)))
+
+    if remat and mode == "train":
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, (caches, lb) = jax.lax.scan(body, x, params["blocks"])
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head
+    return logits, caches, {"load_balance": lb.mean()}
+
+
+def loss_fn(params, cfg: ModelConfig, batch, window=None):
+    """Causal LM loss.  batch: dict(tokens (B,S) [, frontend_embeds,
+    loss_mask (B,S)]).  Next-token CE in f32 with logits sharded-friendly
+    logsumexp."""
+    tokens = batch["tokens"]
+    logits, _, aux = forward(params, cfg, tokens,
+                             batch.get("frontend_embeds"), "train", window)
+    # align: for VLM, logits cover [img; text]; predict text tokens only
+    n_pre = cfg.n_frontend_tokens if cfg.frontend == "vlm" else 0
+    logits = logits[:, n_pre:, :]
+    targ = tokens[:, 1:]
+    if cfg.loss_fp32_logits:
+        pred = logits[:, :-1].astype(jnp.float32)
+        lse = jax.nn.logsumexp(pred, axis=-1)
+        ll = jnp.take_along_axis(pred, targ[..., None], -1)[..., 0]
+    else:
+        # avoid materializing an f32 copy of the (B,S,V) logits: max-shift
+        # and exp in the compute dtype, accumulate the sum in f32
+        pred = logits[:, :-1]
+        m = jax.lax.stop_gradient(pred.max(-1))
+        e = jnp.exp(pred - m[..., None])
+        lse = m.astype(jnp.float32) + jnp.log(
+            jnp.sum(e, axis=-1, dtype=jnp.float32))
+        ll = jnp.take_along_axis(pred, targ[..., None], -1)[..., 0] \
+            .astype(jnp.float32)
+    nll = lse - ll
+    mask = batch.get("loss_mask")
+    if mask is not None:
+        m = mask[:, 1:]
+        nll = (nll * m).sum() / jnp.maximum(m.sum(), 1)
+    else:
+        nll = nll.mean()
+    if cfg.family == "moe":
+        nll = nll + 0.01 * aux["load_balance"]
+    return nll
+
+
+# ================================================================= decode
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int,
+               window: Optional[int] = None, dtype=jnp.bfloat16):
+    """Per-layer stacked decode caches for serve_step."""
+    Lyr = cfg.n_layers
+    if cfg.family == "ssm":
+        st = init_mlstm_state(cfg, batch)
+        return {"mix": jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (Lyr, *x.shape)), st)}
+    size = min(window, cache_len) if window else cache_len
+    kv = {"k": jnp.zeros((Lyr, batch, size, cfg.n_kv_heads, cfg.hd), dtype),
+          "v": jnp.zeros((Lyr, batch, size, cfg.n_kv_heads, cfg.hd), dtype)}
+    if cfg.family == "hybrid":
+        ssm = jnp.zeros((Lyr, batch, cfg.d_model, cfg.ssm_state), jnp.float32)
+        return {"kv": kv, "ssm": ssm}
+    return {"kv": kv}
+
+
+def decode_step(params, cfg: ModelConfig, cache, token, pos,
+                window: Optional[int] = None):
+    """serve_step: one new token per sequence against the cache.
+
+    token: (B, 1) int32; pos: scalar int32 absolute position.
+    Returns (logits (B, 1, V), new_cache).
+    """
+    x = params["embed"][token]
+    B = x.shape[0]
+    positions = jnp.broadcast_to(pos, (B, 1))
+
+    def body(carry, scanned):
+        h = carry
+        lp, layer_cache = scanned
+        h, new_cache, _ = _block(cfg, lp, h, positions, "decode",
+                                 layer_cache, window)
+        return h, new_cache
+
+    x, new_caches = jax.lax.scan(body, x, (params["blocks"], cache))
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return x @ head, new_caches

@@ -1,0 +1,1 @@
+from repro.optim.optimizers import (Optimizer, adam, momentum, sgd)  # noqa: F401

@@ -1,0 +1,64 @@
+"""Minimal optimizer library (optax-style (init, update) pairs).
+
+Works on arbitrary pytrees — including the shard-local parameter segments
+the distributed FSA runtime updates (each aggregator runs the optimizer on
+its own disjoint shard; since all optimizers here are coordinate-wise, the
+sharded update equals the centralized one, preserving Theorem B.1 for
+FedAdam/momentum too — see paper Sec. 5 'Benefits')."""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple[Any, Any]]  # (g, state, p) -> (delta, state)
+
+
+def sgd(lr: float) -> Optimizer:
+    return Optimizer(
+        init=lambda p: (),
+        update=lambda g, s, p: (jax.tree.map(lambda gi: -lr * gi, g), s))
+
+
+def momentum(lr: float, beta: float = 0.9) -> Optimizer:
+    def init(p):
+        return jax.tree.map(jnp.zeros_like, p)
+
+    def update(g, m, p):
+        m = jax.tree.map(lambda mi, gi: beta * mi + gi, m, g)
+        return jax.tree.map(lambda mi: -lr * mi, m), m
+
+    return Optimizer(init, update)
+
+
+def adam(lr: float, b1: float = 0.9, b2: float = 0.999,
+         eps: float = 1e-8, weight_decay: float = 0.0) -> Optimizer:
+    class AdamState(NamedTuple):
+        mu: Any
+        nu: Any
+        t: jax.Array
+
+    def init(p):
+        z = lambda q: jax.tree.map(jnp.zeros_like, q)
+        return AdamState(z(p), z(p), jnp.zeros((), jnp.int32))
+
+    def update(g, s, p):
+        t = s.t + 1
+        mu = jax.tree.map(lambda m, gi: b1 * m + (1 - b1) * gi, s.mu, g)
+        nu = jax.tree.map(lambda v, gi: b2 * v + (1 - b2) * gi * gi, s.nu, g)
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+
+        def step(m, v, pi):
+            d = -lr * (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            if weight_decay:
+                d = d - lr * weight_decay * pi
+            return d
+
+        return jax.tree.map(step, mu, nu, p), AdamState(mu, nu, t)
+
+    return Optimizer(init, update)

@@ -1,0 +1,89 @@
+"""Property tests for omega-compressors (Definition 3.1): unbiasedness and
+variance bound, checked by Monte-Carlo over many keys."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.compressors import QSGD, RandK, RandP, TopK, Identity, get_compressor
+
+
+def mc_moments(comp, x, n_trials=400, seed=0):
+    keys = jax.random.split(jax.random.PRNGKey(seed), n_trials)
+    ys = jax.vmap(lambda k: comp(k, x))(keys)
+    mean = ys.mean(0)
+    mse = ((ys - x[None]) ** 2).sum(-1).mean()
+    return np.asarray(mean), float(mse)
+
+
+@pytest.mark.parametrize("comp", [RandP(p=0.25), RandP(p=0.7),
+                                  RandK(k=16), QSGD(s=4), QSGD(s=16),
+                                  Identity()])
+def test_unbiased_and_variance_bound(comp):
+    n = 64
+    x = jax.random.normal(jax.random.PRNGKey(42), (n,))
+    mean, mse = mc_moments(comp, x)
+    norm2 = float(jnp.sum(x * x))
+    # unbiasedness: MC mean within 5 sigma of x
+    np.testing.assert_allclose(mean, np.asarray(x),
+                               atol=5 * np.sqrt(comp.omega(n) + 1) *
+                               np.abs(np.asarray(x)).max() / np.sqrt(400) + 1e-6)
+    # variance bound E||C(x)-x||^2 <= omega ||x||^2 (with MC slack)
+    assert mse <= (comp.omega(n) + 1e-9) * norm2 * 1.25 + 1e-9
+
+
+@settings(max_examples=20, deadline=None)
+@given(p=st.floats(0.05, 0.95), seed=st.integers(0, 1000))
+def test_randp_retention(p, seed):
+    n = 512
+    comp = RandP(p=p)
+    x = jnp.ones(n)
+    y = comp(jax.random.PRNGKey(seed), x)
+    frac = float((y != 0).mean())
+    assert abs(frac - p) < 0.15
+    # surviving coordinates are scaled by exactly 1/p
+    nz = np.asarray(y)[np.asarray(y) != 0]
+    np.testing.assert_allclose(nz, 1.0 / p, rtol=1e-5)
+
+
+def test_randk_exact_k():
+    comp = RandK(k=20)
+    y = comp(jax.random.PRNGKey(0), jnp.ones(256))
+    assert int((y != 0).sum()) == 20
+
+
+def test_qsgd_levels():
+    comp = QSGD(s=4)
+    x = jax.random.normal(jax.random.PRNGKey(3), (128,))
+    y = comp(jax.random.PRNGKey(4), x)
+    norm = float(jnp.linalg.norm(x))
+    levels = np.abs(np.asarray(y)) / norm * 4
+    np.testing.assert_allclose(levels, np.round(levels), atol=1e-4)
+
+
+def test_topk_is_biased_but_sparse():
+    comp = TopK(k=8)
+    x = jax.random.normal(jax.random.PRNGKey(5), (64,))
+    y = comp(jax.random.PRNGKey(6), x)
+    assert int((y != 0).sum()) == 8
+    assert not comp.unbiased
+    # keeps the largest magnitudes
+    kept = np.abs(np.asarray(y))[np.asarray(y) != 0].min()
+    dropped = np.abs(np.asarray(x))[np.asarray(y) == 0].max()
+    assert kept >= dropped - 1e-6
+
+
+def test_zero_vector_safe():
+    for comp in [RandP(p=0.3), RandK(k=4), QSGD(s=8), TopK(k=4)]:
+        y = comp(jax.random.PRNGKey(0), jnp.zeros(32))
+        assert not bool(jnp.any(jnp.isnan(y)))
+        np.testing.assert_array_equal(np.asarray(y), np.zeros(32))
+
+
+def test_registry():
+    assert get_compressor("rand_p", p=0.5).p == 0.5
+    assert get_compressor("qsgd", s=8).s == 8
+    assert get_compressor("identity").omega(10) == 0.0
+    with pytest.raises(ValueError):
+        get_compressor("bogus")

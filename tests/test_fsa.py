@@ -1,0 +1,123 @@
+"""FSA correctness: Theorem B.1 (bit-exact equivalence with FedAvg),
+mask properties, failure injection."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import baselines, fsa, masks
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("scheme", ["strided", "contiguous", "random"])
+@pytest.mark.parametrize("n,A", [(16, 1), (17, 4), (256, 16), (100, 7)])
+def test_masks_disjoint_complete(scheme, n, A):
+    assign = masks.make_assignment(n, A, scheme, key=KEY)
+    assert masks.check_disjoint_complete(assign, A)
+    sizes = masks.shard_sizes(assign, A)
+    assert int(sizes.sum()) == n
+    assert int(sizes.max() - sizes.min()) <= int(np.ceil(n / A))
+
+
+def test_shard_reassemble_roundtrip():
+    n, A = 257, 5
+    v = jax.random.normal(KEY, (n,))
+    assign = masks.make_assignment(n, A, "strided")
+    shards = fsa.shard_update(v, assign, A)
+    # disjointness: per-coordinate at most one nonzero shard
+    assert int(((shards != 0).sum(0) > 1).sum()) == 0
+    np.testing.assert_array_equal(np.asarray(shards.sum(0)), np.asarray(v))
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(8, 200), A=st.integers(1, 8), K=st.integers(1, 6),
+       seed=st.integers(0, 2**31 - 1))
+def test_theorem_b1_fsa_equals_fedavg(n, A, K, seed):
+    """Property: for any (n, A, K) the sharded round is BIT-IDENTICAL to
+    the centralized FedAvg round (Theorem B.1)."""
+    key = jax.random.PRNGKey(seed)
+    kx, kg, kw = jax.random.split(key, 3)
+    x = jax.random.normal(kx, (n,))
+    grads = jax.random.normal(kg, (K, n))
+    w = jax.random.uniform(kw, (K,), minval=0.5, maxval=2.0)
+    assign = masks.make_assignment(n, A, "strided")
+    lr = 0.31
+    out = fsa.fsa_round_sharded(x, grads, assign, A, lr, weights=w)
+    ref = baselines.fedavg_round(x, grads, lr, weights=w)
+    np.testing.assert_allclose(np.asarray(out.x_new), np.asarray(ref),
+                               rtol=0, atol=1e-6)
+
+
+def test_theorem_b1_multi_round_trajectory():
+    """Iterate equivalence over T rounds (induction step of Thm B.1)."""
+    n, A, K, T = 64, 4, 3, 10
+    key = jax.random.PRNGKey(1)
+    x_fsa = x_avg = jax.random.normal(key, (n,))
+    assign = masks.make_assignment(n, A, "contiguous")
+    for t in range(T):
+        g = jax.random.normal(jax.random.fold_in(key, t), (K, n))
+        x_fsa = fsa.fsa_round_sharded(x_fsa, g, assign, A, 0.1).x_new
+        x_avg = baselines.fedavg_round(x_avg, g, 0.1)
+        np.testing.assert_allclose(np.asarray(x_fsa), np.asarray(x_avg),
+                                   atol=1e-5)
+
+
+def test_aggregator_view_is_masked():
+    """A single aggregator observes only its shard of each client update
+    (the privacy mechanism of Sec. 3.4)."""
+    n, A, K = 64, 4, 3
+    v = jax.random.normal(KEY, (K, n))
+    assign = masks.make_assignment(n, A, "strided")
+    out = fsa.fsa_round_sharded(jnp.zeros(n), v, assign, A, 1.0)
+    views = out.shard_views                       # (A, K, n)
+    for a in range(A):
+        m = np.asarray(masks.mask_for(assign, a))
+        np.testing.assert_array_equal(
+            np.asarray(views[a]) * (1 - m), np.zeros((K, n)))
+        frac = (np.asarray(views[a]) != 0).mean()
+        assert frac <= 1.05 / A + 0.02            # observes ~n/A coords
+
+
+def test_failures_no_failure_equals_fedavg():
+    n, A, K = 48, 4, 5
+    x = jax.random.normal(KEY, (n,))
+    g = jax.random.normal(jax.random.fold_in(KEY, 1), (K, n))
+    assign = masks.make_assignment(n, A, "strided")
+    got = fsa.fsa_round_with_failures(
+        x, g, assign, A, 0.2, jnp.ones(A, bool), jnp.ones((K, A), bool))
+    ref = baselines.fedavg_round(x, g, 0.2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=1e-6)
+
+
+def test_aggregator_dropout_freezes_shard():
+    """A dropped aggregator's coordinates stay at x^t for the round."""
+    n, A, K = 40, 4, 3
+    x = jax.random.normal(KEY, (n,))
+    g = jax.random.normal(jax.random.fold_in(KEY, 2), (K, n))
+    assign = masks.make_assignment(n, A, "strided")
+    alive = jnp.array([True, False, True, True])
+    got = fsa.fsa_round_with_failures(x, g, assign, A, 0.5, alive,
+                                      jnp.ones((K, A), bool))
+    m_dead = np.asarray(masks.mask_for(assign, 1)).astype(bool)
+    np.testing.assert_array_equal(np.asarray(got)[m_dead],
+                                  np.asarray(x)[m_dead])
+    ref = baselines.fedavg_round(x, g, 0.5)
+    np.testing.assert_allclose(np.asarray(got)[~m_dead],
+                               np.asarray(ref)[~m_dead], atol=1e-6)
+
+
+def test_link_failure_renormalizes():
+    """With one dead link, that aggregator averages over the surviving
+    clients only."""
+    n, A, K = 12, 2, 4
+    x = jnp.zeros(n)
+    g = jax.random.normal(KEY, (K, n))
+    assign = masks.make_assignment(n, A, "strided")
+    links = jnp.ones((K, A), bool).at[0, 0].set(False)
+    got = fsa.fsa_round_with_failures(x, g, assign, A, 1.0,
+                                      jnp.ones(A, bool), links)
+    m0 = np.asarray(masks.mask_for(assign, 0)).astype(bool)
+    expect0 = -np.asarray(g[1:]).mean(0)[m0]          # client 0 missing
+    np.testing.assert_allclose(np.asarray(got)[m0], expect0, atol=1e-6)

@@ -1,0 +1,111 @@
+"""Privacy machinery: MI bound algebra, MIA audit discrimination, DLG."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import privacy
+from repro.core.fl import FLConfig, FLRun
+from repro.core import masks as masks_lib
+from repro.data import federated_classification
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_mi_bound_scaling():
+    base = privacy.mi_bound(n=1000, T=10, p=1.0, A=1)
+    assert privacy.mi_bound(1000, 10, 1.0, 4) == pytest.approx(base / 4)
+    assert privacy.mi_bound(1000, 10, 0.1, 4) == pytest.approx(base / 40)
+    # collusion (Cor. D.2): A_c colluders scale leakage back up
+    assert privacy.mi_bound(1000, 10, 1.0, 4, a_c=4) == pytest.approx(base)
+    assert privacy.gaussian_cmax(0.0) == 0.0
+    assert privacy.gaussian_cmax(3.0) == pytest.approx(0.5 * np.log(4.0))
+
+
+def _small_problem(K=4, S=8, dim=8, classes=3):
+    x, y = federated_classification(KEY, K, S, dim=dim, n_classes=classes)
+
+    def init(key):
+        k1, k2 = jax.random.split(key)
+        return {"w": 0.3 * jax.random.normal(k1, (dim, classes)),
+                "b": jnp.zeros(classes)}
+
+    def loss_fn(p, batch):
+        xx, yy = batch
+        logits = xx @ p["w"] + p["b"]
+        return -jnp.take_along_axis(jax.nn.log_softmax(logits),
+                                    yy[:, None], 1).mean()
+    return (x, y), init, loss_fn
+
+
+def test_mia_audit_separates_members():
+    """Full-view adversary (A=1) must discriminate members clearly;
+    a small-shard adversary (A=8) must discriminate less."""
+    M = 8                                          # members per client
+    (x, y), init, loss_fn = _small_problem(S=2 * M)
+    # Steinke-style canaries: random-labeled samples; half are included in
+    # training (members, memorized) and half held out.  Few samples per
+    # client => strong per-sample signal in the transmitted update (the
+    # paper's low-data overfitting regime, Fig. 3).
+    y_can = jax.random.randint(jax.random.fold_in(KEY, 3), (4, 2 * M), 0, 3)
+    x_tr = x[:, :M]
+    y_tr = y_can[:, :M]                            # mislabeled members
+    aucs = {}
+    for A in (1, 8):
+        cfg = FLConfig(method="eris", K=4, A=A, rounds=40, lr=0.4, seed=1)
+        run = FLRun(cfg, init(KEY), loss_fn)
+        xs, views = [], []
+        for t in range(cfg.rounds):
+            xs.append(run.x)
+            v = run.step((x_tr, y_tr), collect_views=True)
+            views.append(v[0])                     # client 0 transmissions
+        assign = masks_lib.make_assignment(run.n, A, "strided")
+        obs = masks_lib.mask_for(assign, 0)        # aggregator 0's view
+        grad_fn = jax.grad(lambda xf, c: loss_fn(
+            run.unravel(xf), (c[0][None], c[1][None].astype(jnp.int32))))
+
+        def canary_grad(xf, c):
+            return grad_fn(xf, (c[:-1], c[-1]))
+
+        members = jnp.concatenate([x[0, :M], y_can[0, :M, None]], axis=1)
+        non = jnp.concatenate([x[0, M:], y_can[0, M:, None]], axis=1)
+        res = privacy.mia_audit(KEY, canary_grad, jnp.stack(xs),
+                                jnp.stack(views) * obs, obs, members, non)
+        aucs[A] = res["auc"]
+    assert aucs[1] > 0.85          # full view: strong attack
+    assert aucs[8] <= aucs[1]      # sharded view: weaker or equal
+
+
+def test_dlg_reconstruction_full_vs_masked():
+    """DLG recovers the input from a full gradient far better than from a
+    1/8 FSA shard (Fig. 12 trend)."""
+    dim, classes = 36, 3
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    params0 = {"w": 0.5 * jax.random.normal(k1, (dim, classes)),
+               "b": jnp.zeros(classes)}
+    from jax.flatten_util import ravel_pytree
+    x_flat, unravel = ravel_pytree(params0)
+
+    def loss_single(xf, inp, label):
+        p = unravel(xf)
+        logits = inp @ p["w"] + p["b"]
+        return -jax.nn.log_softmax(logits)[label]
+
+    grad_fn = jax.grad(loss_single)
+    target = jax.random.normal(k2, (dim,))
+    label = jnp.int32(1)
+    g_true = grad_fn(x_flat, target, label)
+    errs = {}
+    for A in (1, 8):
+        assign = masks_lib.make_assignment(x_flat.shape[0], A, "strided")
+        obs = masks_lib.mask_for(assign, 0)
+        out = privacy.dlg_attack(k3, grad_fn, x_flat, g_true * obs, obs,
+                                 (dim,), label, steps=400, lr=0.05)
+        errs[A] = privacy.reconstruction_mse(out["reconstruction"], target)
+    assert errs[1] < 0.5           # near-perfect reconstruction
+    assert errs[8] > 2 * errs[1]   # sharding degrades the attack
+
+
+def test_observed_fraction():
+    assert privacy.observed_fraction(1.0, 4) == 0.25
+    assert privacy.observed_fraction(0.1, 50) == pytest.approx(0.002)
