@@ -1,13 +1,16 @@
 """Theorem 3.2 benchmark: convergence of ERIS(+DSC) vs FedAvg vs
 SoteriaFL-style compression on the standard MLP problem (the loss-curve
-evidence behind Table 1's 'FedAvg-level utility')."""
+evidence behind Table 1's 'FedAvg-level utility') + the scan-compiled
+multi-round driver vs the per-round Python loop."""
 from __future__ import annotations
+
+import time
 
 import jax
 
 from benchmarks.common import mlp_problem, run_method, time_call, KEY
 from repro.core.compressors import QSGD, RandP
-from repro.core.fl import FLConfig
+from repro.core.fl import FLConfig, FLRun
 
 
 def run(quick: bool = True):
@@ -50,4 +53,44 @@ def run(quick: bool = True):
                      "us_per_call": t_round,
                      "derived": f"final_loss={loss:.4f} acc={acc:.3f} "
                                 f"rounds={rounds}"})
+    rows.append(_scan_vs_loop(data, init, loss_fn, rounds))
     return rows
+
+
+def _scan_vs_loop(data, init, loss_fn, rounds: int) -> dict:
+    """Multi-round driver comparison: T jitted per-round dispatches vs the
+    ONE scan-compiled T-round XLA program (same trajectory, see
+    tests/test_pipeline.py::test_scan_driver_matches_step_driver)."""
+    import jax.numpy as jnp
+
+    cfg = FLConfig(method="eris", K=6, A=8, rounds=rounds, lr=0.3,
+                   use_dsc=True, compressor=RandP(p=0.2))
+    stacked = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (rounds, *x.shape)), data)
+    run = FLRun(cfg, init(KEY), loss_fn)
+    state0, key0 = run.state, run.key
+
+    def loop_once():
+        run.state, run.key = state0, key0
+        for _ in range(rounds):
+            run.step(data)
+        return run.x
+
+    def scan_once():
+        run.state, run.key = state0, key0
+        run.run_scanned(stacked)
+        return run.x
+
+    jax.block_until_ready(loop_once())          # warm the per-round jit
+    t0 = time.perf_counter()
+    jax.block_until_ready(loop_once())
+    t_loop = (time.perf_counter() - t0) * 1e6
+    jax.block_until_ready(scan_once())          # warm the scan compile
+    t0 = time.perf_counter()
+    jax.block_until_ready(scan_once())
+    t_scan = (time.perf_counter() - t0) * 1e6
+    return {"name": "convergence/scan_vs_loop",
+            "us_per_call": t_scan,
+            "derived": f"loop_us={t_loop:.0f} scan_us={t_scan:.0f} "
+                       f"speedup={t_loop / max(t_scan, 1e-9):.2f}x "
+                       f"rounds={rounds}"}

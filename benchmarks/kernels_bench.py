@@ -27,6 +27,32 @@ def run(quick: bool = True):
                  "derived": f"n={n} hbm_bytes={bytes_moved} "
                             f"tpu_time_at_819GBps_us="
                             f"{bytes_moved/819e9*1e6:.1f}"})
+    # scan-path measurement: T fused DSC rounds as ONE compiled program
+    # (the pipeline's scan driver shape) vs T separate jitted dispatches.
+    T = 50
+
+    def one_round(s, seed):
+        v, s = ref.dsc_update_ref(g, s, seed, 0.1, 0.5)
+        return s, v.sum()
+
+    scanned = jax.jit(lambda s: jax.lax.scan(
+        one_round, s, jnp.arange(T, dtype=jnp.uint32)))
+    us_scan = time_call(scanned, s, reps=5, warmup=2)
+
+    stepped = jax.jit(one_round)
+
+    def loop(s0):
+        s = s0
+        for t in range(T):
+            s, _ = stepped(s, jnp.uint32(t))
+        return s
+    us_loop = time_call(loop, s, reps=5, warmup=2)
+    rows.append({"name": "kernels/dsc_update_scan_path",
+                 "us_per_call": us_scan,
+                 "derived": f"T={T} loop_us={us_loop:.0f} "
+                            f"scan_us={us_scan:.0f} "
+                            f"dispatch_amortization="
+                            f"{us_loop / max(us_scan, 1e-9):.2f}x"})
     q = jax.jit(lambda x: ref.quantize_ref(x, jnp.uint32(3)))
     us = time_call(q, g)
     rows.append({"name": "kernels/quantize_ref",

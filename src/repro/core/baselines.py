@@ -81,9 +81,10 @@ def soteriafl_round(key, x, grads, lr, state: SoteriaState,
 
 
 # ------------------------------------------------------------- PriPrune
-def priprune_round(x, grads, lr, prune_rate: float):
-    """Withhold the most informative (largest-magnitude) prune_rate fraction
-    of each client update before transmission."""
+def prune_withhold(grads: jax.Array, prune_rate: float) -> jax.Array:
+    """Withhold (zero) the most informative (largest-magnitude)
+    prune_rate fraction of each client update before transmission.
+    Shared by priprune_round and the pipeline's PruneWithhold stage."""
     n = grads.shape[-1]
     k = max(1, int(round(prune_rate * n)))
 
@@ -91,16 +92,21 @@ def priprune_round(x, grads, lr, prune_rate: float):
         thresh = jax.lax.top_k(jnp.abs(g), k)[0][-1]
         return jnp.where(jnp.abs(g) >= thresh, 0.0, g)
 
-    return fedavg_round(x, jax.vmap(prune)(grads), lr)
+    return jax.vmap(prune)(grads)
+
+
+def priprune_round(x, grads, lr, prune_rate: float):
+    return fedavg_round(x, prune_withhold(grads, prune_rate), lr)
 
 
 # ---------------------------------------------------------- ShatterLite
-def shatter_round(key, x, grads, lr, n_chunks: int, r: int):
+def shatter_update(key, grads: jax.Array, n_chunks: int, r: int) -> jax.Array:
     """Chunked partial gradient exchange: coordinates are split into
     n_chunks contiguous chunks; each chunk is averaged over a random
     r-subset of the K clients (gossip-neighborhood approximation).  This
     intentionally deviates from full averaging, matching the utility drop
-    the paper reports for Shatter when training from scratch."""
+    the paper reports for Shatter when training from scratch.  Shared by
+    shatter_round and the pipeline's ShatterAggregate stage."""
     K, n = grads.shape
     chunk_id = jnp.minimum(jnp.arange(n) * n_chunks // n, n_chunks - 1)
     # random r-subset per chunk
@@ -109,8 +115,11 @@ def shatter_round(key, x, grads, lr, n_chunks: int, r: int):
     member = (scores >= thresh).astype(jnp.float32)       # (n_chunks, K)
     member = member / jnp.maximum(member.sum(1, keepdims=True), 1.0)
     w_per_coord = member[chunk_id]                        # (n, K)
-    update = jnp.einsum("nk,kn->n", w_per_coord, grads)
-    return x - lr * update
+    return jnp.einsum("nk,kn->n", w_per_coord, grads)
+
+
+def shatter_round(key, x, grads, lr, n_chunks: int, r: int):
+    return x - lr * shatter_update(key, grads, n_chunks, r)
 
 
 # ---------------------------------------------------------- MinLeakage

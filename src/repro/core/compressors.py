@@ -162,6 +162,50 @@ class TopK(Compressor):
         return False
 
 
+@dataclasses.dataclass(frozen=True)
+class Int8RoundTrip(Compressor):
+    """Wire-format composition: inner omega-compressor followed by
+    per-block stochastic int8 quantize->dequantize (the same math as the
+    Pallas ``kernels/quantize`` pair, in vmap-safe jnp form).
+
+    Both stages are unbiased, so the composition is an omega-compressor;
+    the int8 stage's variance contribution (bounded by the per-block
+    absmax / 254 rounding grid) is negligible next to any sparsifying
+    inner compressor, so ``omega`` reports the inner bound.  Used when a
+    wire format must compose with DSC/EF: the shifted references then
+    update with exactly the values the aggregators receive.
+    """
+
+    inner: Compressor = Identity()
+    block: int = 256
+    name: str = "int8_round_trip"
+
+    def __call__(self, key, x):
+        from repro.kernels import ref as kref
+        k_in, k_q = jax.random.split(key)
+        y = self.inner(k_in, x)
+        n = y.shape[-1]
+        seed = jax.random.bits(k_q, dtype=jnp.uint32)
+        q, scale = kref.quantize_ref(y, seed, block=self.block)
+        return kref.dequantize_ref(q, scale, block=self.block)[:n]
+
+    def omega(self, n):
+        return self.inner.omega(n)
+
+    def retention(self, n):
+        return self.inner.retention(n)
+
+    def wire_bits(self, n):
+        # the quantizer runs on the DENSE inner output, so the wire
+        # carries a dense int8 vector + one f32 scale per block
+        import math
+        return 8.0 * n + 32.0 * math.ceil(n / self.block)
+
+    @property
+    def unbiased(self) -> bool:
+        return self.inner.unbiased
+
+
 def get_compressor(name: str, n: Optional[int] = None, **kw) -> Compressor:
     name = name.lower()
     if name in ("identity", "none"):

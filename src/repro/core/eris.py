@@ -15,6 +15,7 @@ import jax.numpy as jnp
 from repro.core import dsc as dsc_lib
 from repro.core import fsa as fsa_lib
 from repro.core import masks as masks_lib
+from repro.core import pipeline as pl
 from repro.core.compressors import Compressor, Identity
 
 
@@ -63,30 +64,29 @@ def round_step(state: ErisState, cfg: ErisConfig,
         key=k_mask if cfg.fresh_masks else None)
 
     # --- client-side: local stochastic gradients (Algorithm 1 line 3)
-    grads = jax.vmap(lambda b: grad_fn(state.x, b))(client_batches)  # (K, n)
+    grads = pl.ClientStep()(grad_fn, state.x, client_batches)  # (K, n)
 
+    # --- compression stage (line 4) — shared with fl.py / launch/train.py
     gamma = cfg.gamma_value(n)
     if cfg.use_dsc:
-        v, s_clients = dsc_lib.client_compress(
-            state.dsc, grads, cfg.compressor, gamma, k_comp)
+        stage = pl.DSCCompress(compressor=cfg.compressor, gamma=gamma)
+        v, dsc = stage.compress(k_comp, state.dsc, grads)
     else:
-        v, s_clients = grads, state.dsc.s_clients
+        v, dsc = grads, state.dsc
 
     # --- FSA partition + aggregator-side (lines 5-13)
     out = fsa_lib.fsa_round_sharded(
         jnp.zeros_like(state.x), v, assign, cfg.A, 1.0,
         weights=weights, keep_views=keep_views) if keep_views else None
-    v_global, s_agg = dsc_lib.aggregate(
-        state.dsc._replace(s_agg=state.dsc.s_agg if cfg.use_dsc
-                           else jnp.zeros_like(state.dsc.s_agg)),
-        v, gamma, weights)
-    if not cfg.use_dsc:
-        s_agg = state.dsc.s_agg
+    agg = (pl.DSCAggregate(gamma=gamma) if cfg.use_dsc
+           else pl.AggregateStage())
+    if cfg.use_dsc:
+        v_global, dsc = agg.aggregate(dsc, v, weights)
+    else:
+        v_global = agg.mean(v, weights)
     x_new = state.x - cfg.lr * v_global
 
-    new_state = ErisState(x_new,
-                          dsc_lib.DSCState(s_clients, s_agg),
-                          state.t + 1, key)
+    new_state = ErisState(x_new, dsc, state.t + 1, key)
     aux = {"assign": assign, "transmitted": v,
            "shard_views": out.shard_views if keep_views else None}
     return new_state, aux

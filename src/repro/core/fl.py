@@ -2,9 +2,21 @@
 
 Models are pytrees; the engine flattens them once (ravel_pytree) so every
 method operates on the paper's R^n update vectors, then unravels for
-evaluation.  This is the laptop-scale simulator used by the convergence,
-privacy, and utility benchmarks; the production multi-pod path lives in
-repro.launch.
+evaluation.  Methods are declarative stage compositions resolved by
+``repro.core.rounds`` — the engine itself has no per-method branches.
+
+Two drivers share one round implementation:
+
+* ``FLRun.step`` / ``run_fl``      — per-round jitted calls (interactive:
+  inspect ``run.x`` / adversary views between rounds).
+* ``FLRun.run_scanned`` / ``run_fl_scan`` — ALL rounds as one
+  ``jax.lax.scan``-compiled XLA program (T fused rounds, one dispatch);
+  identical trajectory to stepping, measured faster in
+  benchmarks/convergence.py.
+
+This is the laptop-scale simulator used by the convergence, privacy, and
+utility benchmarks; the production multi-pod path lives in repro.launch
+and consumes the same compression stages.
 """
 from __future__ import annotations
 
@@ -16,19 +28,15 @@ import jax.numpy as jnp
 from jax.flatten_util import ravel_pytree
 
 from repro.core import baselines as bl
-from repro.core import dsc as dsc_lib
-from repro.core import error_feedback as ef_lib
-from repro.core import fsa as fsa_lib
-from repro.core import masks as masks_lib
-from repro.core import secure_agg as sa_lib
-from repro.core import server_opt as so_lib
+from repro.core import rounds as rounds_lib
 from repro.core.compressors import Compressor, Identity
+from repro.core.pipeline import (RoundState, participation_weights,
+                                 split_round_keys)
 
 
 @dataclasses.dataclass(frozen=True)
 class FLConfig:
-    method: str = "eris"          # eris|fedavg|fedavg_ldp|soteriafl|priprune|
-                                  # shatter|secure_agg|min_leakage
+    method: str = "eris"          # any key of repro.core.rounds.METHODS
     K: int = 8                    # clients
     A: int = 4                    # aggregators (eris)
     rounds: int = 50
@@ -46,126 +54,70 @@ class FLConfig:
     shatter_r: int = 4
     agg_dropout: float = 0.0      # appendix F.5 failure injection
     link_failure: float = 0.0
+    compress_impl: str = "jnp"    # jnp | pallas (fused kernels/dsc_update)
+    int8_wire: bool = False       # Pallas int8 wire quantization stage
     seed: int = 0
 
 
 class FLRun:
-    """Holds the jitted round function and mutable training state."""
+    """Holds the jitted round pipeline and mutable training state."""
 
     def __init__(self, cfg: FLConfig, params0: Any,
                  loss_fn: Callable[[Any, Any], jax.Array]):
         self.cfg = cfg
         flat0, self.unravel = ravel_pytree(params0)
         self.n = flat0.shape[0]
-        self.x = flat0
         self.key = jax.random.PRNGKey(cfg.seed)
         self.loss_fn = loss_fn
         self._grad = jax.grad(lambda x, b: loss_fn(self.unravel(x), b))
-        self.dsc = dsc_lib.init_state(cfg.K, self.n)
-        self.ef = ef_lib.init_state(cfg.K, self.n)
-        self.server = so_lib.get_server_opt(cfg.server_opt, cfg.lr)
-        self.server_state = self.server.init(flat0)
-        self.history: list[dict] = []
+        self.pipeline = rounds_lib.build_round(cfg, self.n)
+        self.state: RoundState = self.pipeline.init_state(flat0, cfg.K)
         self._round = jax.jit(self._round_impl)
+        self._scan = None
+
+    # -------------------------------------------------- state conveniences
+    @property
+    def x(self) -> jax.Array:
+        return self.state.x
+
+    @property
+    def dsc(self):
+        return self.state.dsc
+
+    @property
+    def ef(self):
+        return self.state.ef
+
+    @property
+    def server_state(self):
+        return self.state.server
 
     # ---------------------------------------------------------------- core
-    def _client_grads(self, x, batches):
-        return jax.vmap(lambda b: self._grad(x, b))(batches)
-
-    def _round_impl(self, key, x, dsc, ef, server_state, batches):
-        cfg = self.cfg
-        grads = self._client_grads(x, batches)
-        k_m, k_c, k_n, k_f, k_p = jax.random.split(key, 5)
-        views = None
-        ef_new = ef
-        # partial participation: sample clients; weights renormalize the
-        # aggregation over the sampled subset (at least one participates)
-        if cfg.participation < 1.0:
-            part = jax.random.bernoulli(k_p, cfg.participation, (cfg.K,))
-            part = part.at[jax.random.randint(k_p, (), 0, cfg.K)].set(True)
-            weights = part.astype(jnp.float32)
-        else:
-            weights = None
-        if cfg.method in ("fedavg", "min_leakage"):
-            x_new, dsc_new = bl.fedavg_round(x, grads, cfg.lr,
-                                             weights=weights), dsc
-            views = grads if cfg.method == "fedavg" else None
-        elif cfg.method == "secure_agg":
-            x_new, views = sa_lib.secure_agg_round(k_c, x, grads, cfg.lr)
-            dsc_new = dsc
-        elif cfg.method == "fedavg_ldp":
-            noised = bl.ldp_perturb(k_n, grads, cfg.ldp or bl.LDPConfig())
-            x_new, dsc_new, views = bl.fedavg_round(x, noised, cfg.lr), dsc, noised
-        elif cfg.method == "soteriafl":
-            gamma = cfg.gamma if cfg.gamma is not None else \
-                dsc_lib.gamma_star(cfg.compressor.omega(self.n))
-            x_new, st = bl.soteriafl_round(
-                k_c, x, grads, cfg.lr, bl.SoteriaState(dsc),
-                cfg.compressor, gamma, cfg.ldp)
-            dsc_new, views = st.dsc, None
-        elif cfg.method == "priprune":
-            x_new, dsc_new = bl.priprune_round(x, grads, cfg.lr,
-                                               cfg.prune_rate), dsc
-        elif cfg.method == "shatter":
-            x_new, dsc_new = bl.shatter_round(
-                k_c, x, grads, cfg.lr, cfg.shatter_chunks, cfg.shatter_r), dsc
-        elif cfg.method == "eris":
-            gamma = cfg.gamma if cfg.gamma is not None else (
-                dsc_lib.gamma_star(cfg.compressor.omega(self.n))
-                if cfg.use_dsc else 0.0)
-            if cfg.use_dsc:
-                v, s_clients = dsc_lib.client_compress(
-                    dsc, grads, cfg.compressor, gamma, k_c)
-            elif cfg.use_ef:
-                v, ef_new = ef_lib.client_compress(ef, grads,
-                                                   cfg.compressor, k_c)
-                s_clients = dsc.s_clients
-            else:
-                v, s_clients = grads, dsc.s_clients
-            assign = masks_lib.make_assignment(self.n, cfg.A, cfg.mask_scheme)
-            if cfg.agg_dropout > 0 or cfg.link_failure > 0:
-                ka, kl = jax.random.split(k_f)
-                agg_alive = jax.random.bernoulli(
-                    ka, 1.0 - cfg.agg_dropout, (cfg.A,))
-                link_alive = jax.random.bernoulli(
-                    kl, 1.0 - cfg.link_failure, (cfg.K, cfg.A))
-                # failures apply to the *transmitted* v; DSC shift compensation
-                # still uses what aggregators actually received
-                x_acc = fsa_lib.fsa_round_with_failures(
-                    jnp.zeros(self.n), v, assign, cfg.A, 1.0,
-                    agg_alive, link_alive)
-                mean_v = -x_acc  # accumulated -1.0 * aggregated update
-                v_global = (dsc.s_agg + mean_v) if cfg.use_dsc else mean_v
-                s_agg = dsc.s_agg + gamma * mean_v if cfg.use_dsc else dsc.s_agg
-            else:
-                v_global, s_agg = dsc_lib.aggregate(
-                    dsc if cfg.use_dsc else dsc._replace(
-                        s_agg=jnp.zeros_like(dsc.s_agg)), v, gamma,
-                    weights=weights)
-                if not cfg.use_dsc:
-                    s_agg = dsc.s_agg
-            if cfg.server_opt != "fedavg":
-                # Sec. 5 Benefits: any centralized server optimizer rides
-                # on FSA (aggregators run it segment-wise; == centralized)
-                delta, server_state = self.server.update(v_global,
-                                                         server_state)
-                x_new = x + delta
-            else:
-                x_new = x - cfg.lr * v_global
-            dsc_new = dsc_lib.DSCState(s_clients, s_agg)
-            views = v
-        else:
-            raise ValueError(f"unknown method {self.cfg.method!r}")
-        return x_new, dsc_new, ef_new, server_state, views
+    def _round_impl(self, key, state: RoundState, batches):
+        keys = split_round_keys(key)
+        weights = participation_weights(keys.part, self.cfg.K,
+                                        self.cfg.participation)
+        return self.pipeline.run_round(self._grad, keys, state, batches,
+                                       weights)
 
     # ----------------------------------------------------------------- API
     def step(self, batches, collect_views: bool = False):
         self.key, sub = jax.random.split(self.key)
-        x_new, dsc_new, ef_new, sstate, views = self._round(
-            sub, self.x, self.dsc, self.ef, self.server_state, batches)
-        self.x, self.dsc, self.ef = x_new, dsc_new, ef_new
-        self.server_state = sstate
+        self.state, views = self._round(sub, self.state, batches)
         return views if collect_views else None
+
+    def run_scanned(self, batches_stacked):
+        """Run T rounds (T = leading dim of batches_stacked) as a single
+        scan-compiled program.  Trajectory-identical to T ``step`` calls.
+        Returns the per-round model iterates (T, n)."""
+        if self._scan is None:
+            self._scan = jax.jit(
+                lambda key, state, bs: self.pipeline.scan_rounds(
+                    self._grad, key, state, bs,
+                    participation=self.cfg.participation))
+        self.key, self.state, xs = self._scan(self.key, self.state,
+                                              batches_stacked)
+        return xs
 
     def params(self):
         return self.unravel(self.x)
@@ -187,4 +139,27 @@ def run_fl(cfg: FLConfig, params0, loss_fn, batches_per_round,
         if eval_batch is not None and (t % eval_every == 0
                                        or t == cfg.rounds - 1):
             losses.append((t, run.evaluate(eval_batch)))
+    return run, losses
+
+
+def run_fl_scan(cfg: FLConfig, params0, loss_fn, batches_per_round,
+                eval_batch=None, eval_every: int = 10):
+    """Scan-compiled twin of :func:`run_fl`: materializes the per-round
+    batches up front (same keys as the loop driver), runs ONE fused
+    T-round XLA program, then evaluates the recorded iterates.  Returns
+    (run, losses) with the same trajectory as ``run_fl``."""
+    run = FLRun(cfg, params0, loss_fn)
+    key = jax.random.PRNGKey(cfg.seed + 1)
+    per_round = []
+    for t in range(cfg.rounds):
+        key, sub = jax.random.split(key)
+        per_round.append(batches_per_round(t, sub))
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *per_round)
+    xs = run.run_scanned(stacked)
+    losses = []
+    if eval_batch is not None:
+        for t in range(cfg.rounds):
+            if t % eval_every == 0 or t == cfg.rounds - 1:
+                losses.append((t, float(loss_fn(run.unravel(xs[t]),
+                                                eval_batch))))
     return run, losses

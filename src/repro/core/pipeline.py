@@ -1,0 +1,447 @@
+"""Composable FL round pipeline (the paper's Algorithm 1 as a stage graph).
+
+ERIS composes orthogonally from four stages, and so does every baseline
+the paper compares against (SoteriaFL frames private compressed FL the
+same way):
+
+    ClientStep      local stochastic gradients            (Alg. 1 line 3)
+    CompressStage*  what leaves the client                (line 4: DSC /
+                    error feedback / LDP noise / pruning / wire int8)
+    AggregateStage  how shards meet                       (lines 5-13: FSA
+                    sharded or algebraic / all-reduce / secure-agg /
+                    shatter / failure-injected FSA)
+    ServerStage     how the global model moves            (line 14 +
+                    Sec. 5 'Benefits': fedavg / fedadam / fedyogi)
+
+A method is a :class:`RoundPipeline` — a frozen declarative composition —
+instead of a branch in an if/elif chain.  The same stage objects drive
+the laptop simulator (``repro.core.fl``), the pure-functional scan engine
+(``repro.core.eris``), and the distributed shard_map runtime
+(``repro.launch.train`` calls ``CompressStage.apply_leaf`` per parameter
+leaf), so simulator and production semantics cannot drift.
+
+RNG discipline: every round splits its key into five role keys
+(mask/comp/noise/fail/part) exactly like the original engine; each stage
+declares which role it consumes, which keeps trajectories bit-compatible
+with the pre-pipeline implementation (asserted in tests/test_pipeline.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import baselines as bl
+from repro.core import dsc as dsc_lib
+from repro.core import error_feedback as ef_lib
+from repro.core import fsa as fsa_lib
+from repro.core import masks as masks_lib
+from repro.core import secure_agg as sa_lib
+from repro.core import server_opt as so_lib
+from repro.core.compressors import Compressor, Identity, RandP
+
+
+# ================================================================== state
+class RoundState(NamedTuple):
+    """Everything a round carries forward (a scan carry)."""
+    x: jax.Array             # global model (n,)
+    dsc: dsc_lib.DSCState    # DSC reference vectors (zeros when unused)
+    ef: ef_lib.EFState       # error-feedback residuals (zeros when unused)
+    server: Any              # server optimizer state
+
+
+class RoundKeys(NamedTuple):
+    """Per-round role keys (the engine's historical 5-way split, plus the
+    two sub-keys SoteriaFL derives from ``comp`` and a dedicated wire
+    key — ``comp1`` can collide with a client's compressor key since
+    ``split(k, 2)[1] == split(k, K)[1]`` for K=2, so independent stages
+    must not share it)."""
+    mask: jax.Array
+    comp: jax.Array
+    noise: jax.Array
+    fail: jax.Array
+    part: jax.Array
+    comp0: jax.Array         # split(comp)[0] — SoteriaFL pre-noise
+    comp1: jax.Array         # split(comp)[1] — SoteriaFL compression
+    wire: jax.Array          # wire-format stages (int8 quantization)
+
+
+def split_round_keys(key: jax.Array) -> RoundKeys:
+    k_mask, k_comp, k_noise, k_fail, k_part = jax.random.split(key, 5)
+    c0, c1 = jax.random.split(k_comp)
+    return RoundKeys(k_mask, k_comp, k_noise, k_fail, k_part, c0, c1,
+                     jax.random.fold_in(k_comp, 0x3177))
+
+
+def participation_weights(key: jax.Array, K: int,
+                          fraction: float) -> Optional[jax.Array]:
+    """Client-sampling weights: Bernoulli(fraction) per client with at
+    least one participant forced (None when everyone participates)."""
+    if fraction >= 1.0:
+        return None
+    part = jax.random.bernoulli(key, fraction, (K,))
+    part = part.at[jax.random.randint(key, (), 0, K)].set(True)
+    return part.astype(jnp.float32)
+
+
+# ======================================================== kernel plumbing
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _largest_divisor(n: int, cap: int) -> int:
+    best = 1
+    for d in range(1, min(n, cap) + 1):
+        if n % d == 0:
+            best = d
+    return best
+
+
+def _seed_of(key: jax.Array) -> jax.Array:
+    return jax.random.bits(key, dtype=jnp.uint32)
+
+
+# ================================================================= client
+@dataclasses.dataclass(frozen=True)
+class ClientStep:
+    """Local update: one full-batch stochastic gradient per client,
+    vmapped (Algorithm 1 line 3)."""
+
+    def __call__(self, grad_fn: Callable, x: jax.Array, batches) -> jax.Array:
+        return jax.vmap(lambda b: grad_fn(x, b))(batches)
+
+
+# ============================================================== compress
+@dataclasses.dataclass(frozen=True)
+class CompressStage:
+    """Base stage: identity (what FedAvg transmits)."""
+
+    key_role: str = "comp"
+
+    def _key(self, keys: RoundKeys) -> jax.Array:
+        return getattr(keys, self.key_role)
+
+    def apply(self, keys: RoundKeys, state: RoundState,
+              v: jax.Array) -> tuple[jax.Array, RoundState]:
+        return v, state
+
+
+@dataclasses.dataclass(frozen=True)
+class LDPNoise(CompressStage):
+    """Per-client clip + Gaussian perturbation (LDP-FL / SoteriaFL's
+    privacy mechanism)."""
+
+    ldp: bl.LDPConfig = bl.LDPConfig()
+    key_role: str = "noise"
+
+    def apply(self, keys, state, v):
+        return bl.ldp_perturb(self._key(keys), v, self.ldp), state
+
+
+@dataclasses.dataclass(frozen=True)
+class DSCCompress(CompressStage):
+    """Distributed shifted compression, client side (Sec. 3.2.2):
+    v_k = C(g_k - s_k);  s_k <- s_k + gamma v_k.
+
+    ``impl='pallas'`` routes a RandP compressor through the fused
+    ``kernels/dsc_update`` TPU kernel (interpret-mode on CPU): one kernel
+    sweep instead of four HBM passes on the full model vector.
+    """
+
+    compressor: Compressor = Identity()
+    gamma: float = 0.0
+    impl: str = "jnp"            # jnp | pallas
+
+    def compress(self, key: jax.Array, dsc: dsc_lib.DSCState,
+                 grads: jax.Array) -> tuple[jax.Array, dsc_lib.DSCState]:
+        if self.impl == "pallas":
+            v, s_new = self._compress_pallas(key, dsc.s_clients, grads)
+        else:
+            v, s_new = dsc_lib.client_compress(dsc, grads, self.compressor,
+                                               self.gamma, key)
+        return v, dsc._replace(s_clients=s_new)
+
+    def _compress_pallas(self, key, s_clients, grads):
+        from repro.kernels import dsc_update as dsc_kernel
+        if not isinstance(self.compressor, RandP):
+            raise ValueError("pallas DSC path needs a RandP compressor, "
+                             f"got {self.compressor.name!r}")
+        K, n = grads.shape
+        pad = (-n) % dsc_kernel.LANES
+        g = jnp.pad(grads, ((0, 0), (0, pad))).reshape(-1)
+        s = jnp.pad(s_clients, ((0, 0), (0, pad))).reshape(-1)
+        rows = g.shape[0] // dsc_kernel.LANES
+        v, s_new = dsc_kernel.dsc_update(
+            g, s, _seed_of(key), p=self.compressor.p, gamma=self.gamma,
+            block_rows=_largest_divisor(rows, dsc_kernel.BLOCK_ROWS),
+            interpret=_interpret())
+        shape = (K, n + pad)
+        return v.reshape(shape)[:, :n], s_new.reshape(shape)[:, :n]
+
+    def apply(self, keys, state, v):
+        v, dsc = self.compress(self._key(keys), state.dsc, v)
+        return v, state._replace(dsc=dsc)
+
+    def apply_leaf(self, key: jax.Array, g: jax.Array,
+                   s: jax.Array) -> tuple[jax.Array, jax.Array]:
+        """Single-client, single-leaf form for the distributed runtime
+        (each shard_map position holds its own s_k leaf)."""
+        v = self.compressor(key, g.astype(s.dtype) - s)
+        return v, s + self.gamma * v
+
+
+@dataclasses.dataclass(frozen=True)
+class EFCompress(CompressStage):
+    """EF21-style error feedback for BIASED compressors:
+    v_k = C(g_k + e_k);  e_k <- g_k + e_k - v_k."""
+
+    compressor: Compressor = Identity()
+
+    def apply(self, keys, state, v):
+        v, ef = ef_lib.client_compress(state.ef, v, self.compressor,
+                                       self._key(keys))
+        return v, state._replace(ef=ef)
+
+
+@dataclasses.dataclass(frozen=True)
+class PruneWithhold(CompressStage):
+    """PriPrune-style defense: withhold (zero) the top-|g| fraction of
+    coordinates of each client update before transmission."""
+
+    rate: float = 0.1
+
+    def apply(self, keys, state, v):
+        return bl.prune_withhold(v, self.rate), state
+
+
+@dataclasses.dataclass(frozen=True)
+class Int8Wire(CompressStage):
+    """Beyond-paper wire format: per-256-block stochastic int8
+    quantize->dequantize round trip via the Pallas ``kernels/quantize``
+    kernels (interpret-mode on CPU).  Unbiased, so it composes as an
+    omega-compressor (Def. 3.1); payload ~1.03 B/coord vs 4 B f32."""
+
+    key_role: str = "wire"
+
+    def apply(self, keys, state, v):
+        from repro.kernels import quantize as q_kernel
+        K, n = v.shape
+        pad = (-n) % q_kernel.QBLOCK
+        flat = jnp.pad(v, ((0, 0), (0, pad))).reshape(-1)
+        nb = flat.shape[0] // q_kernel.QBLOCK
+        block_b = _largest_divisor(nb, q_kernel.BLOCK_B)
+        q, scale = q_kernel.quantize(flat, _seed_of(self._key(keys)),
+                                     block_b=block_b, interpret=_interpret())
+        deq = q_kernel.dequantize(q, scale, block_b=block_b,
+                                  interpret=_interpret())
+        return deq.reshape(K, n + pad)[:, :n], state
+
+
+# ============================================================== aggregate
+class AggregateResult(NamedTuple):
+    update: jax.Array                    # aggregated pseudo-gradient (n,)
+    state: RoundState
+    views: Optional[jax.Array] = None    # adversary-view override
+
+
+@dataclasses.dataclass(frozen=True)
+class AggregateStage:
+    """Base: exact weighted mean — FedAvg's all-reduce, equivalently FSA's
+    algebraic form (Theorem B.1: all_reduce == all_gather . reduce_scatter
+    over disjoint complete masks)."""
+
+    use_weights: bool = True
+    key_role: str = "comp"
+
+    def _key(self, keys: RoundKeys) -> jax.Array:
+        return getattr(keys, self.key_role)
+
+    def _w(self, v: jax.Array, weights) -> jax.Array:
+        K = v.shape[0]
+        if weights is None or not self.use_weights:
+            return jnp.full((K,), 1.0 / K)
+        return weights / weights.sum()
+
+    def mean(self, v: jax.Array, weights) -> jax.Array:
+        return jnp.einsum("k,kn->n", self._w(v, weights), v)
+
+    def apply(self, keys: RoundKeys, state: RoundState, v: jax.Array,
+              weights) -> AggregateResult:
+        return AggregateResult(self.mean(v, weights), state)
+
+
+@dataclasses.dataclass(frozen=True)
+class DSCAggregate(AggregateStage):
+    """Aggregator-side shift compensation (Eq. 4):
+    u = s_agg + mean_k v_k;  s_agg <- s_agg + gamma mean_k v_k."""
+
+    gamma: float = 0.0
+
+    def aggregate(self, dsc: dsc_lib.DSCState, v: jax.Array, weights
+                  ) -> tuple[jax.Array, dsc_lib.DSCState]:
+        u, s_agg = dsc_lib.aggregate(
+            dsc, v, self.gamma, weights=weights if self.use_weights else None)
+        return u, dsc._replace(s_agg=s_agg)
+
+    def apply(self, keys, state, v, weights):
+        u, dsc = self.aggregate(state.dsc, v, weights)
+        return AggregateResult(u, state._replace(dsc=dsc))
+
+
+@dataclasses.dataclass(frozen=True)
+class FSASharded(AggregateStage):
+    """Literal Algorithm 1 lines 5-13: materialize per-aggregator masked
+    shards, aggregate each independently, reassemble.  Iterate-identical
+    to the algebraic mean (Theorem B.1) but also exposes the
+    honest-but-curious aggregator views — the privacy-eval path."""
+
+    A: int = 4
+    mask_scheme: str = "strided"
+    keep_views: bool = True
+
+    def apply(self, keys, state, v, weights):
+        n = v.shape[1]
+        assign = masks_lib.make_assignment(n, self.A, self.mask_scheme)
+        out = fsa_lib.fsa_round_sharded(
+            jnp.zeros(n), v, assign, self.A, 1.0,
+            weights=weights if self.use_weights else None,
+            keep_views=self.keep_views)
+        return AggregateResult(-out.x_new, state, out.shard_views)
+
+
+@dataclasses.dataclass(frozen=True)
+class SecureAggAggregate(AggregateStage):
+    """Bonawitz-style pairwise masking: the aggregate is the exact mean,
+    the adversary view is the masked per-client updates."""
+
+    def apply(self, keys, state, v, weights):
+        masked = sa_lib.mask_updates(self._key(keys), v)
+        return AggregateResult(masked.mean(0), state, masked)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShatterAggregate(AggregateStage):
+    """ShatterLite: coordinates in contiguous chunks, each chunk averaged
+    over a random r-subset of clients (gossip-neighborhood approximation;
+    intentionally deviates from the full mean)."""
+
+    chunks: int = 8
+    r: int = 4
+
+    def apply(self, keys, state, v, weights):
+        u = bl.shatter_update(self._key(keys), v, self.chunks, self.r)
+        return AggregateResult(u, state)
+
+
+@dataclasses.dataclass(frozen=True)
+class FailureInjectedFSA(AggregateStage):
+    """Appendix F.5: aggregator dropout + client->aggregator link failures
+    on the transmitted shards; DSC shift compensation (when enabled) uses
+    what the aggregators actually received."""
+
+    A: int = 4
+    mask_scheme: str = "strided"
+    agg_dropout: float = 0.0
+    link_failure: float = 0.0
+    use_dsc: bool = False
+    gamma: float = 0.0
+    key_role: str = "fail"
+
+    def apply(self, keys, state, v, weights):
+        K, n = v.shape
+        assign = masks_lib.make_assignment(n, self.A, self.mask_scheme)
+        ka, kl = jax.random.split(self._key(keys))
+        agg_alive = jax.random.bernoulli(ka, 1.0 - self.agg_dropout,
+                                         (self.A,))
+        link_alive = jax.random.bernoulli(kl, 1.0 - self.link_failure,
+                                          (K, self.A))
+        x_acc = fsa_lib.fsa_round_with_failures(
+            jnp.zeros(n), v, assign, self.A, 1.0, agg_alive, link_alive)
+        mean_v = -x_acc
+        dsc = state.dsc
+        if self.use_dsc:
+            u = dsc.s_agg + mean_v
+            dsc = dsc._replace(s_agg=dsc.s_agg + self.gamma * mean_v)
+        else:
+            u = mean_v
+        return AggregateResult(u, state._replace(dsc=dsc))
+
+
+# ================================================================= server
+@dataclasses.dataclass(frozen=True)
+class ServerStage:
+    """Global model update from the aggregated pseudo-gradient.  Under FSA
+    every aggregator runs the same coordinate-wise optimizer on its
+    disjoint segment == the centralized update (Sec. 5 'Benefits')."""
+
+    opt: str = "fedavg"          # fedavg | fedadam | fedyogi
+    lr: float = 0.1
+
+    def make(self) -> so_lib.ServerOpt:
+        return so_lib.get_server_opt(self.opt, self.lr)
+
+    def init(self, x0: jax.Array):
+        return self.make().init(x0)
+
+    def apply(self, state: RoundState, u: jax.Array) -> RoundState:
+        delta, sstate = self.make().update(u, state.server)
+        return state._replace(x=state.x + delta, server=sstate)
+
+
+# =============================================================== pipeline
+@dataclasses.dataclass(frozen=True)
+class RoundPipeline:
+    """One FL method, declaratively: client -> compress* -> aggregate ->
+    server.  ``view`` names what an adversary observes: the transmitted
+    per-client vectors, an aggregate-stage override, or nothing."""
+
+    client: ClientStep = ClientStep()
+    compress: tuple[CompressStage, ...] = ()
+    aggregate: AggregateStage = AggregateStage()
+    server: ServerStage = ServerStage()
+    view: str = "none"           # none | transmitted
+
+    def init_state(self, x0: jax.Array, K: int) -> RoundState:
+        n = x0.shape[0]
+        return RoundState(x0, dsc_lib.init_state(K, n),
+                          ef_lib.init_state(K, n), self.server.init(x0))
+
+    def run_round(self, grad_fn: Callable, keys: RoundKeys,
+                  state: RoundState, batches, weights=None
+                  ) -> tuple[RoundState, Optional[jax.Array]]:
+        """One round.  Returns (new_state, adversary_views)."""
+        grads = self.client(grad_fn, state.x, batches)
+        v = grads
+        for stage in self.compress:
+            v, state = stage.apply(keys, state, v)
+        agg = self.aggregate.apply(keys, state, v, weights)
+        state = self.server.apply(agg.state, agg.update)
+        views = agg.views if agg.views is not None else (
+            v if self.view == "transmitted" else None)
+        return state, views
+
+    def scan_rounds(self, grad_fn: Callable, key: jax.Array,
+                    state: RoundState, batches_stacked, weights=None,
+                    participation: float = 1.0
+                    ) -> tuple[RoundState, jax.Array]:
+        """All T rounds as ONE compiled program: ``jax.lax.scan`` over the
+        leading (round) axis of ``batches_stacked``.  Key handling matches
+        the per-round driver (split the carry key once per round), so the
+        trajectory is identical to stepping — just without T dispatches
+        and T retrace-sized XLA programs.  Returns (final_key, final_state,
+        x_traj) with final_key advanced exactly as T step calls would."""
+        K = state.dsc.s_clients.shape[0]
+
+        def body(carry, batches_t):
+            k, st = carry
+            k, sub = jax.random.split(k)
+            keys = split_round_keys(sub)
+            w = weights if weights is not None else \
+                participation_weights(keys.part, K, participation)
+            st, _ = self.run_round(grad_fn, keys, st, batches_t, w)
+            return (k, st), st.x
+
+        (key, state), xs = jax.lax.scan(body, (key, state), batches_stacked)
+        return key, state, xs

@@ -48,13 +48,17 @@ def mia_audit(key: jax.Array,
               ) -> dict:
     """Gradient-alignment membership inference.
 
-    For each canary c, score = sum_t cos(view^t|_obs, g~(x^t, c)|_obs)
+    For each canary c, score = sum_t <g~(x^t, c)|_obs, view^t|_obs> / ||view^t|_obs||
     where g~ is the canary gradient CALIBRATED by subtracting the mean
     gradient over all canaries (removes the shared non-member component,
-    the same debiasing idea as Steinke et al.'s paired auditing).
-    Members (whose gradients actually entered the observed update) score
-    higher.  Returns AUC-style pairwise accuracy and balanced accuracy at
-    the median threshold — the metric family used for Fig. 2 trends.
+    the same debiasing idea as Steinke et al.'s paired auditing).  Only
+    the *view* is normalized (scale-stabilizes across rounds); the canary
+    gradient's magnitude is deliberately kept — how strongly a canary
+    still pulls on the model is itself membership signal, and dividing it
+    out (a plain cosine) measurably weakens the audit.  Members (whose
+    gradients actually entered the observed update) score higher.
+    Returns AUC-style pairwise accuracy and balanced accuracy at the
+    median threshold — the metric family used for Fig. 2 trends.
     """
     del key
     n_in = canaries_in.shape[0]
@@ -64,8 +68,7 @@ def mia_audit(key: jax.Array,
         g = jax.vmap(lambda c: grad_fn(x_t, c))(all_c) * obs_mask
         g = g - g.mean(0, keepdims=True)           # calibration
         v = v_t * obs_mask
-        denom = jnp.linalg.norm(g, axis=1) * jnp.linalg.norm(v) + 1e-12
-        return (g @ v) / denom
+        return (g @ v) / (jnp.linalg.norm(v) + 1e-12)
 
     scores = jax.vmap(per_round)(x_traj, views).sum(0)
     s_in, s_out = scores[:n_in], scores[n_in:]

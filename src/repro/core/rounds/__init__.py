@@ -1,0 +1,2 @@
+"""Declarative FL method registry: method name -> RoundPipeline."""
+from repro.core.rounds.registry import METHODS, build_round  # noqa: F401

@@ -1,0 +1,153 @@
+"""Method registry: every ``FLConfig.method`` as a declarative stage
+composition (no engine branches).
+
+Reading this file IS the paper's Table-1 comparison:
+
+  method       compress                 aggregate               server
+  ----------   ----------------------   ---------------------   -------
+  fedavg       (identity)               weighted mean            -lr*u
+  min_leakage  (identity)               weighted mean            -lr*u
+  fedavg_ldp   LDP noise                mean                     -lr*u
+  soteriafl    [LDP noise +] DSC        DSC shift-compensated    -lr*u
+  priprune     top-|g| withholding      mean                     -lr*u
+  shatter      (identity)               chunked r-subset         -lr*u
+  secure_agg   (identity)               pairwise-masked mean     -lr*u
+  eris         [DSC | EF | -] [+int8]   FSA (DSC-compensated /   fedavg |
+                                        failure-injected)        fedadam |
+                                                                 fedyogi
+
+Builders take (cfg: FLConfig, n: int) duck-typed — anything with the
+FLConfig fields works — and return a frozen RoundPipeline.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+from repro.core import baselines as bl
+from repro.core import dsc as dsc_lib
+from repro.core.compressors import Int8RoundTrip
+from repro.core.pipeline import (AggregateStage, ClientStep, DSCAggregate,
+                                 DSCCompress, EFCompress, FailureInjectedFSA,
+                                 Int8Wire, LDPNoise, PruneWithhold,
+                                 RoundPipeline, SecureAggAggregate,
+                                 ServerStage, ShatterAggregate)
+
+
+def _gamma(cfg, n: int) -> float:
+    if cfg.gamma is not None:
+        return cfg.gamma
+    if getattr(cfg, "use_dsc", False):
+        return dsc_lib.gamma_star(cfg.compressor.omega(n))
+    return 0.0
+
+
+def _fedavg_server(cfg) -> ServerStage:
+    return ServerStage(opt="fedavg", lr=cfg.lr)
+
+
+def _build_fedavg(cfg, n):
+    return RoundPipeline(aggregate=AggregateStage(use_weights=True),
+                         server=_fedavg_server(cfg), view="transmitted")
+
+
+def _build_min_leakage(cfg, n):
+    # FedAvg iterates; the adversary sees only the final model.
+    return RoundPipeline(aggregate=AggregateStage(use_weights=True),
+                         server=_fedavg_server(cfg), view="none")
+
+
+def _build_fedavg_ldp(cfg, n):
+    return RoundPipeline(
+        compress=(LDPNoise(ldp=cfg.ldp or bl.LDPConfig(), key_role="noise"),),
+        aggregate=AggregateStage(use_weights=False),
+        server=_fedavg_server(cfg), view="transmitted")
+
+
+def _build_soteriafl(cfg, n):
+    gamma = cfg.gamma if cfg.gamma is not None else \
+        dsc_lib.gamma_star(cfg.compressor.omega(n))
+    stages: tuple = ()
+    if cfg.ldp is not None:
+        stages += (LDPNoise(ldp=cfg.ldp, key_role="comp0"),)
+    stages += (DSCCompress(compressor=cfg.compressor, gamma=gamma,
+                           key_role="comp1"),)
+    return RoundPipeline(
+        compress=stages,
+        aggregate=DSCAggregate(gamma=gamma, use_weights=False),
+        server=_fedavg_server(cfg), view="none")
+
+
+def _build_priprune(cfg, n):
+    return RoundPipeline(compress=(PruneWithhold(rate=cfg.prune_rate),),
+                         aggregate=AggregateStage(use_weights=False),
+                         server=_fedavg_server(cfg), view="none")
+
+
+def _build_shatter(cfg, n):
+    return RoundPipeline(
+        aggregate=ShatterAggregate(chunks=cfg.shatter_chunks,
+                                   r=cfg.shatter_r, key_role="comp"),
+        server=_fedavg_server(cfg), view="none")
+
+
+def _build_secure_agg(cfg, n):
+    return RoundPipeline(aggregate=SecureAggAggregate(key_role="comp"),
+                         server=_fedavg_server(cfg), view="none")
+
+
+def _build_eris(cfg, n):
+    gamma = _gamma(cfg, n)
+    int8 = getattr(cfg, "int8_wire", False)
+    compressor = cfg.compressor
+    impl = getattr(cfg, "compress_impl", "jnp")
+    if int8 and (cfg.use_dsc or cfg.use_ef):
+        # wire format INSIDE the shifted/error-feedback compressor, so the
+        # client references update with exactly what aggregators receive
+        # (otherwise s_agg random-walks away from mean_k s_k).  The fused
+        # pallas DSC kernel computes a bare RandP; the composed compressor
+        # needs the jnp path.
+        compressor = Int8RoundTrip(inner=compressor)
+        impl = "jnp"
+    compress: tuple = ()
+    if cfg.use_dsc:
+        compress += (DSCCompress(compressor=compressor, gamma=gamma,
+                                 key_role="comp", impl=impl),)
+    elif cfg.use_ef:
+        compress += (EFCompress(compressor=compressor, key_role="comp"),)
+    elif int8:
+        compress += (Int8Wire(key_role="wire"),)
+    if cfg.agg_dropout > 0 or cfg.link_failure > 0:
+        aggregate = FailureInjectedFSA(
+            A=cfg.A, mask_scheme=cfg.mask_scheme,
+            agg_dropout=cfg.agg_dropout, link_failure=cfg.link_failure,
+            use_dsc=cfg.use_dsc, gamma=gamma, key_role="fail")
+    elif cfg.use_dsc:
+        aggregate = DSCAggregate(gamma=gamma, use_weights=True)
+    else:
+        aggregate = AggregateStage(use_weights=True)
+    return RoundPipeline(client=ClientStep(), compress=compress,
+                         aggregate=aggregate,
+                         server=ServerStage(opt=cfg.server_opt, lr=cfg.lr),
+                         view="transmitted")
+
+
+METHODS: dict[str, Callable] = {
+    "fedavg": _build_fedavg,
+    "min_leakage": _build_min_leakage,
+    "fedavg_ldp": _build_fedavg_ldp,
+    "soteriafl": _build_soteriafl,
+    "priprune": _build_priprune,
+    "shatter": _build_shatter,
+    "secure_agg": _build_secure_agg,
+    "eris": _build_eris,
+}
+
+
+def build_round(cfg, n: int) -> RoundPipeline:
+    """FLConfig -> declarative round pipeline for its method."""
+    try:
+        builder = METHODS[cfg.method]
+    except KeyError:
+        raise ValueError(f"unknown method {cfg.method!r} "
+                         f"(have {sorted(METHODS)})") from None
+    return builder(cfg, n)

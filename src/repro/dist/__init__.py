@@ -1,0 +1,2 @@
+"""Distributed layout policy: mesh axes, FSA scatter dims, shardings."""
+from repro.dist import sharding  # noqa: F401

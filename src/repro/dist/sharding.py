@@ -1,0 +1,175 @@
+"""Sharding policy for the distributed FSA runtime (Section 3.2.1 on a mesh).
+
+The mesh has two kinds of axes:
+
+* **client axes** (``pod``/``data``) — every position is one FSA
+  *aggregator*: it owns a disjoint segment of each parameter ("store"
+  layout), receives exactly that segment of every client update via
+  ``psum_scatter`` (Eq. 2), and runs the shard-local optimizer on it.
+* **model axis** — tensor parallelism inside each client group, left to
+  GSPMD ("use" layout).
+
+The segment-of-a-parameter choice is the *scatter dim*: for each leaf we
+pick the rightmost dimension divisible by the number of aggregators; a
+leaf with no such dimension is replicated and aggregated with a full
+``psum`` (always correct, never sharded).  This mirrors the coordinate
+partition masks of ``repro.core.masks`` at tensor granularity: the set of
+(leaf, slice) pairs owned by aggregator ``a`` IS the mask m_(a) —
+disjoint and complete by construction (Theorem B.1 applies unchanged).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+# ------------------------------------------------------------------ axes
+def client_axes(mesh: Mesh) -> tuple[str, ...]:
+    """Mesh axes enumerating FSA aggregators (everything but 'model')."""
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def client_count(mesh: Mesh) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return int(np.prod([sizes[a] for a in client_axes(mesh)]))
+
+
+def _caxis(mesh: Mesh):
+    ca = client_axes(mesh)
+    return ca if len(ca) > 1 else ca[0]
+
+
+def _model_size(mesh: Mesh) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return int(sizes.get("model", 1))
+
+
+# ----------------------------------------------------------- scatter dims
+def _abstract_params(cfg):
+    import functools
+    from repro.models import transformer as tr
+    return jax.eval_shape(functools.partial(tr.init_params, cfg=cfg),
+                          jax.random.PRNGKey(0))
+
+
+def scatter_dim_for(shape: tuple[int, ...], n_client: int) -> int:
+    """Rightmost dim divisible by n_client, else -1 (replicate + psum)."""
+    for d in range(len(shape) - 1, -1, -1):
+        if shape[d] >= n_client and shape[d] % n_client == 0:
+            return d
+    return -1
+
+
+def fsa_scatter_dims(cfg, mesh: Mesh) -> Any:
+    """Per-leaf scatter dim for the FSA reduce-scatter / shard-local
+    optimizer (pytree of ints matching the param tree)."""
+    n_client = client_count(mesh)
+    params = _abstract_params(cfg)
+    return jax.tree.map(lambda p: scatter_dim_for(p.shape, n_client), params)
+
+
+# -------------------------------------------------------------- shardings
+def _spec_with(dim: int, axes) -> P:
+    if dim < 0:
+        return P()
+    parts: list = [None] * (dim + 1)
+    parts[dim] = axes
+    return P(*parts)
+
+
+def _use_spec(shape: tuple[int, ...], model: int) -> P:
+    """Tensor-parallel placement hint: rightmost dim divisible by the
+    model-axis size (GSPMD inserts whatever collectives remain)."""
+    if model <= 1:
+        return P()
+    for d in range(len(shape) - 1, -1, -1):
+        if shape[d] >= model and shape[d] % model == 0:
+            return _spec_with(d, "model")
+    return P()
+
+
+def param_shardings(cfg, mesh: Mesh, mode: str = "store") -> Any:
+    """NamedShardings for the parameter tree.
+
+    * ``store`` — FSA layout: each leaf split over the client axes at its
+      scatter dim (aggregator a owns segment a); leaves with no scatter
+      dim replicated.
+    * ``use``   — serving/compute layout: replicated over client axes,
+      tensor-parallel over 'model' where divisible.
+    """
+    params = _abstract_params(cfg)
+    if mode == "store":
+        caxis = _caxis(mesh)
+        dims = fsa_scatter_dims(cfg, mesh)
+        return jax.tree.map(
+            lambda p, d: NamedSharding(mesh, _spec_with(d, caxis)),
+            params, dims)
+    if mode == "use":
+        model = _model_size(mesh)
+        return jax.tree.map(
+            lambda p: NamedSharding(mesh, _use_spec(p.shape, model)), params)
+    raise ValueError(f"unknown param layout {mode!r}")
+
+
+def batch_shardings(cfg, mesh: Mesh, batch: Any) -> Any:
+    """Batch inputs: leading (batch) dim over the client axes — each
+    aggregator position trains its own client group's shard."""
+    caxis = _caxis(mesh)
+
+    def one(leaf):
+        if getattr(leaf, "ndim", 0) == 0:
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, P(caxis))
+
+    return jax.tree.map(one, batch)
+
+
+def cache_shardings(cfg, mesh: Mesh, cache: Any) -> Any:
+    """Decode caches: (layer, batch, ...) leaves shard batch (dim 1) over
+    the client axes."""
+    caxis = _caxis(mesh)
+
+    def one(leaf):
+        if getattr(leaf, "ndim", 0) < 2:
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, P(None, caxis))
+
+    return jax.tree.map(one, cache)
+
+
+def mirror_state_specs(params_abs: Any, param_leaf_specs: list,
+                       state_abs: Any, default: P) -> Any:
+    """Specs for an optimizer-state tree that mirrors the parameter tree
+    leaf-wise (e.g. Adam mu/nu).  State leaves are matched positionally —
+    leaf i of each params-shaped sub-tree gets param spec i — and
+    anything that doesn't mirror a parameter (step counters, scalars)
+    gets ``default``."""
+    p_shapes = [tuple(p.shape) for p in jax.tree.leaves(params_abs)]
+    n = len(p_shapes)
+    leaves, treedef = jax.tree.flatten(state_abs)
+    out, i = [], 0
+    for leaf in leaves:
+        shape = tuple(getattr(leaf, "shape", ()))
+        if n and shape == p_shapes[i % n]:
+            out.append(param_leaf_specs[i % n])
+            i += 1
+        else:
+            out.append(default)
+    return jax.tree.unflatten(treedef, out)
+
+
+def opt_state_shardings(cfg, mesh: Mesh, opt, params_abs: Any) -> Any:
+    """Global-view NamedShardings for the optimizer state (mirrors the
+    'store' parameter layout; scalars replicated)."""
+    store = param_shardings(cfg, mesh, "store")
+    state_abs = jax.eval_shape(opt.init, params_abs)
+    specs = mirror_state_specs(
+        params_abs,
+        [s.spec for s in jax.tree.leaves(
+            store, is_leaf=lambda x: isinstance(x, NamedSharding))],
+        state_abs, P())
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))

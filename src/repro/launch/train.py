@@ -32,6 +32,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core.compressors import RandP
+from repro.core.pipeline import DSCCompress
 from repro.dist import sharding as sh
 from repro.launch import shapes as shp
 from repro.models import transformer as tr
@@ -49,10 +51,28 @@ class TrainSettings:
     fsa: bool = True                 # False => FedAvg all-reduce baseline
 
 
+def dsc_stage(settings: TrainSettings) -> DSCCompress:
+    """The simulator's DSC compression stage, shared verbatim by the
+    distributed runtime (one DSC implementation, zero drift)."""
+    return DSCCompress(compressor=RandP(p=settings.dsc_p),
+                       gamma=settings.dsc_gamma)
+
+
 def _client_size(mesh: Mesh) -> int:
-    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
-    import numpy as np
-    return int(np.prod([sizes[a] for a in sh.client_axes(mesh)]))
+    return sh.client_count(mesh)
+
+
+def _shard_map(f, mesh: Mesh, in_specs, out_specs, manual_axes):
+    """shard_map with the non-'model' axes manual, compatible with both
+    the jax>=0.5 top-level API and the 0.4.x experimental one."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs,
+                             axis_names=set(manual_axes), check_vma=False)
+    from jax.experimental.shard_map import shard_map as _sm
+    auto = frozenset(mesh.axis_names) - set(manual_axes)
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False, auto=auto)
 
 
 def make_train_step(cfg: ModelConfig, mesh: Mesh, opt: Optimizer,
@@ -68,29 +88,32 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh, opt: Optimizer,
         return tr.loss_fn(params, cfg, batch)
 
     # ---------------- the manual (per-client-axis-position) body ----------
-    def fsa_body(params, opt_state, dsc_ref, batch, key):
+    def fsa_body(aidx_arr, params, opt_state, dsc_ref, batch, key):
         # params arrive replicated over client axes (the all-gather /
         # broadcast happened at the shard_map boundary); batch is this
-        # client group's shard.
+        # client group's shard.  aidx_arr is this position's slice of
+        # arange(n_client) — the aggregator id (axis_index lowers to an
+        # unsupported PartitionId under partial-auto SPMD, so it rides in
+        # as a sharded input instead).
+        aidx = aidx_arr[0]
         loss_val, grads = jax.value_and_grad(loss_fn)(params, batch)
         loss_val = jax.lax.pmean(loss_val, caxis)
 
         if settings.use_dsc:
-            # client-side DSC on the local update, before transmission.
-            # dsc_ref leaves are client-stacked (n_client, *param_shape),
-            # so each client-axis position holds its OWN s_k (local (1,...)).
-            aidx = jax.lax.axis_index(caxis)
+            # client-side shifted compression (Sec. 3.2.2) on the local
+            # update, before transmission — the SAME DSCCompress stage the
+            # simulator pipeline runs, applied leaf-wise.  dsc_ref leaves
+            # are client-stacked (n_client, *param_shape), so each
+            # client-axis position holds its OWN s_k (local (1, ...)).
+            stage = dsc_stage(settings)
             leaves, treedef = jax.tree.flatten(grads)
             refs = jax.tree.leaves(dsc_ref)
             vs, refs_new = [], []
             for i, (g, s_stk) in enumerate(zip(leaves, refs)):
-                s = s_stk[0]
                 k = jax.random.fold_in(jax.random.fold_in(key, i), aidx)
-                mask = jax.random.bernoulli(k, settings.dsc_p, g.shape)
-                v = jnp.where(mask, (g.astype(s.dtype) - s) / settings.dsc_p,
-                              0.0)
+                v, s_new = stage.apply_leaf(k, g, s_stk[0])
                 vs.append(v.astype(g.dtype))
-                refs_new.append((s + settings.dsc_gamma * v)[None])
+                refs_new.append(s_new[None])
             grads = jax.tree.unflatten(treedef, vs)
             dsc_ref = jax.tree.unflatten(treedef, refs_new)
 
@@ -114,8 +137,8 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh, opt: Optimizer,
             if not settings.fsa or dim < 0:
                 return p
             size = p.shape[dim] // n_client
-            idx = jax.lax.axis_index(caxis) * size
-            return jax.lax.dynamic_slice_in_dim(p, idx, size, axis=dim)
+            return jax.lax.dynamic_slice_in_dim(p, aidx * size, size,
+                                                axis=dim)
 
         params_shard = (jax.tree.map(my_shard, params, scatter_dims)
                         if settings.fsa else params)
@@ -159,16 +182,18 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh, opt: Optimizer,
 
     def make_step():
         def step(params_stored, opt_state, dsc_ref, batch, key):
-            in_specs = (jax.tree.map(lambda _: P(), params_abs),  # broadcast
+            in_specs = (P(caxis),                                 # aidx
+                        jax.tree.map(lambda _: P(), params_abs),  # broadcast
                         opt_specs, dsc_specs,
                         jax.tree.map(lambda _: batch_spec_leaf, batch),
                         P())
             out_specs = (param_specs, opt_specs, dsc_specs,
                          {"loss": P(), "grad_norm": P()})
-            fn = jax.shard_map(fsa_body, mesh=mesh,
-                               in_specs=in_specs, out_specs=out_specs,
-                               axis_names=set(ca), check_vma=False)
-            return fn(params_stored, opt_state, dsc_ref, batch, key)
+            fn = _shard_map(fsa_body, mesh,
+                            in_specs=in_specs, out_specs=out_specs,
+                            manual_axes=ca)
+            return fn(jnp.arange(n_client, dtype=jnp.int32),
+                      params_stored, opt_state, dsc_ref, batch, key)
         return step
 
     return make_step(), {"store": store,

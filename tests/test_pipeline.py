@@ -1,0 +1,288 @@
+"""Stage-pipeline refactor safety net.
+
+1. Per-method parity: every ``FLConfig.method`` trajectory through the
+   declarative RoundPipeline matches a frozen copy of the pre-refactor
+   monolithic round (the seed engine's if/elif chain, reproduced verbatim
+   below as ``SeedReference``) — allclose over 20 rounds, including
+   adversary views.
+2. Driver parity: the scan-compiled multi-round driver produces the same
+   trajectory as the per-round step driver.
+3. Kernel-backed stages (pallas DSC / int8 wire) run and train.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import baselines as bl
+from repro.core import dsc as dsc_lib
+from repro.core import error_feedback as ef_lib
+from repro.core import fsa as fsa_lib
+from repro.core import masks as masks_lib
+from repro.core import secure_agg as sa_lib
+from repro.core import server_opt as so_lib
+from repro.core.compressors import QSGD, RandP, TopK
+from repro.core.fl import FLConfig, FLRun, run_fl, run_fl_scan
+from repro.data import federated_classification
+
+KEY = jax.random.PRNGKey(0)
+DIM, CLASSES, K, S = 8, 3, 6, 32
+
+
+def init_mlp(key, dim=DIM, hidden=16, classes=CLASSES):
+    k1, k2 = jax.random.split(key)
+    return {"w1": 0.3 * jax.random.normal(k1, (dim, hidden)),
+            "b1": jnp.zeros(hidden),
+            "w2": 0.3 * jax.random.normal(k2, (hidden, classes)),
+            "b2": jnp.zeros(classes)}
+
+
+def loss_fn(params, batch):
+    x, y = batch
+    h = jnp.tanh(x @ params["w1"] + params["b1"])
+    logits = h @ params["w2"] + params["b2"]
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.take_along_axis(logp, y[:, None], 1).mean()
+
+
+@pytest.fixture(scope="module")
+def data():
+    return federated_classification(KEY, K, S, dim=DIM, n_classes=CLASSES)
+
+
+class SeedReference:
+    """Frozen copy of the pre-pipeline ``FLRun`` round (the monolithic
+    if/elif engine this PR deleted).  DO NOT refactor this class to use
+    the pipeline — its whole point is to be the independent oracle."""
+
+    def __init__(self, cfg: FLConfig, params0, loss_fn):
+        from jax.flatten_util import ravel_pytree
+        self.cfg = cfg
+        flat0, self.unravel = ravel_pytree(params0)
+        self.n = flat0.shape[0]
+        self.x = flat0
+        self.key = jax.random.PRNGKey(cfg.seed)
+        self._grad = jax.grad(lambda x, b: loss_fn(self.unravel(x), b))
+        self.dsc = dsc_lib.init_state(cfg.K, self.n)
+        self.ef = ef_lib.init_state(cfg.K, self.n)
+        self.server = so_lib.get_server_opt(cfg.server_opt, cfg.lr)
+        self.server_state = self.server.init(flat0)
+        self._round = jax.jit(self._round_impl)
+
+    def _round_impl(self, key, x, dsc, ef, server_state, batches):
+        cfg = self.cfg
+        grads = jax.vmap(lambda b: self._grad(x, b))(batches)
+        k_m, k_c, k_n, k_f, k_p = jax.random.split(key, 5)
+        views = None
+        ef_new = ef
+        if cfg.participation < 1.0:
+            part = jax.random.bernoulli(k_p, cfg.participation, (cfg.K,))
+            part = part.at[jax.random.randint(k_p, (), 0, cfg.K)].set(True)
+            weights = part.astype(jnp.float32)
+        else:
+            weights = None
+        if cfg.method in ("fedavg", "min_leakage"):
+            x_new, dsc_new = bl.fedavg_round(x, grads, cfg.lr,
+                                             weights=weights), dsc
+            views = grads if cfg.method == "fedavg" else None
+        elif cfg.method == "secure_agg":
+            x_new, views = sa_lib.secure_agg_round(k_c, x, grads, cfg.lr)
+            dsc_new = dsc
+        elif cfg.method == "fedavg_ldp":
+            noised = bl.ldp_perturb(k_n, grads, cfg.ldp or bl.LDPConfig())
+            x_new, dsc_new, views = bl.fedavg_round(x, noised, cfg.lr), dsc, \
+                noised
+        elif cfg.method == "soteriafl":
+            gamma = cfg.gamma if cfg.gamma is not None else \
+                dsc_lib.gamma_star(cfg.compressor.omega(self.n))
+            x_new, st = bl.soteriafl_round(
+                k_c, x, grads, cfg.lr, bl.SoteriaState(dsc),
+                cfg.compressor, gamma, cfg.ldp)
+            dsc_new, views = st.dsc, None
+        elif cfg.method == "priprune":
+            x_new, dsc_new = bl.priprune_round(x, grads, cfg.lr,
+                                               cfg.prune_rate), dsc
+        elif cfg.method == "shatter":
+            x_new, dsc_new = bl.shatter_round(
+                k_c, x, grads, cfg.lr, cfg.shatter_chunks, cfg.shatter_r), dsc
+        elif cfg.method == "eris":
+            gamma = cfg.gamma if cfg.gamma is not None else (
+                dsc_lib.gamma_star(cfg.compressor.omega(self.n))
+                if cfg.use_dsc else 0.0)
+            if cfg.use_dsc:
+                v, s_clients = dsc_lib.client_compress(
+                    dsc, grads, cfg.compressor, gamma, k_c)
+            elif cfg.use_ef:
+                v, ef_new = ef_lib.client_compress(ef, grads,
+                                                   cfg.compressor, k_c)
+                s_clients = dsc.s_clients
+            else:
+                v, s_clients = grads, dsc.s_clients
+            assign = masks_lib.make_assignment(self.n, cfg.A, cfg.mask_scheme)
+            if cfg.agg_dropout > 0 or cfg.link_failure > 0:
+                ka, kl = jax.random.split(k_f)
+                agg_alive = jax.random.bernoulli(
+                    ka, 1.0 - cfg.agg_dropout, (cfg.A,))
+                link_alive = jax.random.bernoulli(
+                    kl, 1.0 - cfg.link_failure, (cfg.K, cfg.A))
+                x_acc = fsa_lib.fsa_round_with_failures(
+                    jnp.zeros(self.n), v, assign, cfg.A, 1.0,
+                    agg_alive, link_alive)
+                mean_v = -x_acc
+                v_global = (dsc.s_agg + mean_v) if cfg.use_dsc else mean_v
+                s_agg = dsc.s_agg + gamma * mean_v if cfg.use_dsc \
+                    else dsc.s_agg
+            else:
+                v_global, s_agg = dsc_lib.aggregate(
+                    dsc if cfg.use_dsc else dsc._replace(
+                        s_agg=jnp.zeros_like(dsc.s_agg)), v, gamma,
+                    weights=weights)
+                if not cfg.use_dsc:
+                    s_agg = dsc.s_agg
+            if cfg.server_opt != "fedavg":
+                delta, server_state = self.server.update(v_global,
+                                                         server_state)
+                x_new = x + delta
+            else:
+                x_new = x - cfg.lr * v_global
+            dsc_new = dsc_lib.DSCState(s_clients, s_agg)
+            views = v
+        else:
+            raise ValueError(cfg.method)
+        return x_new, dsc_new, ef_new, server_state, views
+
+    def step(self, batches):
+        self.key, sub = jax.random.split(self.key)
+        x, dsc, ef, sstate, views = self._round(
+            sub, self.x, self.dsc, self.ef, self.server_state, batches)
+        self.x, self.dsc, self.ef, self.server_state = x, dsc, ef, sstate
+        return views
+
+
+CASES = [
+    ("fedavg", {}),
+    ("min_leakage", {}),
+    ("secure_agg", {}),
+    ("fedavg_ldp", {"ldp": bl.LDPConfig(eps=10.0, clip=5.0)}),
+    ("soteriafl", {"compressor": RandP(p=0.3)}),
+    ("soteriafl", {"compressor": RandP(p=0.3),
+                   "ldp": bl.LDPConfig(eps=10.0, clip=5.0)}),
+    ("priprune", {"prune_rate": 0.05}),
+    ("shatter", {"shatter_chunks": 4, "shatter_r": 3}),
+    ("eris", {"A": 4}),
+    ("eris", {"A": 4, "use_dsc": True, "compressor": RandP(p=0.3)}),
+    ("eris", {"A": 4, "use_dsc": True, "compressor": QSGD(s=8),
+              "participation": 0.5}),
+    ("eris", {"A": 4, "use_ef": True, "compressor": TopK(k=16)}),
+    ("eris", {"A": 8, "agg_dropout": 0.3, "link_failure": 0.2, "seed": 3}),
+    ("eris", {"A": 8, "agg_dropout": 0.3, "use_dsc": True,
+              "compressor": RandP(p=0.5), "seed": 3}),
+    ("eris", {"A": 4, "server_opt": "fedadam", "lr": 0.05}),
+    ("eris", {"A": 4, "server_opt": "fedyogi", "lr": 0.05}),
+    ("eris", {"A": 4, "participation": 0.5}),
+]
+
+
+@pytest.mark.parametrize("method,kw", CASES)
+def test_pipeline_matches_seed_engine(data, method, kw):
+    """Trajectory + adversary-view parity of the declarative pipeline vs
+    the frozen monolithic round, 20 rounds."""
+    kwargs = dict(method=method, K=K, rounds=20, lr=0.3)
+    kwargs.update(kw)
+    cfg = FLConfig(**kwargs)
+    new = FLRun(cfg, init_mlp(KEY), loss_fn)
+    ref = SeedReference(cfg, init_mlp(KEY), loss_fn)
+    for t in range(cfg.rounds):
+        v_new = new.step(data, collect_views=True)
+        v_ref = ref.step(data)
+        np.testing.assert_allclose(np.asarray(new.x), np.asarray(ref.x),
+                                   atol=1e-6, err_msg=f"{method} round {t}")
+        assert (v_new is None) == (v_ref is None), (method, t)
+        if v_new is not None:
+            np.testing.assert_allclose(np.asarray(v_new), np.asarray(v_ref),
+                                       atol=1e-6, err_msg=f"views {method}")
+
+
+@pytest.mark.parametrize("method,kw", [
+    ("fedavg", {}),
+    ("eris", {"A": 4, "use_dsc": True, "compressor": RandP(p=0.3)}),
+    ("eris", {"A": 4, "participation": 0.5}),
+    ("soteriafl", {"compressor": RandP(p=0.3)}),
+])
+def test_scan_driver_matches_step_driver(data, method, kw):
+    """The scan-compiled T-round program is trajectory-identical to T
+    per-round jitted steps."""
+    full = (data[0].reshape(-1, DIM), data[1].reshape(-1))
+    cfg = FLConfig(method=method, K=K, rounds=25, lr=0.3, **kw)
+    batches = lambda t, k: data
+    r_step, l_step = run_fl(cfg, init_mlp(KEY), loss_fn, batches,
+                            eval_batch=full)
+    r_scan, l_scan = run_fl_scan(cfg, init_mlp(KEY), loss_fn, batches,
+                                 eval_batch=full)
+    np.testing.assert_allclose(np.asarray(r_step.x), np.asarray(r_scan.x),
+                               atol=1e-6)
+    assert [t for t, _ in l_step] == [t for t, _ in l_scan]
+    np.testing.assert_allclose([l for _, l in l_step],
+                               [l for _, l in l_scan], atol=1e-5)
+
+
+def test_pallas_dsc_stage_trains(data):
+    """FLConfig(compress_impl='pallas') routes client compression through
+    the fused kernels/dsc_update Pallas kernel (interpret mode on CPU)."""
+    full = (data[0].reshape(-1, DIM), data[1].reshape(-1))
+    cfg = FLConfig(method="eris", K=K, A=4, rounds=30, lr=0.3,
+                   use_dsc=True, compressor=RandP(p=0.3),
+                   compress_impl="pallas")
+    run, losses = run_fl(cfg, init_mlp(KEY), loss_fn, lambda t, k: data,
+                         eval_batch=full)
+    assert losses[-1][1] < losses[0][1]
+    # the shifted references actually moved (the kernel's s' output is used)
+    assert float(jnp.abs(run.dsc.s_clients).max()) > 0
+
+
+def test_int8_wire_stage_trains(data):
+    """The Pallas int8 quantize->dequantize wire stage composes with the
+    FSA aggregate and still trains (unbiased omega-compressor)."""
+    full = (data[0].reshape(-1, DIM), data[1].reshape(-1))
+    cfg = FLConfig(method="eris", K=K, A=4, rounds=30, lr=0.3,
+                   int8_wire=True)
+    run, losses = run_fl(cfg, init_mlp(KEY), loss_fn, lambda t, k: data,
+                         eval_batch=full)
+    assert losses[-1][1] < losses[0][1]
+
+
+def test_int8_wire_composes_with_dsc(data):
+    """With DSC + int8 wire, the wire round-trip must sit INSIDE the
+    shifted compressor so client references update with exactly what the
+    aggregators received — the Eq. 4 invariant s_agg == mean_k s_k then
+    holds exactly (it random-walks apart if quantization is applied after
+    the s_k update)."""
+    full = (data[0].reshape(-1, DIM), data[1].reshape(-1))
+    cfg = FLConfig(method="eris", K=K, A=4, rounds=40, lr=0.3,
+                   use_dsc=True, compressor=RandP(p=0.3), int8_wire=True)
+    run, losses = run_fl(cfg, init_mlp(KEY), loss_fn, lambda t, k: data,
+                         eval_batch=full)
+    assert losses[-1][1] < losses[0][1]
+    np.testing.assert_allclose(np.asarray(run.dsc.s_agg),
+                               np.asarray(run.dsc.s_clients.mean(0)),
+                               atol=1e-5)
+
+
+def test_fsa_sharded_stage_matches_mean(data):
+    """FSASharded (literal Algorithm 1) == AggregateStage mean
+    (Theorem B.1) at stage granularity."""
+    from repro.core.pipeline import AggregateStage, FSASharded, RoundKeys, \
+        split_round_keys
+    v = jax.random.normal(KEY, (K, 40))
+    keys = split_round_keys(KEY)
+    mean = AggregateStage().mean(v, None)
+    sharded = FSASharded(A=5).apply(keys, None, v, None)
+    np.testing.assert_allclose(np.asarray(sharded.update), np.asarray(mean),
+                               atol=1e-6)
+    assert sharded.views.shape == (5, K, 40)
+
+
+def test_unknown_method_raises():
+    from repro.core import rounds as rounds_lib
+    with pytest.raises(ValueError):
+        rounds_lib.build_round(FLConfig(method="nope"), 8)

@@ -22,9 +22,7 @@ def test_mi_bound_scaling():
     assert privacy.gaussian_cmax(3.0) == pytest.approx(0.5 * np.log(4.0))
 
 
-def _small_problem(K=4, S=8, dim=8, classes=3):
-    x, y = federated_classification(KEY, K, S, dim=dim, n_classes=classes)
-
+def _linear_model(dim=8, classes=3):
     def init(key):
         k1, k2 = jax.random.split(key)
         return {"w": 0.3 * jax.random.normal(k1, (dim, classes)),
@@ -35,6 +33,12 @@ def _small_problem(K=4, S=8, dim=8, classes=3):
         logits = xx @ p["w"] + p["b"]
         return -jnp.take_along_axis(jax.nn.log_softmax(logits),
                                     yy[:, None], 1).mean()
+    return init, loss_fn
+
+
+def _small_problem(K=4, S=8, dim=8, classes=3):
+    x, y = federated_classification(KEY, K, S, dim=dim, n_classes=classes)
+    init, loss_fn = _linear_model(dim, classes)
     return (x, y), init, loss_fn
 
 
@@ -42,11 +46,14 @@ def test_mia_audit_separates_members():
     """Full-view adversary (A=1) must discriminate members clearly;
     a small-shard adversary (A=8) must discriminate less."""
     M = 8                                          # members per client
-    (x, y), init, loss_fn = _small_problem(S=2 * M)
-    # Steinke-style canaries: random-labeled samples; half are included in
-    # training (members, memorized) and half held out.  Few samples per
-    # client => strong per-sample signal in the transmitted update (the
-    # paper's low-data overfitting regime, Fig. 3).
+    dim = 32
+    init, loss_fn = _linear_model(dim=dim)
+    # Steinke-style canaries: out-of-distribution Gaussian inputs with
+    # random labels; half are included in training (members, memorized)
+    # and half held out.  OOD inputs keep cross-canary gradient overlap
+    # ~1/sqrt(dim) so the per-sample signal in the transmitted update
+    # dominates (the paper's low-data overfitting regime, Fig. 3).
+    x = jax.random.normal(jax.random.fold_in(KEY, 2), (4, 2 * M, dim))
     y_can = jax.random.randint(jax.random.fold_in(KEY, 3), (4, 2 * M), 0, 3)
     x_tr = x[:, :M]
     y_tr = y_can[:, :M]                            # mislabeled members
