@@ -7,8 +7,13 @@ from the dry-run artifacts.
 
 Collective weights (ring algorithms on a 1D slice of the mesh):
   all-gather / reduce-scatter: (n-1)/n x payload crosses each link
-  all-reduce: 2x that;  all-to-all: payload/n;  collective-permute: 1x.
-HLO FLOPs / bytes are trip-count-aware (repro.launch.hlo_analysis).
+  all-reduce: 2x that;  collective-permute: 1x.
+  all-to-all: (n-1)/n — each device keeps 1/n of its payload local and
+  ships the rest (this is the scatter half of the FSA reduce-scatter when
+  the payload is int8-quantized, so it must be weighted like one).
+HLO FLOPs / bytes are trip-count-aware (repro.launch.hlo_analysis); the
+payload bytes come from the HLO operand dtypes, so the int8 wire path is
+accounted at its actual ~1.03 B/coord, not the ``grad_dtype`` width.
 
 Also reports MODEL_FLOPS = 6 * N_active * tokens and the usefulness ratio
 MODEL_FLOPS / (devices * HLO_FLOPs) — catching remat/redundancy waste.
@@ -28,7 +33,7 @@ def collective_seconds(coll: dict, devices: int) -> tuple[float, dict]:
     """Convert per-kind payload bytes into link-seconds."""
     n = devices
     w = {"all-gather": (n - 1) / n, "reduce-scatter": (n - 1) / n,
-         "all-reduce": 2 * (n - 1) / n, "all-to-all": 1.0 / n,
+         "all-reduce": 2 * (n - 1) / n, "all-to-all": (n - 1) / n,
          "collective-permute": 1.0}
     per_kind = {k: coll.get(k, 0.0) * w[k] / ICI_BW for k in w}
     return sum(per_kind.values()), per_kind

@@ -2,18 +2,30 @@
 distribution time per round — the paper's analytic model (Eqs. 52-55)
 instantiated for our architectures, plus measured compressed payloads.
 
+Payload sizes come from the ACTUAL wire representation each method
+transmits (bf16 for the default reduce-scatter path, int8 blocks + f32
+scales for the int8 wire, value+index pairs for sparse DSC) — not from an
+assumed fp32 ``grad_dtype`` convention.
+
 Rates: homogeneous 20 MB/s up/down (Table 2's setting)."""
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
+import numpy as np
 
-from benchmarks.common import KEY
 from repro.core.compressors import RandP
 from repro.configs import get_config
+from repro.kernels.quantize import wire_payload_bytes
 from repro.models.transformer import param_count
 
 RATE = 20e6                      # bytes/s
+
+
+def payload_bytes(n: int, wire: str) -> float:
+    """Bytes one client transmits for an n-coordinate update, by wire
+    format (the distributed runtime's actual payload dtypes)."""
+    if wire == "int8":
+        return float(wire_payload_bytes(n))
+    return float(n) * np.dtype(wire).itemsize
 
 
 def d_fedavg(K: int, b: float) -> float:
@@ -42,28 +54,30 @@ def run(quick: bool = True):
     for arch in ("eris-gptneo-1.3b", "qwen2-0.5b", "xlstm-350m"):
         cfg = get_config(arch)
         n = param_count(cfg)
-        b = 4.0 * n                       # fp32 update, paper convention
+        b = payload_bytes(n, "bfloat16")  # runtime's default wire dtype
+        b_int8 = payload_bytes(n, "int8")  # int8 blocks + f32 scales
         # measured DSC payload (rand-p wire format, p=0.05)
         comp = RandP(p=0.05)
         b_dsc = float(comp.wire_bits(n)) / 8.0
         cases = {
-            "fedavg": (b, d_fedavg(K, b)),
-            "shatter": (b, d_shatter(K, b)),
-            "ako": (b, d_ako(b)),
-            "priprune_p0.1": (0.9 * b, d_fedavg(K, 0.9 * b) * 0.95),
-            "soteriafl_5pct": (0.05 * b,
+            "fedavg": (b, "bf16", d_fedavg(K, b)),
+            "shatter": (b, "bf16", d_shatter(K, b)),
+            "ako": (b, "bf16", d_ako(b)),
+            "priprune_p0.1": (0.9 * b, "bf16", d_fedavg(K, 0.9 * b) * 0.95),
+            "soteriafl_5pct": (0.05 * b, "bf16",
                                max(K * 0.05 * b / RATE, 0.05 * b / RATE)
                                + max(K * b / RATE, b / RATE)),
-            "eris_A2": (b, d_eris(K, 2, b, b)),
-            "eris_A50": (b, d_eris(K, 50, b, b)),
-            "eris_dsc_A50": (b_dsc, d_eris(K, 50, b_dsc, b)),
+            "eris_A2": (b, "bf16", d_eris(K, 2, b, b)),
+            "eris_A50": (b, "bf16", d_eris(K, 50, b, b)),
+            "eris_int8_A50": (b_int8, "s8", d_eris(K, 50, b_int8, b)),
+            "eris_dsc_A50": (b_dsc, "sparse", d_eris(K, 50, b_dsc, b)),
         }
-        base = cases["fedavg"][1]
-        for name, (upload, dist) in cases.items():
+        base = cases["fedavg"][2]
+        for name, (upload, wire, dist) in cases.items():
             rows.append({
                 "name": f"scalability/{arch}/{name}",
                 "us_per_call": dist * 1e6,
-                "derived": (f"upload_MB={upload/1e6:.2f} "
+                "derived": (f"upload_MB={upload/1e6:.2f} wire={wire} "
                             f"dist_s={dist:.2f} "
                             f"speedup_vs_fedavg={base/dist:.1f}x"),
             })

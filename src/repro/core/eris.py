@@ -13,7 +13,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import dsc as dsc_lib
-from repro.core import fsa as fsa_lib
 from repro.core import masks as masks_lib
 from repro.core import pipeline as pl
 from repro.core.compressors import Compressor, Identity
@@ -50,6 +49,43 @@ def init(key: jax.Array, x0: jax.Array, K: int) -> ErisState:
                      key)
 
 
+def _round_keys(k_mask: jax.Array, k_comp: jax.Array) -> pl.RoundKeys:
+    """RoundKeys preserving this engine's historical 2-key discipline
+    (mask + comp); the remaining roles alias comp (unused by the eris
+    stage list), keeping trajectories bit-compatible with the
+    pre-stage-list implementation."""
+    c0, c1 = jax.random.split(k_comp)
+    return pl.RoundKeys(mask=k_mask, comp=k_comp, noise=k_comp,
+                        fail=k_comp, part=k_comp, comp0=c0, comp1=c1,
+                        wire=jax.random.fold_in(k_comp, 0x3177))
+
+
+def stages(cfg: ErisConfig, n: int, keep_views: bool = False
+           ) -> tuple[tuple[pl.CompressStage, ...], pl.AggregateStage]:
+    """The declarative stage list this engine executes — the SAME stage
+    objects the simulator registry composes and the distributed runtime
+    applies leaf-wise (one round implementation, three engines).
+
+    The fresh-mask (m^t) path aggregates through :class:`pl.FSASharded`
+    with a keyed per-round assignment; the static-mask path uses the
+    algebraic mean (Theorem B.1 — iterate-identical, no (A, K, n)
+    materialization inside a scan)."""
+    gamma = cfg.gamma_value(n)
+    compress: tuple[pl.CompressStage, ...] = ()
+    if cfg.use_dsc:
+        compress = (pl.DSCCompress(compressor=cfg.compressor, gamma=gamma),)
+    if cfg.fresh_masks or keep_views:
+        aggregate: pl.AggregateStage = pl.FSASharded(
+            A=cfg.A, mask_scheme=cfg.mask_scheme,
+            fresh_masks=cfg.fresh_masks, use_dsc=cfg.use_dsc, gamma=gamma,
+            keep_views=keep_views)
+    elif cfg.use_dsc:
+        aggregate = pl.DSCAggregate(gamma=gamma)
+    else:
+        aggregate = pl.AggregateStage()
+    return compress, aggregate
+
+
 def round_step(state: ErisState, cfg: ErisConfig,
                grad_fn: Callable[[jax.Array, jax.Array], jax.Array],
                client_batches, weights: jax.Array | None = None,
@@ -59,36 +95,26 @@ def round_step(state: ErisState, cfg: ErisConfig,
     """
     n = state.x.shape[0]
     key, k_mask, k_comp = jax.random.split(state.key, 3)
-    assign = masks_lib.make_assignment(
-        n, cfg.A, "random" if cfg.fresh_masks else cfg.mask_scheme,
-        key=k_mask if cfg.fresh_masks else None)
+    keys = _round_keys(k_mask, k_comp)
+    compress, aggregate = stages(cfg, n, keep_views)
 
     # --- client-side: local stochastic gradients (Algorithm 1 line 3)
     grads = pl.ClientStep()(grad_fn, state.x, client_batches)  # (K, n)
 
-    # --- compression stage (line 4) — shared with fl.py / launch/train.py
-    gamma = cfg.gamma_value(n)
-    if cfg.use_dsc:
-        stage = pl.DSCCompress(compressor=cfg.compressor, gamma=gamma)
-        v, dsc = stage.compress(k_comp, state.dsc, grads)
-    else:
-        v, dsc = grads, state.dsc
+    # --- compression (line 4) + FSA aggregation (lines 5-13): the stage
+    # list, executed exactly as RoundPipeline.run_round does
+    rstate = pl.RoundState(x=state.x, dsc=state.dsc, ef=None, server=None)
+    v = grads
+    for stage in compress:
+        v, rstate = stage.apply(keys, rstate, v)
+    agg = aggregate.apply(keys, rstate, v, weights)
+    x_new = state.x - cfg.lr * agg.update
 
-    # --- FSA partition + aggregator-side (lines 5-13)
-    out = fsa_lib.fsa_round_sharded(
-        jnp.zeros_like(state.x), v, assign, cfg.A, 1.0,
-        weights=weights, keep_views=keep_views) if keep_views else None
-    agg = (pl.DSCAggregate(gamma=gamma) if cfg.use_dsc
-           else pl.AggregateStage())
-    if cfg.use_dsc:
-        v_global, dsc = agg.aggregate(dsc, v, weights)
-    else:
-        v_global = agg.mean(v, weights)
-    x_new = state.x - cfg.lr * v_global
-
-    new_state = ErisState(x_new, dsc, state.t + 1, key)
-    aux = {"assign": assign, "transmitted": v,
-           "shard_views": out.shard_views if keep_views else None}
+    assign = (aggregate.assignment(keys, n)
+              if isinstance(aggregate, pl.FSASharded)
+              else masks_lib.make_assignment(n, cfg.A, cfg.mask_scheme))
+    new_state = ErisState(x_new, agg.state.dsc, state.t + 1, key)
+    aux = {"assign": assign, "transmitted": v, "shard_views": agg.views}
     return new_state, aux
 
 

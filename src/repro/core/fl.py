@@ -48,6 +48,7 @@ class FLConfig:
     participation: float = 1.0    # client sampling fraction per round
     gamma: Optional[float] = None
     mask_scheme: str = "strided"
+    fresh_masks: bool = False     # re-draw random masks per round (m^t)
     ldp: Optional[bl.LDPConfig] = None
     prune_rate: float = 0.1       # priprune
     shatter_chunks: int = 8

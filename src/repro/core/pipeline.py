@@ -92,11 +92,8 @@ def _interpret() -> bool:
 
 
 def _largest_divisor(n: int, cap: int) -> int:
-    best = 1
-    for d in range(1, min(n, cap) + 1):
-        if n % d == 0:
-            best = d
-    return best
+    from repro.kernels.common import largest_divisor
+    return largest_divisor(n, cap)
 
 
 def _seed_of(key: jax.Array) -> jax.Array:
@@ -295,20 +292,45 @@ class FSASharded(AggregateStage):
     """Literal Algorithm 1 lines 5-13: materialize per-aggregator masked
     shards, aggregate each independently, reassemble.  Iterate-identical
     to the algebraic mean (Theorem B.1) but also exposes the
-    honest-but-curious aggregator views — the privacy-eval path."""
+    honest-but-curious aggregator views — the privacy-eval path.
+
+    ``fresh_masks`` draws a NEW random assignment every round (the
+    paper's m^t notation) keyed on the round's ``mask`` role key, so the
+    draw is reproducible and identical across engines.  ``use_dsc`` adds
+    the aggregator-side shift compensation of Eq. 4 on the sharded mean
+    (u = s_agg + mean; s_agg += gamma mean) — the composition the eris
+    fresh-mask path runs."""
 
     A: int = 4
     mask_scheme: str = "strided"
     keep_views: bool = True
+    fresh_masks: bool = False        # re-draw random masks per round (m^t)
+    use_dsc: bool = False
+    gamma: float = 0.0
+    key_role: str = "mask"
+
+    def assignment(self, keys: RoundKeys, n: int) -> jax.Array:
+        if self.fresh_masks:
+            return masks_lib.make_assignment(n, self.A, "random",
+                                             key=self._key(keys))
+        return masks_lib.make_assignment(n, self.A, self.mask_scheme)
 
     def apply(self, keys, state, v, weights):
         n = v.shape[1]
-        assign = masks_lib.make_assignment(n, self.A, self.mask_scheme)
+        assign = self.assignment(keys, n)
         out = fsa_lib.fsa_round_sharded(
             jnp.zeros(n), v, assign, self.A, 1.0,
             weights=weights if self.use_weights else None,
             keep_views=self.keep_views)
-        return AggregateResult(-out.x_new, state, out.shard_views)
+        mean_v = -out.x_new
+        if self.use_dsc:
+            dsc = state.dsc
+            u = dsc.s_agg + mean_v
+            state = state._replace(
+                dsc=dsc._replace(s_agg=dsc.s_agg + self.gamma * mean_v))
+        else:
+            u = mean_v
+        return AggregateResult(u, state, out.shard_views)
 
 
 @dataclasses.dataclass(frozen=True)

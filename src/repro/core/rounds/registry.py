@@ -28,9 +28,10 @@ from repro.core import dsc as dsc_lib
 from repro.core.compressors import Int8RoundTrip
 from repro.core.pipeline import (AggregateStage, ClientStep, DSCAggregate,
                                  DSCCompress, EFCompress, FailureInjectedFSA,
-                                 Int8Wire, LDPNoise, PruneWithhold,
-                                 RoundPipeline, SecureAggAggregate,
-                                 ServerStage, ShatterAggregate)
+                                 FSASharded, Int8Wire, LDPNoise,
+                                 PruneWithhold, RoundPipeline,
+                                 SecureAggAggregate, ServerStage,
+                                 ShatterAggregate)
 
 
 def _gamma(cfg, n: int) -> float:
@@ -121,6 +122,13 @@ def _build_eris(cfg, n):
             A=cfg.A, mask_scheme=cfg.mask_scheme,
             agg_dropout=cfg.agg_dropout, link_failure=cfg.link_failure,
             use_dsc=cfg.use_dsc, gamma=gamma, key_role="fail")
+    elif getattr(cfg, "fresh_masks", False):
+        # the paper's m^t path: literal FSA with a keyed per-round random
+        # assignment — the same FSASharded stage eris.round_step runs
+        aggregate = FSASharded(
+            A=cfg.A, mask_scheme=cfg.mask_scheme, fresh_masks=True,
+            use_dsc=cfg.use_dsc, gamma=gamma, keep_views=False,
+            key_role="mask")
     elif cfg.use_dsc:
         aggregate = DSCAggregate(gamma=gamma, use_weights=True)
     else:

@@ -19,11 +19,15 @@ disjoint and complete by construction (Theorem B.1 applies unchanged).
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Any
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+QBLOCK = 256        # coords per int8-wire scale (kernels/quantize.QBLOCK)
 
 
 # ------------------------------------------------------------------ axes
@@ -159,6 +163,90 @@ def mirror_state_specs(params_abs: Any, param_leaf_specs: list,
         else:
             out.append(default)
     return jax.tree.unflatten(treedef, out)
+
+
+# ------------------------------------------------------ int8 wire layouts
+@dataclasses.dataclass(frozen=True)
+class WireLayout:
+    """Per-leaf layout of the int8 wire payload for the FSA exchange.
+
+    A leaf with scatter dim ``dim >= 0`` is split into ``n_client``
+    contiguous segments along ``dim``; each segment is flattened, padded
+    to a multiple of QBLOCK, and quantized per-256-block (int8 values +
+    one f32 scale per block).  The (block, scale) pair is what crosses
+    the mesh.  ``dim == -1`` leaves (no divisible dimension) stay on the
+    un-quantized psum path in the runtime's ``grad_dtype``.
+    """
+
+    dim: int              # scatter dim (-1 = replicated, full psum)
+    shard_elems: int      # un-padded elements per aggregator segment
+    padded_elems: int     # rounded up to a QBLOCK multiple
+    n_blocks: int         # scales per segment (= padded_elems // QBLOCK)
+
+    @property
+    def wire_bytes(self) -> int:
+        """Bytes one client sends for ONE segment: int8 blocks + scales."""
+        return self.padded_elems + 4 * self.n_blocks
+
+
+def wire_layout_for(shape: tuple[int, ...], n_client: int) -> WireLayout:
+    """Layout of one leaf's int8 wire payload (the geometry
+    ``launch/train.py`` quantizes and ``all_to_all``s with)."""
+    dim = scatter_dim_for(shape, n_client)
+    if dim < 0:
+        return WireLayout(-1, 0, 0, 0)
+    m = int(np.prod(shape)) // n_client
+    padded = -(-m // QBLOCK) * QBLOCK
+    return WireLayout(dim, m, padded, padded // QBLOCK)
+
+
+def int8_wire_layouts(cfg, mesh: Mesh) -> Any:
+    """Pytree of :class:`WireLayout` matching the parameter tree."""
+    n_client = client_count(mesh)
+    params = _abstract_params(cfg)
+    return jax.tree.map(lambda p: wire_layout_for(p.shape, n_client), params)
+
+
+def mesh_wire_bytes(cfg, mesh: Mesh, *, int8: bool,
+                    grad_bytes: int = 2) -> int:
+    """Bytes ONE client puts on the mesh per round under the FSA exchange:
+    the sum over leaves of every transmitted segment (n_client - 1 remote
+    segments + its own, counted once each, matching the collective's
+    logical payload).  ``int8=False`` accounts the ``grad_dtype`` path."""
+    n_client = client_count(mesh)
+    params = _abstract_params(cfg)
+    total = 0
+    for p, lay in zip(jax.tree.leaves(params),
+                      jax.tree.leaves(int8_wire_layouts(cfg, mesh))):
+        elems = int(np.prod(p.shape))
+        if int8 and lay.dim >= 0:
+            total += n_client * lay.wire_bytes
+        else:
+            total += elems * grad_bytes
+    return total
+
+
+def split_shards(x: jax.Array, dim: int, n_client: int) -> jax.Array:
+    """Reorganize a leaf into its FSA segments: ``(n_client, m)`` rows,
+    row a = the flattened contiguous segment of ``dim`` that aggregator a
+    owns (identical chunking to ``psum_scatter(..., tiled=True)`` and the
+    'store' layout slices — the rows ARE the masks m_(a))."""
+    pre, post = x.shape[:dim], x.shape[dim + 1:]
+    size = x.shape[dim] // n_client
+    x = x.reshape(*pre, n_client, size, *post)
+    x = jnp.moveaxis(x, len(pre), 0)
+    return x.reshape(n_client, -1)
+
+
+def merge_shards(rows: jax.Array, dim: int, shape: tuple[int, ...],
+                 n_client: int) -> jax.Array:
+    """Inverse of :func:`split_shards` — reassemble ``(n_client, m)`` rows
+    into the full leaf of ``shape``."""
+    pre, post = shape[:dim], shape[dim + 1:]
+    size = shape[dim] // n_client
+    rows = rows.reshape(n_client, *pre, size, *post)
+    rows = jnp.moveaxis(rows, 0, len(pre))
+    return rows.reshape(shape)
 
 
 def opt_state_shardings(cfg, mesh: Mesh, opt, params_abs: Any) -> Any:

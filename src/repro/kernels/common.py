@@ -10,6 +10,18 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 
+def largest_divisor(n: int, cap: int) -> int:
+    """Largest divisor of ``n`` that is <= ``cap`` — the canonical grid
+    block-size chooser for every kernel call site (simulator stages and
+    the distributed runtime must pick IDENTICAL grids, or their
+    quantization draws drift)."""
+    best = 1
+    for d in range(1, min(n, cap) + 1):
+        if n % d == 0:
+            best = d
+    return best
+
+
 def hash_u32(x):
     """murmur3 fmix32 — high-quality 32-bit mixer (expressible in both
     Pallas and plain jnp)."""

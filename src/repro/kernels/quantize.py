@@ -22,6 +22,16 @@ QBLOCK = 256          # coords per scale
 BLOCK_B = 1024        # quant blocks per grid step
 
 
+def wire_payload_bytes(n: int, *, block: int = QBLOCK) -> int:
+    """Exact bytes of the quantized wire payload for an n-coordinate
+    vector: one int8 per (block-padded) coordinate plus one f32 scale per
+    block — what the FSA all_to_all actually puts on the mesh, and what
+    the byte-accounting tests/benchmarks compare against the bf16
+    baseline (2n)."""
+    padded = -(-n // block) * block
+    return padded + 4 * (padded // block)
+
+
 def _quant_kernel(x_ref, seed_ref, q_ref, scale_ref, *, qblock):
     i = pl.program_id(0)
     x = x_ref[...].astype(jnp.float32)          # (bb, qblock)

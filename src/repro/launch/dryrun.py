@@ -27,7 +27,7 @@ import numpy as np       # noqa: E402
 # --------------------------------------------------------------- dry run
 def run_one(arch: str, shape_name: str, multi_pod: bool,
             use_dsc: bool = False, fsa: bool = True,
-            grad_dtype: str = "float16",
+            grad_dtype: str = "float16", int8_wire: bool = False,
             save_hlo: bool = False, out_dir: str = "experiments/dryrun",
             tag: str = "", opt: str = "") -> dict:
     import dataclasses
@@ -57,7 +57,8 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
     t0 = time.time()
     if shape.kind == "train":
         settings = train_lib.TrainSettings(use_dsc=use_dsc, fsa=fsa,
-                                           grad_dtype=grad_dtype)
+                                           grad_dtype=grad_dtype,
+                                           int8_wire=int8_wire)
         lowered = train_lib.lower_train_step(cfg, mesh, shape_name, settings)
     else:
         lowered = serve_lib.lower_serve_step(cfg, mesh, shape_name)
@@ -69,6 +70,8 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, list):          # older jax: one dict per partition
+        cost = cost[0] if cost else {}
     hlo = compiled.as_text()
     from repro.launch import hlo_analysis
     deep = hlo_analysis.analyze(hlo)         # trip-count-aware per-device
@@ -79,6 +82,8 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
         "mesh": "2x16x16" if multi_pod else "16x16",
         "devices": n_dev, "kind": shape.kind,
         "fsa": fsa, "use_dsc": use_dsc, "grad_dtype": grad_dtype,
+        "int8_wire": int8_wire,
+        "wire_dtype": deep["collective_bytes"].get("wire_dtype", ""),
         "tag": tag,
         "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
         "params": param_count(cfg),
@@ -116,6 +121,8 @@ def main():
     ap.add_argument("--no-fsa", action="store_true",
                     help="FedAvg baseline layout (replicated optimizer)")
     ap.add_argument("--grad-dtype", default="float16")
+    ap.add_argument("--int8-wire", action="store_true",
+                    help="int8 blocks + f32 scales as the FSA wire format")
     ap.add_argument("--save-hlo", action="store_true")
     ap.add_argument("--tag", default="")
     ap.add_argument("--opt", default="",
@@ -125,6 +132,7 @@ def main():
     args = ap.parse_args()
     rec = run_one(args.arch, args.shape, args.multi_pod, args.dsc,
                   fsa=not args.no_fsa, grad_dtype=args.grad_dtype,
+                  int8_wire=args.int8_wire,
                   save_hlo=args.save_hlo, out_dir=args.out, tag=args.tag,
                   opt=args.opt)
     mem_gib = rec["memory"]["peak_bytes"] / 2**30

@@ -207,21 +207,58 @@ class HloModule:
     def collective_bytes(self) -> dict:
         """Payload bytes per collective kind, trip-count weighted.  The
         payload is max(operand bytes, result bytes) — i.e. the full
-        logical tensor crossing the interconnect."""
+        logical tensor crossing the interconnect.
+
+        Also reports ``dtypes`` — per-kind payload bytes broken down by
+        element dtype (what ACTUALLY crosses the wire, e.g. ``s8`` for the
+        int8 FSA exchange) — and ``wire_dtype``: the dominant dtype of the
+        FSA reduce-scatter stage.  Quantized payloads cannot be summed in
+        the collective, so the int8 lowering emits the scatter half as an
+        ``all-to-all``; the reduce-scatter stage's dtype is therefore read
+        from reduce-scatter ops when present and all-to-all ops otherwise.
+        """
         out = {k: 0.0 for k in COLLECTIVES}
         counts = {k: 0 for k in COLLECTIVES}
+        dtypes: dict[str, dict[str, float]] = {k: {} for k in COLLECTIVES}
         for comp, ops in self.computations.items():
             m = self.multipliers.get(comp, 1.0)
             for op in ops:
                 kind = op["kind"].replace("-start", "")
                 if kind.endswith("-done") or kind not in COLLECTIVES:
                     continue
-                b = max(_shape_elems_bytes(op["type"]),
-                        self._operand_bytes(op["rest"]))
-                out[kind] += m * b
+                result_b = _shape_elems_bytes(op["type"])
+                operand_b = self._operand_bytes(op["rest"])
+                out[kind] += m * max(result_b, operand_b)
                 counts[kind] += int(m)
+                # dtype breakdown of the SAME payload the total counts:
+                # the operand side when it is the larger (reduce-scatter
+                # consumes n_devices x its result), else the result side
+                text = op["type"] if result_b >= operand_b else " ".join(
+                    self.op_shape[nm] for nm in
+                    re.findall(r"%([\w.\-]+)", op["rest"].split("),")[0])
+                    if nm in self.op_shape)
+                for dt, dims in _SHAPE_RE.findall(text):
+                    n = 1
+                    for d in dims.split(","):
+                        if d:
+                            n *= int(d)
+                    dtypes[kind][dt] = dtypes[kind].get(dt, 0.0) \
+                        + m * n * _DTYPE_BYTES[dt]
         out["counts"] = counts
+        out["dtypes"] = dtypes
+        out["wire_dtype"] = self._wire_dtype(dtypes)
         return out
+
+    @staticmethod
+    def _wire_dtype(dtypes: dict) -> str:
+        """Dominant payload dtype of the FSA reduce-scatter stage (the
+        collective carrying the client updates): reduce-scatter when the
+        payload is summable on the wire, else the all-to-all scatter half
+        of the quantized exchange."""
+        for kind in ("reduce-scatter", "all-to-all"):
+            if dtypes.get(kind):
+                return max(dtypes[kind], key=dtypes[kind].get)
+        return ""
 
     def traffic_bytes(self) -> float:
         """HBM traffic proxy: operands+results of materializing ops in

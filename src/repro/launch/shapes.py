@@ -1,5 +1,7 @@
 """Assigned input shapes + ShapeDtypeStruct input specs (no allocation).
 
+  train_1k       seq_len=  1,024  global_batch= 256  (training; CI-sized
+                                                      lowering regressions)
   train_4k       seq_len=  4,096  global_batch= 256  (training)
   prefill_32k    seq_len= 32,768  global_batch=  32  (inference-prefill)
   decode_32k     seq_len= 32,768  global_batch= 128  (inference-decode)
@@ -31,6 +33,7 @@ class InputShape:
 
 
 SHAPES = {
+    "train_1k": InputShape("train_1k", 1024, 256, "train"),
     "train_4k": InputShape("train_4k", 4096, 256, "train"),
     "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
     "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),

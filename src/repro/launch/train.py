@@ -1,21 +1,34 @@
 """Distributed train step: FSA expressed as explicit TPU collectives.
 
-The step is a ``shard_map`` over the client axes (``pod``/``data``) with
-the ``model`` axis left to GSPMD (tensor parallelism stays automatic):
+The step is ONE fully-manual ``shard_map`` over ALL mesh axes — the
+partial-auto mode (manual client axes + GSPMD model axis) trips a
+jax-0.4.37 SPMD-partitioner check (``IsManualSubgroup``) on the 512-device
+configs, so the lowering keeps nothing automatic:
 
   1. *FSA broadcast* — stored parameters are sharded over the client axes
      (each position = one aggregator's disjoint segment, Sec. 3.2.1); the
      shard_map in_spec requests them replicated, so XLA inserts the
      all-gather: x^t = sum_a m_(a) . x^t_(a)   (Algorithm 1 line 14).
   2. *Local update* — each client-axis position computes gradients on its
-     own client group's batch shard (no cross-client reduction yet).
+     own client group's batch shard.  When the per-group batch divides the
+     ``model`` axis, that axis data-parallelizes the group's batch (grads
+     pmean'd over ``model``); otherwise model positions replicate the
+     group's computation (full-manual fallback — no GSPMD tensor
+     parallelism inside the manual region).
   3. *DSC (optional)* — each client group shift-compresses its update
      v_k = C(g_k - s_k), s_k += gamma v_k, before transmission.
-  4. *FSA aggregation* — ``psum_scatter`` over the client axes: each
-     aggregator receives and reduces ONLY its disjoint shard (this is the
-     reduce-scatter that replaces FedAvg's all-reduce; Theorem B.1 is the
-     algebraic identity all_reduce == all_gather . reduce_scatter).
-     Gradients cross the wire in ``grad_dtype`` (bf16 halves the payload).
+  4. *FSA aggregation* — the reduce-scatter stage.  Two wire formats:
+       * ``grad_dtype`` (default bf16): ``psum_scatter`` over the client
+         axes — each aggregator receives and reduces ONLY its disjoint
+         shard (Theorem B.1: all_reduce == all_gather . reduce_scatter).
+       * ``int8_wire``: each segment is quantized per-256-block
+         (stochastic int8 + f32 scales, the Pallas ``kernels/quantize``
+         pair), the int8 blocks + scales cross the mesh via ``all_to_all``
+         (a sum cannot be performed in the quantized domain, so the
+         reduce-scatter lowers to its scatter half; the reduction happens
+         aggregator-side after dequantization).  With DSC, the shift
+         references update from the quantized round trip — exactly the
+         simulator's composed ``Int8RoundTrip`` compressor.
   5. *Shard-local optimizer* — aggregator a updates x_(a); optimizer state
      lives sharded (never materialized globally, ZeRO-style).
 
@@ -43,7 +56,8 @@ from repro.optim import Optimizer, adam
 
 @dataclasses.dataclass(frozen=True)
 class TrainSettings:
-    grad_dtype: str = "bfloat16"     # wire dtype for the FSA reduce-scatter
+    grad_dtype: str = "bfloat16"     # wire dtype for the un-quantized path
+    int8_wire: bool = False          # int8 blocks + f32 scales on the mesh
     use_dsc: bool = False            # client-side shifted rand-p compression
     dsc_p: float = 0.1
     dsc_gamma: float = 0.5
@@ -62,75 +76,157 @@ def _client_size(mesh: Mesh) -> int:
     return sh.client_count(mesh)
 
 
-def _shard_map(f, mesh: Mesh, in_specs, out_specs, manual_axes):
-    """shard_map with the non-'model' axes manual, compatible with both
-    the jax>=0.5 top-level API and the 0.4.x experimental one."""
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _shard_map(f, mesh: Mesh, in_specs, out_specs):
+    """Fully-manual shard_map (every mesh axis manual), compatible with
+    both the jax>=0.5 top-level API and the 0.4.x experimental one."""
     if hasattr(jax, "shard_map"):
         return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
-                             out_specs=out_specs,
-                             axis_names=set(manual_axes), check_vma=False)
+                             out_specs=out_specs, check_vma=False)
     from jax.experimental.shard_map import shard_map as _sm
-    auto = frozenset(mesh.axis_names) - set(manual_axes)
     return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-               check_rep=False, auto=auto)
+               check_rep=False)
+
+
+def _quant_block_b(n_blocks: int) -> int:
+    from repro.kernels import quantize as q_kernel
+    from repro.kernels.common import largest_divisor
+    return largest_divisor(n_blocks, q_kernel.BLOCK_B)
+
+
+def _int8_wire_exchange(v: jax.Array, dim: int, seed: jax.Array,
+                        caxis, n_client: int,
+                        need_round_trip: bool):
+    """The int8 reduce-scatter stage for one leaf.
+
+    Splits ``v`` into its n_client FSA segments, quantizes each segment
+    per-256-block, sends the int8 blocks + f32 scales over the client
+    axes (``all_to_all`` — segment a of every client lands on aggregator
+    a), dequantizes aggregator-side and reduces.  Returns
+    ``(my_segment_mean f32, v_hat)`` where ``v_hat`` is the local
+    quantized round trip of the FULL leaf (what the aggregators actually
+    received) for DSC shift updates, or None when not requested.
+    """
+    from repro.kernels import quantize as q_kernel
+    lay = sh.wire_layout_for(v.shape, n_client)      # the (block, scale)
+    m, mp = lay.shard_elems, lay.padded_elems        # geometry on the wire
+    rows = sh.split_shards(v.astype(jnp.float32), dim, n_client)
+    rows = jnp.pad(rows, ((0, 0), (0, mp - m)))
+    block_b = _quant_block_b(n_client * lay.n_blocks)
+    q, scale = q_kernel.quantize(rows.reshape(-1), seed, block_b=block_b,
+                                 interpret=_interpret())
+    q = q.reshape(n_client, mp)
+    scale = scale.reshape(n_client, lay.n_blocks)
+
+    def deq(qq, ss):
+        out = q_kernel.dequantize(qq.reshape(-1), ss.reshape(-1),
+                                  block_b=block_b, interpret=_interpret())
+        return out.reshape(n_client, mp)[:, :m]
+
+    v_hat = None
+    if need_round_trip:
+        v_hat = sh.merge_shards(deq(q, scale), dim, v.shape, n_client)
+    # --- the wire: int8 blocks + f32 scales cross the client axes -------
+    q_rx = jax.lax.all_to_all(q, caxis, 0, 0, tiled=True)
+    s_rx = jax.lax.all_to_all(scale, caxis, 0, 0, tiled=True)
+    my = deq(q_rx, s_rx).mean(0)                      # aggregator-side sum
+    shard_shape = list(v.shape)
+    shard_shape[dim] //= n_client
+    return my.reshape(shard_shape), v_hat
 
 
 def make_train_step(cfg: ModelConfig, mesh: Mesh, opt: Optimizer,
                     settings: TrainSettings = TrainSettings()):
     """Returns (train_step, shardings dict)."""
+    # GSPMD placement hints are meaningless (and illegal) inside the
+    # fully-manual region — the model axis is manual like every other.
+    if cfg.attn_batch_shard or cfg.moe_expert_shard_acts:
+        cfg = dataclasses.replace(cfg, attn_batch_shard=False,
+                                  moe_expert_shard_acts=False)
     ca = sh.client_axes(mesh)
     caxis = ca if len(ca) > 1 else ca[0]
     n_client = _client_size(mesh)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    model_size = int(sizes.get("model", 1))
     scatter_dims = sh.fsa_scatter_dims(cfg, mesh) if settings.fsa else None
     store = sh.param_shardings(cfg, mesh, "store" if settings.fsa else "use")
 
     def loss_fn(params, batch):
         return tr.loss_fn(params, cfg, batch)
 
-    # ---------------- the manual (per-client-axis-position) body ----------
-    def fsa_body(aidx_arr, params, opt_state, dsc_ref, batch, key):
-        # params arrive replicated over client axes (the all-gather /
-        # broadcast happened at the shard_map boundary); batch is this
-        # client group's shard.  aidx_arr is this position's slice of
-        # arange(n_client) — the aggregator id (axis_index lowers to an
-        # unsupported PartitionId under partial-auto SPMD, so it rides in
-        # as a sharded input instead).
+    # ---------------- the manual (per-mesh-position) body -----------------
+    def fsa_body(aidx_arr, params, opt_state, dsc_ref, batch, key, *,
+                 model_split):
+        # params arrive replicated (the all-gather / broadcast happened at
+        # the shard_map boundary); batch is this client group's shard,
+        # further split over the model axis when model_split.  aidx_arr is
+        # this position's slice of arange(n_client) — the aggregator id
+        # (axis_index lowers to an unsupported PartitionId under manual
+        # SPMD, so it rides in as a sharded input instead).
         aidx = aidx_arr[0]
         loss_val, grads = jax.value_and_grad(loss_fn)(params, batch)
-        loss_val = jax.lax.pmean(loss_val, caxis)
+        loss_axes = (*ca, "model") if model_split else caxis
+        loss_val = jax.lax.pmean(loss_val, loss_axes)
+        if model_split:
+            # model axis = intra-group data parallelism: the group's
+            # update is the mean over its model-axis micro-shards
+            grads = jax.tree.map(lambda g: jax.lax.pmean(g, "model"), grads)
 
-        if settings.use_dsc:
-            # client-side shifted compression (Sec. 3.2.2) on the local
-            # update, before transmission — the SAME DSCCompress stage the
-            # simulator pipeline runs, applied leaf-wise.  dsc_ref leaves
-            # are client-stacked (n_client, *param_shape), so each
-            # client-axis position holds its OWN s_k (local (1, ...)).
-            stage = dsc_stage(settings)
-            leaves, treedef = jax.tree.flatten(grads)
-            refs = jax.tree.leaves(dsc_ref)
-            vs, refs_new = [], []
-            for i, (g, s_stk) in enumerate(zip(leaves, refs)):
+        leaves, treedef = jax.tree.flatten(grads)
+        stage = dsc_stage(settings) if settings.use_dsc else None
+        refs = jax.tree.leaves(dsc_ref) if settings.use_dsc else [None] * len(leaves)
+        dims = (jax.tree.leaves(scatter_dims) if settings.fsa
+                else [-1] * len(leaves))
+
+        # --- compress + FSA aggregation, leaf-wise ------------------------
+        def wire_seed(i):
+            k = jax.random.fold_in(jax.random.fold_in(key, 0x3177 + i), aidx)
+            return jax.random.bits(k, dtype=jnp.uint32)
+
+        out_leaves, refs_new = [], []
+        for i, (g, s_stk, dim) in enumerate(zip(leaves, refs, dims)):
+            int8 = settings.int8_wire and settings.fsa and dim >= 0
+            if stage is not None:
+                # client-side shifted compression (Sec. 3.2.2) — the SAME
+                # DSCCompress stage the simulator pipeline runs, leaf-wise.
+                # dsc_ref leaves are client-stacked (n_client, *shape), so
+                # each client-axis position holds its OWN s_k (local (1,)).
                 k = jax.random.fold_in(jax.random.fold_in(key, i), aidx)
-                v, s_new = stage.apply_leaf(k, g, s_stk[0])
-                vs.append(v.astype(g.dtype))
+                s = s_stk[0]
+                if int8:
+                    # wire format INSIDE the shifted compressor: s_k must
+                    # update with what the aggregators actually receive
+                    # (the simulator's Int8RoundTrip(inner=RandP)).
+                    v = stage.compressor(k, g.astype(s.dtype) - s)
+                    agg, v_hat = _int8_wire_exchange(
+                        v, dim, wire_seed(i), caxis, n_client,
+                        need_round_trip=True)
+                    refs_new.append((s + stage.gamma * v_hat)[None])
+                    out_leaves.append(agg)
+                    continue
+                v, s_new = stage.apply_leaf(k, g, s)
                 refs_new.append(s_new[None])
-            grads = jax.tree.unflatten(treedef, vs)
-            dsc_ref = jax.tree.unflatten(treedef, refs_new)
-
-        # --- FSA aggregation: reduce-scatter the wire-dtype update -------
-        def aggregate(g, dim):
+                g = v.astype(g.dtype)
+            if int8:
+                agg, _ = _int8_wire_exchange(g, dim, wire_seed(i), caxis,
+                                             n_client, need_round_trip=False)
+                out_leaves.append(agg)
+                continue
+            # un-quantized path: reduce-scatter in grad_dtype
             g = g.astype(settings.grad_dtype)
             if settings.fsa and dim >= 0:
                 g = jax.lax.psum_scatter(g, caxis, scatter_dimension=dim,
                                          tiled=True)
             else:
                 g = jax.lax.psum(g, caxis)
-            return g / n_client
+            out_leaves.append(g / n_client)
 
-        if settings.fsa:
-            grads = jax.tree.map(aggregate, grads, scatter_dims)
-        else:
-            grads = jax.tree.map(lambda g: aggregate(g, -1), grads)
+        grads = jax.tree.unflatten(treedef, out_leaves)
+        if settings.use_dsc:
+            dsc_ref = jax.tree.unflatten(treedef, refs_new)
 
         # --- shard-local optimizer on this aggregator's segment ----------
         def my_shard(p, dim):
@@ -178,20 +274,24 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh, opt: Optimizer,
     dsc_specs = jax.tree.map(lambda _: P(caxis) if settings.use_dsc else P(),
                              params_abs)
 
-    batch_spec_leaf = P(caxis)
-
     def make_step():
         def step(params_stored, opt_state, dsc_ref, batch, key):
+            # model axis: data-parallel over the group's batch when the
+            # global batch divides all mesh positions, else replicated
+            # (full-manual fallback — see module docstring)
+            b0 = jax.tree.leaves(batch)[0].shape[0]
+            model_split = model_size > 1 and b0 % (n_client * model_size) == 0
+            batch_spec = P((*ca, "model")) if model_split else P(caxis)
             in_specs = (P(caxis),                                 # aidx
                         jax.tree.map(lambda _: P(), params_abs),  # broadcast
                         opt_specs, dsc_specs,
-                        jax.tree.map(lambda _: batch_spec_leaf, batch),
+                        jax.tree.map(lambda _: batch_spec, batch),
                         P())
             out_specs = (param_specs, opt_specs, dsc_specs,
                          {"loss": P(), "grad_norm": P()})
-            fn = _shard_map(fsa_body, mesh,
-                            in_specs=in_specs, out_specs=out_specs,
-                            manual_axes=ca)
+            fn = _shard_map(
+                functools.partial(fsa_body, model_split=model_split), mesh,
+                in_specs=in_specs, out_specs=out_specs)
             return fn(jnp.arange(n_client, dtype=jnp.int32),
                       params_stored, opt_state, dsc_ref, batch, key)
         return step
@@ -285,6 +385,7 @@ def main():  # pragma: no cover - thin CLI over the factories
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--lr", type=float, default=1e-2)
     ap.add_argument("--dsc", action="store_true")
+    ap.add_argument("--int8-wire", action="store_true")
     ap.add_argument("--data-axis", type=int, default=None)
     ap.add_argument("--model-axis", type=int, default=1)
     args = ap.parse_args()
@@ -293,7 +394,8 @@ def main():  # pragma: no cover - thin CLI over the factories
         cfg = cfg.smoke()
     mesh = make_host_mesh(data=args.data_axis, model=args.model_axis)
     opt = adam(args.lr)
-    settings = TrainSettings(use_dsc=args.dsc, grad_dtype="float32")
+    settings = TrainSettings(use_dsc=args.dsc, grad_dtype="float32",
+                             int8_wire=args.int8_wire)
     step, shardings = make_train_step(cfg, mesh, opt, settings)
     key = jax.random.PRNGKey(0)
     n_client = _client_size(mesh)

@@ -1,5 +1,6 @@
 """Distributed runtime execution tests (subprocess with 8 host devices so
-the main test process keeps its single-device view)."""
+the main test process keeps its single-device view), plus the 512-device
+lowering regression (subprocess with 512 placeholder devices)."""
 import json
 import subprocess
 import sys
@@ -72,3 +73,47 @@ def test_fsa_distributed_matches_fedavg_reference():
     assert all(abs(a - b) / max(abs(a), 1e-6) < 0.05
                for a, b in zip(ref, fsa)), (ref, fsa)
     assert fsa[-1] < fsa[0]       # it actually trains
+
+
+@pytest.mark.slow
+def test_fsa_int8_wire_matches_simulator():
+    """The int8-wire FSA runtime (quantize -> all_to_all int8 blocks +
+    f32 scales -> dequantize aggregator-side) lands on the simulator's
+    ``int8_wire`` trajectory: same stage list, independent rounding
+    draws, so final params agree to the quantization tolerance.  Reuses
+    the three-engine subprocess harness from test_parity_engines (one
+    shared setup, two wire formats across the two files)."""
+    import numpy as np
+    from test_parity_engines import _run_parity
+    out = _run_parity(int8=True)
+    sim, dist = np.asarray(out["sim"]), np.asarray(out["dist"])
+    x0 = np.asarray(out["x0"])
+    np.testing.assert_allclose(dist, sim, atol=1e-2)
+    np.testing.assert_allclose(np.asarray(out["scan"]), sim,
+                               rtol=1e-5, atol=1e-5)
+    assert np.abs(dist - x0).max() > 1e-3       # it actually trains
+
+
+@pytest.mark.slow
+def test_512_device_lowering_int8_wire(tmp_path):
+    """ROADMAP regression: the 2x16x16 (512-device) config must compile
+    under the full-manual lowering (no ``IsManualSubgroup`` abort), and
+    the FSA reduce-scatter stage's payload — read from the lowered HLO by
+    ``hlo_analysis`` — must cross the mesh as int8."""
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "qwen2-0.5b",
+         "--shape", "train_1k", "--multi-pod", "--int8-wire",
+         "--out", str(tmp_path)],
+        capture_output=True, text=True, timeout=900,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+    assert r.returncode == 0, (r.stdout[-500:], r.stderr[-2000:])
+    rec = json.loads((tmp_path / "qwen2-0_5b__train_1k_mp.json").read_text())
+    assert rec["devices"] == 512
+    assert rec["wire_dtype"] == "s8"        # the reduce-scatter stage dtype
+    dtypes = rec["collective_bytes_per_device"]["dtypes"]
+    # int8 blocks dominate the exchange; f32 appears only as the scales
+    a2a = dtypes["all-to-all"]
+    assert a2a.get("s8", 0) > 0
+    assert a2a.get("s8", 0) > 10 * a2a.get("f32", 0)
+    # nothing falls back to a wide-dtype reduce-scatter
+    assert not dtypes["reduce-scatter"]
