@@ -29,12 +29,34 @@ from repro.launch.shapes import SHAPES
 DRYRUN_DIR = Path("experiments/dryrun")
 
 
-def collective_seconds(coll: dict, devices: int) -> tuple[float, dict]:
-    """Convert per-kind payload bytes into link-seconds."""
-    n = devices
-    w = {"all-gather": (n - 1) / n, "reduce-scatter": (n - 1) / n,
-         "all-reduce": 2 * (n - 1) / n, "all-to-all": (n - 1) / n,
-         "collective-permute": 1.0}
+def _ring_weights(n: int) -> dict:
+    n = max(n, 2)
+    return {"all-gather": (n - 1) / n, "reduce-scatter": (n - 1) / n,
+            "all-reduce": 2 * (n - 1) / n, "all-to-all": (n - 1) / n,
+            "collective-permute": 1.0}
+
+
+def collective_seconds(coll: dict, devices: int,
+                       model_size: int = 1) -> tuple[float, dict]:
+    """Convert per-kind payload bytes into link-seconds.
+
+    When the record carries the per-axis breakdown (``axes``), each
+    axis's collectives are weighted with THAT axis's ring size — a
+    model-axis psum circulates over ``model_size`` neighbors, not the
+    whole mesh — otherwise everything is priced at the full device
+    count (the pre-TP behavior, an upper bound)."""
+    axes = coll.get("axes")
+    if axes and model_size > 1:
+        ring = {"model": model_size,
+                "client": max(devices // model_size, 1),
+                "all": devices}
+        per_kind = {k: 0.0 for k in _ring_weights(devices)}
+        for axis, by_kind in axes.items():
+            w = _ring_weights(ring.get(axis, devices))
+            for k in per_kind:
+                per_kind[k] += by_kind.get(k, 0.0) * w[k] / ICI_BW
+        return sum(per_kind.values()), per_kind
+    w = _ring_weights(devices)
     per_kind = {k: coll.get(k, 0.0) * w[k] / ICI_BW for k in w}
     return sum(per_kind.values()), per_kind
 
@@ -56,7 +78,8 @@ def analyze_record(rec: dict) -> dict:
     t_compute = rec["flops_per_device"] / PEAK_FLOPS_BF16
     t_memory = rec["bytes_accessed_per_device"] / HBM_BW
     t_coll, per_kind = collective_seconds(
-        rec["collective_bytes_per_device"], n)
+        rec["collective_bytes_per_device"], n,
+        model_size=rec.get("tp", {}).get("size", 1))
     terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
     dominant = max(terms, key=terms.get)
     mf = model_flops(rec)

@@ -23,7 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import dsc as dsc_lib
-from repro.core.compressors import Compressor, Identity
+from repro.core.compressors import Compressor
 
 
 def gaussian_sigma(eps: float, delta: float, clip: float) -> float:

@@ -6,16 +6,22 @@ The mesh has two kinds of axes:
   *aggregator*: it owns a disjoint segment of each parameter ("store"
   layout), receives exactly that segment of every client update via
   ``psum_scatter`` (Eq. 2), and runs the shard-local optimizer on it.
-* **model axis** — tensor parallelism inside each client group, left to
-  GSPMD ("use" layout).
+* **model axis** — manual-collective tensor parallelism inside each
+  client group (Megatron pairing: column/row matmul pairs wired through
+  ``models/layers.tp_push``/``tp_pull``).  :class:`TPSpec` maps every
+  entry of ``models/transformer.param_spec`` to its model-axis shard dim
+  (or replicate); the serving path keeps its GSPMD "use" layout.
 
 The segment-of-a-parameter choice is the *scatter dim*: for each leaf we
-pick the rightmost dimension divisible by the number of aggregators; a
-leaf with no such dimension is replicated and aggregated with a full
-``psum`` (always correct, never sharded).  This mirrors the coordinate
-partition masks of ``repro.core.masks`` at tensor granularity: the set of
-(leaf, slice) pairs owned by aggregator ``a`` IS the mask m_(a) —
-disjoint and complete by construction (Theorem B.1 applies unchanged).
+pick the rightmost dimension OF THE TP-LOCAL SHAPE divisible by the
+number of aggregators; a leaf with no such dimension is replicated over
+the client axes and aggregated with a full ``psum`` (always correct,
+never sharded).  This mirrors the coordinate partition masks of
+``repro.core.masks`` at tensor granularity: the set of (leaf, slice)
+pairs owned by aggregator ``a`` IS the mask m_(a) — disjoint and
+complete by construction (Theorem B.1 applies unchanged; with TP it
+applies per model-axis shard).  The "store" layout composes both axes:
+``model`` at the TP dim times the client axes at the scatter dim.
 """
 from __future__ import annotations
 
@@ -59,6 +65,105 @@ def _abstract_params(cfg):
                           jax.random.PRNGKey(0))
 
 
+# --------------------------------------------------- tensor-parallel spec
+@dataclasses.dataclass(frozen=True)
+class TPSpec:
+    """Model-axis placement of one parameter leaf (stacked shapes).
+
+    ``kind``:
+      * ``col`` / ``row`` — Megatron column/row shard at ``dim``; the
+        leaf's gradient is naturally shard-local.
+      * ``vocab``   — vocab-parallel embedding rows (col shard of the
+        unembed); shard-local gradients like col/row.
+      * ``replicate`` — identical on every model position; the gradient
+        comes out replicated (full) on each position.
+      * ``partial`` — replicated VALUES consumed inside a TP region on
+        local shards only (qk-norm scales over local heads): each
+        position's gradient is a partial sum, and the train body must
+        ``psum`` it over the model axis (see :func:`tp_grad_sync`).
+    """
+
+    dim: int = -1
+    kind: str = "replicate"
+
+
+def tp_specs(cfg, tp: int) -> Any:
+    """Pytree of :class:`TPSpec` matching the parameter tree: every entry
+    of ``models/transformer.param_spec`` mapped to its model-axis shard
+    dim (or replicate), following the Megatron pairing of
+    ``models/transformer.tp_plan``."""
+    from repro.models import transformer as tr
+    plan = tr.tp_plan(cfg, tp)
+    rep = TPSpec()
+
+    def block_spec(name: str) -> TPSpec:
+        if plan.attn:
+            if name in ("wq", "wk", "wv"):
+                return TPSpec(2, "col")
+            if name in ("bq", "bk", "bv"):
+                return TPSpec(1, "col")
+            if name == "wo":
+                return TPSpec(1, "row")
+            if name in ("q_norm", "k_norm"):
+                return TPSpec(-1, "partial")
+        if plan.ffn:
+            if name in ("w_gate", "w_up"):
+                return TPSpec(2, "col")
+            if name == "w_down":
+                return TPSpec(1, "row")
+        return rep
+
+    spec = tr.param_spec(cfg)
+    out: dict[str, Any] = {}
+    for name in spec:
+        if name == "blocks":
+            out["blocks"] = {bn: block_spec(bn) for bn in spec["blocks"]}
+        elif name == "embed":
+            out["embed"] = TPSpec(0, "vocab") if plan.vocab else rep
+        elif name == "lm_head":
+            out["lm_head"] = TPSpec(1, "col") if plan.vocab else rep
+        else:                                   # ln_f, proj_in, ...
+            out[name] = rep
+    return out
+
+
+def tp_local_shape(shape: tuple[int, ...], spec: TPSpec,
+                   tp: int) -> tuple[int, ...]:
+    """The per-model-position shape of a leaf under ``spec``."""
+    if spec.dim < 0 or tp <= 1:
+        return tuple(shape)
+    shape = list(shape)
+    shape[spec.dim] //= tp
+    return tuple(shape)
+
+
+def tp_split_leaf(x: jax.Array, spec: TPSpec, tp: int) -> jax.Array:
+    """Materialize the per-position TP shards of one leaf: stacked
+    ``(tp, *local_shape)``, shard i = model position i's slice (the same
+    contiguous chunking ``P('model' @ dim)`` produces)."""
+    if spec.dim < 0 or tp <= 1:
+        return jnp.stack([x] * max(tp, 1))
+    return jnp.stack(jnp.split(x, tp, axis=spec.dim))
+
+
+def tp_merge_leaf(shards: jax.Array, spec: TPSpec) -> jax.Array:
+    """Inverse of :func:`tp_split_leaf` (replicated leaves: shard 0)."""
+    if spec.dim < 0:
+        return shards[0]
+    return jnp.concatenate(list(shards), axis=spec.dim)
+
+
+def tp_grad_sync(grads: Any, specs: Any, axis) -> Any:
+    """Inside the manual region, after ``value_and_grad``: ``partial``
+    leaves (replicated params consumed shard-locally) carry per-position
+    partial sums — psum them over the model axis.  col/row/vocab grads
+    are shard-local and replicate-kind grads already replicated, so both
+    pass through untouched."""
+    return jax.tree.map(
+        lambda g, s: jax.lax.psum(g, axis) if s.kind == "partial" else g,
+        grads, specs)
+
+
 def scatter_dim_for(shape: tuple[int, ...], n_client: int) -> int:
     """Rightmost dim divisible by n_client, else -1 (replicate + psum)."""
     for d in range(len(shape) - 1, -1, -1):
@@ -69,10 +174,16 @@ def scatter_dim_for(shape: tuple[int, ...], n_client: int) -> int:
 
 def fsa_scatter_dims(cfg, mesh: Mesh) -> Any:
     """Per-leaf scatter dim for the FSA reduce-scatter / shard-local
-    optimizer (pytree of ints matching the param tree)."""
+    optimizer (pytree of ints matching the param tree).  Computed on the
+    TP-LOCAL shape: inside the manual region every leaf is already the
+    model position's shard, and the client segmentation divides that."""
     n_client = client_count(mesh)
+    tp = _model_size(mesh)
     params = _abstract_params(cfg)
-    return jax.tree.map(lambda p: scatter_dim_for(p.shape, n_client), params)
+    specs = tp_specs(cfg, tp)
+    return jax.tree.map(
+        lambda p, s: scatter_dim_for(tp_local_shape(p.shape, s, tp),
+                                     n_client), params, specs)
 
 
 # -------------------------------------------------------------- shardings
@@ -82,6 +193,56 @@ def _spec_with(dim: int, axes) -> P:
     parts: list = [None] * (dim + 1)
     parts[dim] = axes
     return P(*parts)
+
+
+def _as_tuple(axes) -> tuple:
+    return axes if isinstance(axes, tuple) else (axes,)
+
+
+def composite_store_spec(tp_dim: int, fsa_dim: int, caxis) -> P:
+    """'store' PartitionSpec of one leaf: ``model`` at the TP dim times
+    the client axes at the (TP-local) FSA scatter dim.  When both land on
+    the same dim the model axis is the major factor — each model position
+    owns a contiguous TP block, client-segmented within."""
+    if tp_dim < 0 and fsa_dim < 0:
+        return P()
+    parts: list = [None] * (max(tp_dim, fsa_dim) + 1)
+    if tp_dim >= 0:
+        parts[tp_dim] = ("model",)
+    if fsa_dim >= 0:
+        parts[fsa_dim] = (tuple(parts[fsa_dim] or ()) + _as_tuple(caxis))
+    return P(*[p[0] if isinstance(p, tuple) and len(p) == 1 else p
+               for p in parts])
+
+
+def store_specs(cfg, mesh: Mesh) -> Any:
+    """Pytree of 'store'-layout PartitionSpecs (the composite model x
+    client placement) matching the parameter tree."""
+    caxis = _caxis(mesh)
+    tp = _model_size(mesh)
+    dims = fsa_scatter_dims(cfg, mesh)
+    specs = tp_specs(cfg, tp)
+    return jax.tree.map(
+        lambda d, s: composite_store_spec(s.dim, d, caxis), dims, specs)
+
+
+def dsc_store_spec(tp_leaf: TPSpec, caxis) -> P:
+    """Layout of one client-stacked DSC-reference leaf, global shape
+    ``(n_client, *full_leaf_shape)``: client axes at the stacking dim 0,
+    ``model`` at the leaf's TP dim shifted by the stack."""
+    parts: list = [caxis] + [None] * max(tp_leaf.dim + 1, 0)
+    if tp_leaf.dim >= 0:
+        parts[tp_leaf.dim + 1] = "model"
+    return P(*parts)
+
+
+def tp_param_in_specs(cfg, mesh: Mesh) -> Any:
+    """shard_map in_specs for the parameter broadcast: sharded over
+    ``model`` at each leaf's TP dim, replicated over the client axes (the
+    boundary all-gather is the FSA broadcast, Algorithm 1 line 14)."""
+    tp = _model_size(mesh)
+    return jax.tree.map(lambda s: _spec_with(s.dim, "model"),
+                        tp_specs(cfg, tp))
 
 
 def _use_spec(shape: tuple[int, ...], model: int) -> P:
@@ -98,19 +259,18 @@ def _use_spec(shape: tuple[int, ...], model: int) -> P:
 def param_shardings(cfg, mesh: Mesh, mode: str = "store") -> Any:
     """NamedShardings for the parameter tree.
 
-    * ``store`` — FSA layout: each leaf split over the client axes at its
-      scatter dim (aggregator a owns segment a); leaves with no scatter
-      dim replicated.
+    * ``store`` — FSA x TP layout: each leaf split over ``model`` at its
+      TP dim (per :func:`tp_specs`) and over the client axes at its
+      TP-local scatter dim (aggregator a owns segment a); leaves with
+      neither replicated.
     * ``use``   — serving/compute layout: replicated over client axes,
-      tensor-parallel over 'model' where divisible.
+      tensor-parallel over 'model' where divisible (GSPMD hints).
     """
     params = _abstract_params(cfg)
     if mode == "store":
-        caxis = _caxis(mesh)
-        dims = fsa_scatter_dims(cfg, mesh)
-        return jax.tree.map(
-            lambda p, d: NamedSharding(mesh, _spec_with(d, caxis)),
-            params, dims)
+        return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                            store_specs(cfg, mesh),
+                            is_leaf=lambda x: isinstance(x, P))
     if mode == "use":
         model = _model_size(mesh)
         return jax.tree.map(
@@ -201,24 +361,38 @@ def wire_layout_for(shape: tuple[int, ...], n_client: int) -> WireLayout:
 
 
 def int8_wire_layouts(cfg, mesh: Mesh) -> Any:
-    """Pytree of :class:`WireLayout` matching the parameter tree."""
+    """Pytree of :class:`WireLayout` matching the parameter tree (wire
+    geometry of the TP-LOCAL leaf each mesh position exchanges)."""
     n_client = client_count(mesh)
+    tp = _model_size(mesh)
     params = _abstract_params(cfg)
-    return jax.tree.map(lambda p: wire_layout_for(p.shape, n_client), params)
+    specs = tp_specs(cfg, tp)
+    return jax.tree.map(
+        lambda p, s: wire_layout_for(tp_local_shape(p.shape, s, tp),
+                                     n_client), params, specs)
 
 
 def mesh_wire_bytes(cfg, mesh: Mesh, *, int8: bool,
                     grad_bytes: int = 2) -> int:
-    """Bytes ONE client puts on the mesh per round under the FSA exchange:
-    the sum over leaves of every transmitted segment (n_client - 1 remote
-    segments + its own, counted once each, matching the collective's
-    logical payload).  ``int8=False`` accounts the ``grad_dtype`` path."""
+    """Bytes ONE client (mesh position) puts on the client axes per round
+    under the FSA exchange: the sum over leaves of every transmitted
+    segment (n_client - 1 remote segments + its own, counted once each,
+    matching the collective's logical payload).  With a model axis, each
+    position exchanges only its TP-local shard, so this is per-position;
+    model-axis psum traffic is accounted separately (``hlo_analysis``
+    per-axis breakdown).  ``int8=False`` accounts the ``grad_dtype``
+    path."""
     n_client = client_count(mesh)
+    tp = _model_size(mesh)
     params = _abstract_params(cfg)
+    specs = tp_specs(cfg, tp)
     total = 0
-    for p, lay in zip(jax.tree.leaves(params),
-                      jax.tree.leaves(int8_wire_layouts(cfg, mesh))):
-        elems = int(np.prod(p.shape))
+    for p, s, lay in zip(jax.tree.leaves(params),
+                         jax.tree.leaves(specs),
+                         jax.tree.leaves(int8_wire_layouts(
+                             cfg, mesh),
+                             is_leaf=lambda x: isinstance(x, WireLayout))):
+        elems = int(np.prod(tp_local_shape(p.shape, s, tp)))
         if int8 and lay.dim >= 0:
             total += n_client * lay.wire_bytes
         else:

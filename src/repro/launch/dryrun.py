@@ -73,10 +73,16 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
     if isinstance(cost, list):          # older jax: one dict per partition
         cost = cost[0] if cost else {}
     hlo = compiled.as_text()
+    model_size = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
     from repro.launch import hlo_analysis
-    deep = hlo_analysis.analyze(hlo)         # trip-count-aware per-device
+    deep = hlo_analysis.analyze(hlo, model_axis_size=int(model_size))
 
-    from repro.models.transformer import param_count, active_param_count
+    from repro.models.transformer import (active_param_count, param_count,
+                                          tp_plan)
+    plan = tp_plan(cfg, int(model_size))
+    from repro.dist import sharding as sh_lib
+    n_tp_sharded = sum(s.dim >= 0 for s in jax.tree_util.tree_leaves(
+        sh_lib.tp_specs(cfg, int(model_size))))
     record = {
         "arch": arch, "shape": shape_name,
         "mesh": "2x16x16" if multi_pod else "16x16",
@@ -84,6 +90,10 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
         "fsa": fsa, "use_dsc": use_dsc, "grad_dtype": grad_dtype,
         "int8_wire": int8_wire,
         "wire_dtype": deep["collective_bytes"].get("wire_dtype", ""),
+        "tp": {"size": int(model_size), "attn": plan.attn,
+               "ffn": plan.ffn, "vocab": plan.vocab,
+               "sharded_leaves": int(n_tp_sharded)} if shape.kind == "train"
+        else {"size": int(model_size)},
         "tag": tag,
         "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
         "params": param_count(cfg),

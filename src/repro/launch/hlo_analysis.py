@@ -33,6 +33,48 @@ _COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*->.*\{\s*$")
 COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
                "collective-permute")
 
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+_IOTA_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([0-9,]+)\](?:T\(([0-9,]+)\))?")
+
+
+def _first_group(line: str):
+    """First replica group of a collective op as a list of device ids, or
+    None when unparseable / absent (``replica_groups={}`` = all devices).
+    Handles the explicit ``{{0,1,...},...}`` form and the iota form
+    ``[G,S]<=[dims...]`` with optional transpose."""
+    m = _GROUPS_RE.search(line)
+    if m:
+        return [int(x) for x in m.group(1).replace(" ", "").split(",") if x]
+    m = _IOTA_RE.search(line)
+    if m:
+        import numpy as np
+        g, s = int(m.group(1)), int(m.group(2))
+        dims = [int(d) for d in m.group(3).split(",") if d]
+        ids = np.arange(int(np.prod(dims))).reshape(dims)
+        if m.group(4):
+            ids = ids.transpose([int(p) for p in m.group(4).split(",")])
+        return list(ids.reshape(g, s)[0])
+    return None
+
+
+def _classify_axis(group, model_size: int) -> str:
+    """Mesh-axis label of one collective from its replica-group shape.
+
+    The ``model`` axis is the minor-most mesh axis, so model-axis
+    collectives run over ``model_size`` CONSECUTIVE device ids; client-
+    axis collectives stride over the model dimension (stride ==
+    model_size).  Anything else (or no groups = every device) is 'all'.
+    """
+    if not group:
+        return "all"
+    stride = group[1] - group[0] if len(group) > 1 else 1
+    if model_size > 1 and len(group) == model_size and stride == 1:
+        return "model"
+    if stride == model_size or model_size == 1:
+        return "client"
+    return "all"
+
 
 def _shape_elems_bytes(text: str):
     total_b = 0
@@ -204,7 +246,7 @@ class HloModule:
                 total += m * 2.0 * out_elems * k
         return total
 
-    def collective_bytes(self) -> dict:
+    def collective_bytes(self, model_axis_size: int = 1) -> dict:
         """Payload bytes per collective kind, trip-count weighted.  The
         payload is max(operand bytes, result bytes) — i.e. the full
         logical tensor crossing the interconnect.
@@ -216,10 +258,18 @@ class HloModule:
         the collective, so the int8 lowering emits the scatter half as an
         ``all-to-all``; the reduce-scatter stage's dtype is therefore read
         from reduce-scatter ops when present and all-to-all ops otherwise.
+
+        With ``model_axis_size`` the per-op replica groups additionally
+        classify every collective onto its mesh axis — ``axes`` maps
+        {model | client | all} -> {kind -> payload bytes} and
+        ``axis_counts`` the trip-weighted op counts, separating the
+        tensor-parallel psum traffic from the FSA client wire.
         """
         out = {k: 0.0 for k in COLLECTIVES}
         counts = {k: 0 for k in COLLECTIVES}
         dtypes: dict[str, dict[str, float]] = {k: {} for k in COLLECTIVES}
+        axes: dict[str, dict[str, float]] = {}
+        axis_counts: dict[str, dict[str, int]] = {}
         for comp, ops in self.computations.items():
             m = self.multipliers.get(comp, 1.0)
             for op in ops:
@@ -230,6 +280,12 @@ class HloModule:
                 operand_b = self._operand_bytes(op["rest"])
                 out[kind] += m * max(result_b, operand_b)
                 counts[kind] += int(m)
+                axis = _classify_axis(_first_group(op["line"]),
+                                      model_axis_size)
+                ax = axes.setdefault(axis, {})
+                ax[kind] = ax.get(kind, 0.0) + m * max(result_b, operand_b)
+                axc = axis_counts.setdefault(axis, {})
+                axc[kind] = axc.get(kind, 0) + int(m)
                 # dtype breakdown of the SAME payload the total counts:
                 # the operand side when it is the larger (reduce-scatter
                 # consumes n_devices x its result), else the result side
@@ -246,6 +302,8 @@ class HloModule:
                         + m * n * _DTYPE_BYTES[dt]
         out["counts"] = counts
         out["dtypes"] = dtypes
+        out["axes"] = axes
+        out["axis_counts"] = axis_counts
         out["wire_dtype"] = self._wire_dtype(dtypes)
         return out
 
@@ -280,8 +338,8 @@ class HloModule:
         return total
 
 
-def analyze(hlo_text: str) -> dict:
+def analyze(hlo_text: str, model_axis_size: int = 1) -> dict:
     mod = HloModule(hlo_text)
     return {"flops": mod.flops(),
-            "collective_bytes": mod.collective_bytes(),
+            "collective_bytes": mod.collective_bytes(model_axis_size),
             "traffic_bytes": mod.traffic_bytes()}

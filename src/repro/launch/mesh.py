@@ -15,10 +15,26 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 
 def make_host_mesh(data: int | None = None, model: int = 1):
-    """Small mesh over whatever devices exist (tests / examples)."""
+    """Small (data, model) mesh over whatever devices exist (tests /
+    examples).  Validates the factorization up front — ``jax.make_mesh``
+    would otherwise silently build a mesh over a subset (or fail deep in
+    device assignment) when the axis sizes don't divide the host devices.
+    """
     n = len(jax.devices())
+    if model < 1 or n % model != 0:
+        raise ValueError(
+            f"model axis size {model} must divide the {n} available "
+            f"device(s) (n % model == {n % model if model else 'undef'}); "
+            f"pick --model-axis from the divisors of {n}, or raise the "
+            f"device count via XLA_FLAGS=--xla_force_host_platform_"
+            f"device_count=<n>")
     if data is None:
         data = n // model
+    if data < 1 or data * model != n:
+        raise ValueError(
+            f"mesh ({data} data x {model} model) needs {data * model} "
+            f"devices but {n} are available; leave data=None to infer "
+            f"data = n // model = {n // model}")
     return jax.make_mesh((data, model), ("data", "model"))
 
 

@@ -10,11 +10,16 @@ configs, so the lowering keeps nothing automatic:
      shard_map in_spec requests them replicated, so XLA inserts the
      all-gather: x^t = sum_a m_(a) . x^t_(a)   (Algorithm 1 line 14).
   2. *Local update* — each client-axis position computes gradients on its
-     own client group's batch shard.  When the per-group batch divides the
-     ``model`` axis, that axis data-parallelizes the group's batch (grads
-     pmean'd over ``model``); otherwise model positions replicate the
-     group's computation (full-manual fallback — no GSPMD tensor
-     parallelism inside the manual region).
+     own client group's batch shard.  The ``model`` axis runs
+     manual-collective Megatron tensor parallelism (``tp_plan``): QKV /
+     gate / up column-parallel, wo / down row-parallel, vocab-parallel
+     embedding + unembed, each pair wired through the
+     ``tp_push``/``tp_pull`` conjugate collectives (exactly two psums per
+     pair, forward and backward) with the cross-entropy computed on
+     vocab-sharded logits.  Architectures the plan cannot shard (moe /
+     ssm / hybrid, or indivisible dims) fall back to the previous
+     behavior: the model axis data-parallelizes the group batch when it
+     divides, else replicates the group's computation.
   3. *DSC (optional)* — each client group shift-compresses its update
      v_k = C(g_k - s_k), s_k += gamma v_k, before transmission.
   4. *FSA aggregation* — the reduce-scatter stage.  Two wire formats:
@@ -151,29 +156,44 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh, opt: Optimizer,
     n_client = _client_size(mesh)
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
     model_size = int(sizes.get("model", 1))
+    tp_plan = tr.tp_plan(cfg, model_size)
+    use_tp = tp_plan.active
+    tp_spec_tree = sh.tp_specs(cfg, model_size)
     scatter_dims = sh.fsa_scatter_dims(cfg, mesh) if settings.fsa else None
     store = sh.param_shardings(cfg, mesh, "store" if settings.fsa else "use")
 
-    def loss_fn(params, batch):
-        return tr.loss_fn(params, cfg, batch)
+    def loss_fn(params, batch, tp=None):
+        return tr.loss_fn(params, cfg, batch, tp=tp)
 
     # ---------------- the manual (per-mesh-position) body -----------------
-    def fsa_body(aidx_arr, params, opt_state, dsc_ref, batch, key, *,
-                 model_split):
-        # params arrive replicated (the all-gather / broadcast happened at
-        # the shard_map boundary); batch is this client group's shard,
-        # further split over the model axis when model_split.  aidx_arr is
-        # this position's slice of arange(n_client) — the aggregator id
-        # (axis_index lowers to an unsupported PartitionId under manual
-        # SPMD, so it rides in as a sharded input instead).
+    def fsa_body(aidx_arr, midx_arr, params, opt_state, dsc_ref, batch, key,
+                 *, model_split):
+        # params arrive as this model position's TP shards, replicated
+        # over the client axes (the all-gather / broadcast happened at the
+        # shard_map boundary); batch is this client group's shard, further
+        # split over the model axis only when model_split (the non-TP
+        # fallback).  aidx_arr/midx_arr are this position's slices of
+        # arange(n_client)/arange(model) — the aggregator id and model
+        # coordinate (axis_index lowers to an unsupported PartitionId
+        # under manual SPMD, so both ride in as sharded inputs instead).
         aidx = aidx_arr[0]
-        loss_val, grads = jax.value_and_grad(loss_fn)(params, batch)
-        loss_axes = (*ca, "model") if model_split else caxis
-        loss_val = jax.lax.pmean(loss_val, loss_axes)
-        if model_split:
-            # model axis = intra-group data parallelism: the group's
-            # update is the mean over its model-axis micro-shards
-            grads = jax.tree.map(lambda g: jax.lax.pmean(g, "model"), grads)
+        if use_tp:
+            tp_rt = tr.TPRuntime("model", model_size, midx_arr[0], tp_plan)
+            loss_val, grads = jax.value_and_grad(loss_fn)(params, batch,
+                                                          tp_rt)
+            # partial-kind leaves (replicated values consumed on local
+            # shards, e.g. qk-norm scales) sum their grads over 'model'
+            grads = sh.tp_grad_sync(grads, tp_spec_tree, "model")
+            loss_val = jax.lax.pmean(loss_val, caxis)
+        else:
+            loss_val, grads = jax.value_and_grad(loss_fn)(params, batch)
+            loss_axes = (*ca, "model") if model_split else caxis
+            loss_val = jax.lax.pmean(loss_val, loss_axes)
+            if model_split:
+                # model axis = intra-group data parallelism: the group's
+                # update is the mean over its model-axis micro-shards
+                grads = jax.tree.map(lambda g: jax.lax.pmean(g, "model"),
+                                     grads)
 
         leaves, treedef = jax.tree.flatten(grads)
         stage = dsc_stage(settings) if settings.use_dsc else None
@@ -243,47 +263,59 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh, opt: Optimizer,
         delta, opt_state = opt.update(grads, opt_state, params_shard)
         params_shard = jax.tree.map(jnp.add, params_shard, delta)
 
-        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
-                             for g in jax.tree.leaves(grads)))
-        gnorm = jax.lax.psum(gnorm * gnorm, caxis) ** 0.5 \
-            if settings.fsa else gnorm
+        sq = [jnp.sum(jnp.square(g.astype(jnp.float32)))
+              for g in jax.tree.leaves(grads)]
+        if use_tp:
+            # TP-sharded leaves are disjoint over 'model'; replicated ones
+            # must not be double-counted by the model-axis sum
+            tps = [s.dim >= 0 for s in jax.tree.leaves(tp_spec_tree)]
+            gn2 = jax.lax.psum(sum(x for x, t in zip(sq, tps) if t)
+                               + jnp.zeros((), jnp.float32), "model") \
+                + sum((x for x, t in zip(sq, tps) if not t),
+                      jnp.zeros((), jnp.float32))
+        else:
+            gn2 = sum(sq)
+        gnorm = jax.lax.psum(gn2, caxis) ** 0.5 \
+            if settings.fsa else jnp.sqrt(gn2)
         metrics = {"loss": loss_val.astype(jnp.float32), "grad_norm": gnorm}
         return params_shard, opt_state, dsc_ref, metrics
 
     # ------------------------- shard_map specs ---------------------------
-    def spec_of_store(leaf_dim):
-        if leaf_dim is None or leaf_dim < 0 or not settings.fsa:
-            return P()
-        parts = [None] * (leaf_dim + 1)
-        parts[leaf_dim] = caxis
-        return P(*parts)
-
     params_abs = jax.eval_shape(
         functools.partial(tr.init_params, cfg=cfg), jax.random.PRNGKey(0))
+    # params enter TP-sharded over 'model', replicated over client axes
+    # (the boundary all-gather is the FSA broadcast); they leave in the
+    # composite store layout (model @ TP dim x client axes @ scatter dim)
+    param_in_specs = sh.tp_param_in_specs(cfg, mesh)
     if settings.fsa:
-        param_specs = jax.tree.map(spec_of_store, scatter_dims)
+        param_specs = sh.store_specs(cfg, mesh)
     else:
-        param_specs = jax.tree.map(lambda _: P(), params_abs)
+        param_specs = param_in_specs
     opt_abs_local = jax.eval_shape(opt.init, params_abs)
     # opt state mirrors params leaf-wise (positional; scalars replicated)
     opt_specs = sh.mirror_state_specs(
         params_abs,
         jax.tree.leaves(param_specs, is_leaf=lambda x: isinstance(x, P)),
         opt_abs_local, P())
-    # DSC refs are client-stacked on dim 0 -> shard dim 0 over client axes
-    dsc_specs = jax.tree.map(lambda _: P(caxis) if settings.use_dsc else P(),
-                             params_abs)
+    # DSC refs are client-stacked on dim 0 -> shard dim 0 over the client
+    # axes, TP-sharded over 'model' at each leaf's (shifted) TP dim
+    dsc_specs = jax.tree.map(
+        lambda s: sh.dsc_store_spec(s, caxis) if settings.use_dsc else P(),
+        tp_spec_tree)
 
     def make_step():
         def step(params_stored, opt_state, dsc_ref, batch, key):
-            # model axis: data-parallel over the group's batch when the
-            # global batch divides all mesh positions, else replicated
-            # (full-manual fallback — see module docstring)
+            # without an applicable TP plan the model axis falls back to
+            # data-parallel over the group's batch when the global batch
+            # divides all mesh positions, else replicated (see module
+            # docstring)
             b0 = jax.tree.leaves(batch)[0].shape[0]
-            model_split = model_size > 1 and b0 % (n_client * model_size) == 0
+            model_split = (not use_tp and model_size > 1
+                           and b0 % (n_client * model_size) == 0)
             batch_spec = P((*ca, "model")) if model_split else P(caxis)
             in_specs = (P(caxis),                                 # aidx
-                        jax.tree.map(lambda _: P(), params_abs),  # broadcast
+                        P("model"),                               # midx
+                        param_in_specs,                           # broadcast
                         opt_specs, dsc_specs,
                         jax.tree.map(lambda _: batch_spec, batch),
                         P())
@@ -293,6 +325,7 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh, opt: Optimizer,
                 functools.partial(fsa_body, model_split=model_split), mesh,
                 in_specs=in_specs, out_specs=out_specs)
             return fn(jnp.arange(n_client, dtype=jnp.int32),
+                      jnp.arange(model_size, dtype=jnp.int32),
                       params_stored, opt_state, dsc_ref, batch, key)
         return step
 
@@ -304,27 +337,14 @@ def abstract_train_state(cfg: ModelConfig, mesh: Mesh, opt: Optimizer,
                          settings: TrainSettings = TrainSettings()):
     """ShapeDtypeStructs of (params_stored, opt_state, dsc_ref).
 
-    With FSA, optimizer/DSC state are *shard-local* (1/n_client of each
-    FSA-sharded dim) — they are shard_map-internal layouts.
+    All three are GLOBAL (pre-shard_map) views with FULL logical shapes —
+    the composite store sharding (model axis @ TP dim x client axes @
+    scatter dim) and the shard_map specs do the slicing; optimizer/DSC
+    state never materializes unsharded on a device (ZeRO-style).
     """
     n_client = _client_size(mesh) if settings.fsa else 1
-    scatter_dims = sh.fsa_scatter_dims(cfg, mesh)
     params = jax.eval_shape(
         functools.partial(tr.init_params, cfg=cfg), jax.random.PRNGKey(0))
-
-    def shard_shape(p, dim):
-        if not settings.fsa or dim < 0:
-            return p
-        shape = list(p.shape)
-        shape[dim] //= n_client
-        return jax.ShapeDtypeStruct(tuple(shape), p.dtype)
-
-    params_shard = jax.tree.map(shard_shape, params, scatter_dims)
-    opt_state = jax.eval_shape(opt.init, params_shard)
-
-    # global (pre-shard_map) views: params stored globally have FULL shape
-    # with store sharding; opt/dsc state globally also full shape (their
-    # shard_map spec re-slices them)
     opt_state_global = jax.eval_shape(opt.init, params)
     if settings.use_dsc:
         dsc_global = jax.tree.map(
@@ -352,9 +372,11 @@ def lower_train_step(cfg: ModelConfig, mesh: Mesh,
     rep = NamedSharding(mesh, P())
     ca = sh.client_axes(mesh)
     caxis = ca if len(ca) > 1 else ca[0]
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
     dsc_sh = jax.tree.map(
-        lambda _: NamedSharding(mesh, P(caxis)) if settings.use_dsc else rep,
-        dsc_ref)
+        lambda s: NamedSharding(mesh, sh.dsc_store_spec(s, caxis))
+        if settings.use_dsc else rep,
+        sh.tp_specs(cfg, int(sizes.get("model", 1))))
     key = jax.ShapeDtypeStruct((2,), jnp.uint32)
     jitted = jax.jit(
         step,

@@ -8,6 +8,50 @@ import jax
 import jax.numpy as jnp
 
 
+# ------------------------------------------------ tensor-parallel region
+# Megatron's f/g conjugate pair as custom-vjp collectives.  A TP region is
+#     y = tp_pull(partial(tp_push(x) @ W_col) @ W_row)
+# tp_push marks the region entry: the forward is free (x is already
+# replicated over the model axis) but each shard's backward contributes
+# only ITS columns' share of dL/dx, so the cotangent is psum'd.  tp_pull
+# marks the exit: the row-parallel partial products are psum'd forward,
+# and the (replicated) cotangent passes through untouched.  Exactly two
+# collectives per matmul pair, forward and backward — the naive psum
+# transpose rule would instead compound a factor of tp per region.
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def tp_push(x, axis):
+    """Enter a TP region: identity forward, psum(cotangent) backward."""
+    return x
+
+
+def _tp_push_fwd(x, axis):
+    return x, None
+
+
+def _tp_push_bwd(axis, _, ct):
+    return (jax.lax.psum(ct, axis),)
+
+
+tp_push.defvjp(_tp_push_fwd, _tp_push_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def tp_pull(x, axis):
+    """Exit a TP region: psum(partials) forward, identity backward."""
+    return jax.lax.psum(x, axis)
+
+
+def _tp_pull_fwd(x, axis):
+    return jax.lax.psum(x, axis), None
+
+
+def _tp_pull_bwd(axis, _, ct):
+    return (ct,)
+
+
+tp_pull.defvjp(_tp_pull_fwd, _tp_pull_bwd)
+
+
 def rms_norm(x, scale, eps=1e-6):
     var = jnp.mean(jnp.square(x.astype(jnp.float32)), -1, keepdims=True)
     return (x * jax.lax.rsqrt(var + eps).astype(x.dtype)) * scale

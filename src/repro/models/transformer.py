@@ -13,7 +13,7 @@ state (None in train/prefill).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional
+from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -22,6 +22,61 @@ from repro.models import layers as L
 from repro.models import moe as moe_lib
 from repro.models import ssm as ssm_lib
 from repro.models.config import ModelConfig
+
+
+# ==================================================== tensor parallelism
+@dataclasses.dataclass(frozen=True)
+class TPPlan:
+    """What the model axis shards, Megatron-style (static, from cfg).
+
+    Each True member is one column/row matmul pair wired through the
+    ``layers.tp_push``/``tp_pull`` conjugate collectives:
+
+    * ``attn``  — wq/wk/wv (+biases) column-parallel on heads, wo
+      row-parallel; requires n_heads AND n_kv_heads divisible by ``size``
+      (GQA with fewer kv heads than shards falls back to replicated
+      attention rather than duplicating kv state).
+    * ``ffn``   — w_gate/w_up column-parallel on d_ff, w_down row-parallel.
+    * ``vocab`` — vocab-parallel embedding (masked lookup + psum) and
+      column-parallel unembed; the cross-entropy runs on vocab-sharded
+      logits (pmax/psum logsumexp + masked target gather).
+
+    Only the dense-FFN families participate; moe/ssm/hybrid replicate the
+    model axis (their expert/state sharding is a different axis plan).
+    """
+
+    size: int = 1
+    attn: bool = False
+    ffn: bool = False
+    vocab: bool = False
+
+    @property
+    def active(self) -> bool:
+        return self.size > 1 and (self.attn or self.ffn or self.vocab)
+
+
+def tp_plan(cfg: ModelConfig, size: int) -> TPPlan:
+    """The model-axis sharding plan for ``cfg`` at ``size`` shards."""
+    if size <= 1 or cfg.family not in ("dense", "audio", "vlm"):
+        return TPPlan(size=max(size, 1))
+    return TPPlan(
+        size=size,
+        attn=cfg.n_heads % size == 0 and cfg.n_kv_heads % size == 0,
+        ffn=cfg.d_ff > 0 and cfg.d_ff % size == 0,
+        vocab=cfg.vocab % size == 0)
+
+
+class TPRuntime(NamedTuple):
+    """Per-trace TP context threaded through forward/loss_fn.
+
+    ``index`` is this position's model-axis coordinate (a traced scalar —
+    ``axis_index`` lowers to an unsupported PartitionId under fully-manual
+    SPMD, so the caller feeds it in as a sharded input instead)."""
+
+    axis: str
+    size: int
+    index: jax.Array
+    plan: TPPlan
 
 
 # ============================================================ param spec
@@ -119,17 +174,22 @@ def init_params(key: jax.Array, cfg: ModelConfig) -> dict:
 
 
 # ================================================================= blocks
-def _attn(cfg: ModelConfig, lp, x, positions, mode, cache, window):
+def _attn(cfg: ModelConfig, lp, x, positions, mode, cache, window, tp=None):
     B, S, D = x.shape
+    tp_attn = tp is not None and tp.plan.attn
+    n_heads = cfg.n_heads // (tp.size if tp_attn else 1)
+    n_kv = cfg.n_kv_heads // (tp.size if tp_attn else 1)
     h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+    if tp_attn:
+        h = L.tp_push(h, tp.axis)
     q = h @ lp["wq"]
     k = h @ lp["wk"]
     v = h @ lp["wv"]
     if cfg.qkv_bias:
         q, k, v = q + lp["bq"], k + lp["bk"], v + lp["bv"]
-    q = q.reshape(B, S, cfg.n_heads, cfg.hd)
-    k = k.reshape(B, S, cfg.n_kv_heads, cfg.hd)
-    v = v.reshape(B, S, cfg.n_kv_heads, cfg.hd)
+    q = q.reshape(B, S, n_heads, cfg.hd)
+    k = k.reshape(B, S, n_kv, cfg.hd)
+    v = v.reshape(B, S, n_kv, cfg.hd)
     if cfg.qk_norm:
         q = L.rms_norm(q, lp["q_norm"], cfg.norm_eps)
         k = L.rms_norm(k, lp["k_norm"], cfg.norm_eps)
@@ -157,12 +217,20 @@ def _attn(cfg: ModelConfig, lp, x, positions, mode, cache, window):
             from jax.sharding import PartitionSpec as _P
             out = jax.lax.with_sharding_constraint(out, _P("model"))
         new_cache = ({"k": k, "v": v} if mode == "prefill" else None)
-    return x + out.reshape(B, S, cfg.q_dim) @ lp["wo"], new_cache
+    y = out.reshape(B, S, n_heads * cfg.hd) @ lp["wo"]
+    if tp_attn:
+        y = L.tp_pull(y, tp.axis)
+    return x + y, new_cache
 
 
-def _ffn(cfg, lp, x):
+def _ffn(cfg, lp, x, tp=None):
+    tp_ffn = tp is not None and tp.plan.ffn
     h = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+    if tp_ffn:
+        h = L.tp_push(h, tp.axis)
     y = (jax.nn.silu(h @ lp["w_gate"]) * (h @ lp["w_up"])) @ lp["w_down"]
+    if tp_ffn:
+        y = L.tp_pull(y, tp.axis)
     return x + y
 
 
@@ -234,7 +302,7 @@ def init_mlstm_state(cfg, B, dtype=jnp.float32):
             "m": jnp.full((B, H), -1e30, jnp.float32)}
 
 
-def _block(cfg: ModelConfig, lp, x, positions, mode, cache, window):
+def _block(cfg: ModelConfig, lp, x, positions, mode, cache, window, tp=None):
     aux = {}
     if cfg.family == "ssm":
         x, mix_state = _mlstm(cfg, lp, x, mode,
@@ -255,7 +323,7 @@ def _block(cfg: ModelConfig, lp, x, positions, mode, cache, window):
         return x, new_cache, aux
     # dense / moe / audio / vlm
     x, kv = _attn(cfg, lp, x, positions, mode,
-                  cache.get("kv") if cache else None, window)
+                  cache.get("kv") if cache else None, window, tp)
     if cfg.family == "moe":
         h = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
         y, aux = moe_lib.moe_ffn(h, lp["router"], lp["w_gate"], lp["w_up"],
@@ -265,16 +333,29 @@ def _block(cfg: ModelConfig, lp, x, positions, mode, cache, window):
                                  expert_shard_acts=cfg.moe_expert_shard_acts)
         x = x + y
     else:
-        x = _ffn(cfg, lp, x)
+        x = _ffn(cfg, lp, x, tp)
     new_cache = {"kv": kv} if mode != "train" else None
     return x, new_cache, aux
 
 
 # ================================================================ forward
 def embed_inputs(params, cfg: ModelConfig, tokens,
-                 frontend_embeds=None):
-    """Token embedding; VLM prepends projected patch embeddings."""
-    x = params["embed"][tokens]
+                 frontend_embeds=None, tp=None):
+    """Token embedding; VLM prepends projected patch embeddings.
+
+    Under a vocab-parallel plan each shard holds vocab rows
+    [index*V/tp, (index+1)*V/tp): out-of-range tokens look up zero and
+    the psum (``tp_pull``) assembles the full embedding — the backward
+    stays local (each shard accumulates only its own rows' grads)."""
+    if tp is not None and tp.plan.vocab:
+        v_loc = cfg.vocab // tp.size
+        idx = tokens - tp.index * v_loc
+        ok = (idx >= 0) & (idx < v_loc)
+        x = jnp.where(ok[..., None],
+                      params["embed"][jnp.clip(idx, 0, v_loc - 1)], 0)
+        x = L.tp_pull(x, tp.axis)
+    else:
+        x = params["embed"][tokens]
     if cfg.frontend == "vlm":
         assert frontend_embeds is not None
         img = frontend_embeds.astype(x.dtype) @ params["proj_in"]
@@ -284,20 +365,24 @@ def embed_inputs(params, cfg: ModelConfig, tokens,
 
 def forward(params, cfg: ModelConfig, tokens, frontend_embeds=None,
             mode: str = "train", window: Optional[int] = None,
-            remat: bool = True):
+            remat: bool = True, tp: Optional[TPRuntime] = None):
     """Full-sequence forward.  Returns (logits, caches, aux).
 
     caches is the per-layer stacked decode state when mode == 'prefill'.
     With ``remat`` each layer is rematerialized in the backward pass
     (activation memory = one carry per layer instead of all residuals).
+    With ``tp`` (inside a manual shard_map over tp.axis) params are the
+    local shards of the TPPlan and, when the plan shards the vocab, the
+    returned logits are vocab-sharded (B, S, V/tp) — ``loss_fn`` computes
+    the cross-entropy without ever materializing full logits.
     """
-    x = embed_inputs(params, cfg, tokens, frontend_embeds)
+    x = embed_inputs(params, cfg, tokens, frontend_embeds, tp)
     B, S, D = x.shape
     positions = jnp.broadcast_to(jnp.arange(S), (B, S))
 
     def body(carry, lp):
         h = carry
-        h, cache, aux = _block(cfg, lp, h, positions, mode, None, window)
+        h, cache, aux = _block(cfg, lp, h, positions, mode, None, window, tp)
         return h, (cache, aux.get("load_balance", jnp.zeros((), jnp.float32)))
 
     if remat and mode == "train":
@@ -305,22 +390,51 @@ def forward(params, cfg: ModelConfig, tokens, frontend_embeds=None,
     x, (caches, lb) = jax.lax.scan(body, x, params["blocks"])
     x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
     head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    if tp is not None and tp.plan.vocab:
+        x = L.tp_push(x, tp.axis)       # column-parallel unembed
     logits = x @ head
     return logits, caches, {"load_balance": lb.mean()}
 
 
-def loss_fn(params, cfg: ModelConfig, batch, window=None):
+def loss_fn(params, cfg: ModelConfig, batch, window=None,
+            tp: Optional[TPRuntime] = None):
     """Causal LM loss.  batch: dict(tokens (B,S) [, frontend_embeds,
     loss_mask (B,S)]).  Next-token CE in f32 with logits sharded-friendly
-    logsumexp."""
+    logsumexp.
+
+    ``tp=None`` is the replicated path every simulator engine runs.  With
+    a TPRuntime (inside the distributed runtime's manual shard_map) the
+    forward computes on this position's parameter shards and, under a
+    vocab-parallel plan, the CE runs on vocab-sharded logits: pmax/psum
+    logsumexp plus a masked target-logit gather — the transposes stay
+    local, so gradients are exact (not tp-times-counted)."""
     tokens = batch["tokens"]
     logits, _, aux = forward(params, cfg, tokens,
-                             batch.get("frontend_embeds"), "train", window)
+                             batch.get("frontend_embeds"), "train", window,
+                             tp=tp)
     # align: for VLM, logits cover [img; text]; predict text tokens only
     n_pre = cfg.n_frontend_tokens if cfg.frontend == "vlm" else 0
     logits = logits[:, n_pre:, :]
     targ = tokens[:, 1:]
-    if cfg.loss_fp32_logits:
+    if tp is not None and tp.plan.vocab:
+        # sharded-vocab CE: max over shards via pmax (stop-grad, like the
+        # max-shift below), sum-of-exp and target logit assembled with
+        # tp_pull so each shard's backward touches only its own columns
+        v_loc = cfg.vocab // tp.size
+        pred = logits[:, :-1]
+        if cfg.loss_fp32_logits:
+            pred = pred.astype(jnp.float32)
+        m = jax.lax.pmax(jax.lax.stop_gradient(pred.max(-1)), tp.axis)
+        e = jnp.exp(pred - m[..., None])
+        lse = m.astype(jnp.float32) + jnp.log(
+            L.tp_pull(jnp.sum(e, axis=-1, dtype=jnp.float32), tp.axis))
+        idx = targ - tp.index * v_loc
+        ok = (idx >= 0) & (idx < v_loc)
+        ll_loc = jnp.take_along_axis(
+            pred, jnp.clip(idx, 0, v_loc - 1)[..., None], -1)[..., 0]
+        ll = L.tp_pull(jnp.where(ok, ll_loc, 0).astype(jnp.float32),
+                       tp.axis)
+    elif cfg.loss_fp32_logits:
         pred = logits[:, :-1].astype(jnp.float32)
         lse = jax.nn.logsumexp(pred, axis=-1)
         ll = jnp.take_along_axis(pred, targ[..., None], -1)[..., 0]

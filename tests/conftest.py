@@ -12,6 +12,13 @@ from __future__ import annotations
 import sys
 import types
 
+# Environment for the multi-device subprocess tests: hermetic, but with
+# the backend pinned to CPU — images that bake in libtpu otherwise burn
+# ~8 minutes per subprocess timing out on TPU discovery before falling
+# back (the host-platform device count only applies to the CPU backend).
+SUBPROC_ENV = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+               "JAX_PLATFORMS": "cpu"}
+
 
 def _install_hypothesis_shim():
     import numpy as np

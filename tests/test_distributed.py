@@ -8,6 +8,8 @@ import textwrap
 
 import pytest
 
+from conftest import SUBPROC_ENV
+
 SCRIPT = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -66,7 +68,7 @@ def test_fsa_distributed_matches_fedavg_reference():
     train step follows the centralized FedAvg loss trajectory."""
     r = subprocess.run([sys.executable, "-c", SCRIPT],
                        capture_output=True, text=True, timeout=900,
-                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+                       env=SUBPROC_ENV)
     assert r.returncode == 0, r.stderr[-2000:]
     out = json.loads(r.stdout.strip().splitlines()[-1])
     ref, fsa = out["ref"], out["fsa"]
@@ -94,18 +96,98 @@ def test_fsa_int8_wire_matches_simulator():
     assert np.abs(dist - x0).max() > 1e-3       # it actually trains
 
 
+TP4_INT8_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import jax, jax.numpy as jnp
+    import numpy as np
+    from jax.flatten_util import ravel_pytree
+    from repro.configs import get_config
+    from repro.core.fl import FLConfig, FLRun
+    from repro.data import lm_token_batches
+    from repro.launch.mesh import make_host_mesh
+    from repro.launch.train import TrainSettings, make_train_step
+    from repro.models import transformer as tr
+    from repro.optim import sgd
+
+    LR, STEPS = 0.05, 4
+    KEY = jax.random.PRNGKey(0)
+    cfg = get_config("qwen2-0.5b").smoke()
+    assert tr.tp_plan(cfg, 4).active        # ffn+vocab shard, attn falls back
+    toks = lm_token_batches(KEY, 1, 8, 32, cfg.vocab)[0]
+    batch = {"tokens": toks}
+    params0 = tr.init_params(KEY, cfg)
+
+    # ---- simulator: K=2 clients, one per client-axis group --------------
+    fl_cfg = FLConfig(method="eris", K=2, A=2, lr=LR, int8_wire=True,
+                      rounds=STEPS)
+    loss_fn = lambda p, b: tr.loss_fn(p, cfg, b)
+    sim = FLRun(fl_cfg, params0, loss_fn)
+    for _ in range(STEPS):
+        sim.step({"tokens": toks.reshape(2, 4, 32)})
+
+    # ---- distributed runtime on a (2 data, 4 model) mesh ----------------
+    mesh = make_host_mesh(data=2, model=4)
+    settings = TrainSettings(grad_dtype="float32", int8_wire=True)
+    step, shardings = make_train_step(cfg, mesh, sgd(LR), settings)
+    with mesh:
+        params = jax.device_put(params0, shardings["store"])
+        opt_state = sgd(LR).init(params)
+        dsc_ref = jax.tree.map(lambda p: jnp.zeros((), jnp.float32), params)
+        jstep = jax.jit(step)
+        for i in range(STEPS):
+            params, opt_state, dsc_ref, m = jstep(
+                params, opt_state, dsc_ref, batch, jax.random.PRNGKey(i))
+        # the stored FFN weights really are 4-way model-sharded
+        wd = params["blocks"]["w_down"]
+        assert "model" in str(wd.sharding.spec), wd.sharding.spec
+    dist_flat, _ = ravel_pytree(jax.device_get(params))
+    out = {
+        "sim": np.asarray(sim.x).tolist(),
+        "dist": np.asarray(dist_flat).tolist(),
+        "x0": np.asarray(ravel_pytree(params0)[0]).tolist(),
+    }
+    print("TP4INT8" + json.dumps(out))
+""")
+
+
+@pytest.mark.slow
+def test_tp4_composes_with_int8_client_wire():
+    """ISSUE satellite: 4-way model-axis TP (FFN + vocab sharded, GQA
+    attention fallback) composed with the int8 client wire on 8 devices
+    follows the simulator's int8 trajectory — the quantized FSA exchange
+    operates on TP-local segments without breaking Theorem B.1."""
+    import numpy as np
+    r = subprocess.run([sys.executable, "-c", TP4_INT8_SCRIPT],
+                       capture_output=True, text=True, timeout=900,
+                       env=SUBPROC_ENV)
+    assert r.returncode == 0, r.stderr[-3000:]
+    line = [ln for ln in r.stdout.splitlines()
+            if ln.startswith("TP4INT8")][-1]
+    out = json.loads(line[len("TP4INT8"):])
+    sim, dist = np.asarray(out["sim"]), np.asarray(out["dist"])
+    x0 = np.asarray(out["x0"])
+    np.testing.assert_allclose(dist, sim, atol=1e-2)
+    assert np.abs(dist - x0).max() > 1e-3       # it actually trains
+    assert np.abs(sim - x0).max() > 1e-3
+
+
 @pytest.mark.slow
 def test_512_device_lowering_int8_wire(tmp_path):
     """ROADMAP regression: the 2x16x16 (512-device) config must compile
-    under the full-manual lowering (no ``IsManualSubgroup`` abort), and
-    the FSA reduce-scatter stage's payload — read from the lowered HLO by
-    ``hlo_analysis`` — must cross the mesh as int8."""
+    under the full-manual lowering (no ``IsManualSubgroup`` abort) WITH
+    model-axis tensor parallelism (no replicated group compute: FFN +
+    vocab sharded 16-way — attention stays replicated only because
+    qwen2's 14 heads don't divide), and the FSA reduce-scatter stage's
+    payload — read from the lowered HLO by ``hlo_analysis`` — must cross
+    the mesh as int8, disjoint from the model-axis psum traffic."""
     r = subprocess.run(
         [sys.executable, "-m", "repro.launch.dryrun", "--arch", "qwen2-0.5b",
          "--shape", "train_1k", "--multi-pod", "--int8-wire",
          "--out", str(tmp_path)],
         capture_output=True, text=True, timeout=900,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+        env=SUBPROC_ENV)
     assert r.returncode == 0, (r.stdout[-500:], r.stderr[-2000:])
     rec = json.loads((tmp_path / "qwen2-0_5b__train_1k_mp.json").read_text())
     assert rec["devices"] == 512
@@ -117,3 +199,18 @@ def test_512_device_lowering_int8_wire(tmp_path):
     assert a2a.get("s8", 0) > 10 * a2a.get("f32", 0)
     # nothing falls back to a wide-dtype reduce-scatter
     assert not dtypes["reduce-scatter"]
+    # --- tensor parallelism actually engaged on the model axis ---------
+    assert rec["tp"] == {"size": 16, "attn": False, "ffn": True,
+                         "vocab": True, "sharded_leaves": 4}
+    axes = rec["collective_bytes_per_device"]["axes"]
+    counts = rec["collective_bytes_per_device"]["axis_counts"]
+    # Megatron psums: >= one all-reduce per layer per direction (24
+    # layers), carrying real activation bytes
+    assert axes["model"]["all-reduce"] > 0
+    assert counts["model"]["all-reduce"] >= 2 * 24
+    # the client wire (broadcast all-gather + int8 all-to-all) never
+    # rides the model axis
+    assert axes["client"]["all-gather"] > 0
+    assert axes["client"]["all-to-all"] > 0
+    assert "all-to-all" not in axes.get("model", {})
+    assert "all-gather" not in axes.get("model", {})

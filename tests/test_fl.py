@@ -6,7 +6,7 @@ import pytest
 
 from repro.core import baselines as bl
 from repro.core.compressors import RandP
-from repro.core.fl import FLConfig, FLRun, run_fl
+from repro.core.fl import FLConfig, run_fl
 from repro.data import federated_classification
 
 KEY = jax.random.PRNGKey(0)

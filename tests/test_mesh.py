@@ -1,0 +1,29 @@
+"""make_host_mesh factorization validation (ISSUE: it used to silently
+build a wrong-sized mesh when model didn't divide the device count)."""
+import jax
+import pytest
+
+from repro.launch.mesh import make_host_mesh
+
+
+def test_default_mesh_uses_all_devices():
+    mesh = make_host_mesh()
+    assert mesh.axis_names == ("data", "model")
+    assert int(mesh.devices.size) == len(jax.devices())
+
+
+def test_model_axis_must_divide_device_count():
+    n = len(jax.devices())
+    with pytest.raises(ValueError, match="model axis size"):
+        make_host_mesh(model=n + 1)
+    with pytest.raises(ValueError, match="model axis size"):
+        make_host_mesh(model=0)
+
+
+def test_explicit_data_axis_must_factorize():
+    n = len(jax.devices())
+    with pytest.raises(ValueError, match="devices"):
+        make_host_mesh(data=n + 1, model=1)
+    # valid factorization still works
+    mesh = make_host_mesh(data=n, model=1)
+    assert int(mesh.devices.size) == n

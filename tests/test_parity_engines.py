@@ -23,6 +23,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+from conftest import SUBPROC_ENV
 from hypothesis import given, settings, strategies as st
 
 from repro.core.compressors import Identity, RandP
@@ -221,7 +223,7 @@ PARITY_SCRIPT = textwrap.dedent("""
 def _run_parity(int8: bool) -> dict:
     r = subprocess.run([sys.executable, "-c", PARITY_SCRIPT % {"int8": int8}],
                        capture_output=True, text=True, timeout=900,
-                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+                       env=SUBPROC_ENV)
     assert r.returncode == 0, r.stderr[-2000:]
     line = [l for l in r.stdout.splitlines() if l.startswith("PARITY")][-1]
     return json.loads(line[len("PARITY"):])

@@ -271,7 +271,7 @@ def test_int8_wire_composes_with_dsc(data):
 def test_fsa_sharded_stage_matches_mean(data):
     """FSASharded (literal Algorithm 1) == AggregateStage mean
     (Theorem B.1) at stage granularity."""
-    from repro.core.pipeline import AggregateStage, FSASharded, RoundKeys, \
+    from repro.core.pipeline import AggregateStage, FSASharded, \
         split_round_keys
     v = jax.random.normal(KEY, (K, 40))
     keys = split_round_keys(KEY)

@@ -9,7 +9,7 @@ from repro.core import error_feedback as ef_lib
 from repro.core import secure_agg as sa_lib
 from repro.core import server_opt as so_lib
 from repro.core import masks as masks_lib
-from repro.core.compressors import TopK, RandP
+from repro.core.compressors import TopK
 from repro.core.fl import FLConfig, run_fl
 from repro.data import federated_classification
 

@@ -1,0 +1,227 @@
+"""Tensor-parallelism (model axis) contracts.
+
+Two layers of coverage for the Megatron-style manual-collective TP:
+
+  * property tests (no devices): ``TPSpec`` maps EVERY entry of
+    ``transformer.param_spec`` with tree congruence, shard dims divide,
+    split/merge round-trips, plan fallbacks (GQA kv < tp, moe/ssm
+    families) and the composite model x client store spec;
+  * sharded-vs-replicated parity (subprocess, 4 host devices):
+    ``loss_fn(tp=None)`` against the 2-way and 4-way TP lowering under a
+    manual shard_map — loss AND gradients to fp32 tolerance, sweeping
+    qkv-bias/tied/qk-norm/untied/masked-loss variants so the col, row,
+    vocab AND partial TPSpec kinds are all exercised.
+"""
+import dataclasses
+import json
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import SUBPROC_ENV
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.dist import sharding as sh
+from repro.models import transformer as tr
+
+
+def _smoke(arch: str):
+    return get_config(arch).smoke()
+
+
+# ------------------------------------------------------------ TPSpec map
+@pytest.mark.parametrize("arch", ["qwen2-0.5b", "olmoe-1b-7b", "xlstm-350m",
+                                  "hymba-1.5b", "internvl2-26b"])
+@pytest.mark.parametrize("tp", [1, 2, 4])
+def test_tp_specs_cover_param_tree(arch, tp):
+    """Every param leaf gets a TPSpec (congruent trees), every sharded
+    dim divides, and non-dense families replicate entirely."""
+    cfg = _smoke(arch)
+    specs = sh.tp_specs(cfg, tp)
+    params = jax.eval_shape(lambda k: tr.init_params(k, cfg),
+                            jax.random.PRNGKey(0))
+    assert (jax.tree_util.tree_structure(specs)
+            == jax.tree_util.tree_structure(params))
+    plan = tr.tp_plan(cfg, tp)
+    for p, s in zip(jax.tree_util.tree_leaves(params),
+                    jax.tree_util.tree_leaves(specs)):
+        assert isinstance(s, sh.TPSpec)
+        if s.dim >= 0:
+            assert p.shape[s.dim] % tp == 0, (p.shape, s)
+            assert s.kind in ("col", "row", "vocab")
+        else:
+            assert s.kind in ("replicate", "partial")
+    if cfg.family not in ("dense", "audio", "vlm") or tp == 1:
+        assert not plan.active
+        assert all(s.kind == "replicate"
+                   for s in jax.tree_util.tree_leaves(specs))
+
+
+def test_tp_plan_fallbacks():
+    cfg = _smoke("qwen2-0.5b")          # heads=4, kv=2, d_ff=512, V=512
+    assert tr.tp_plan(cfg, 2) == tr.TPPlan(2, attn=True, ffn=True,
+                                           vocab=True)
+    p4 = tr.tp_plan(cfg, 4)
+    assert not p4.attn                  # kv=2 cannot split 4 ways
+    assert p4.ffn and p4.vocab and p4.active
+    assert not tr.tp_plan(cfg, 1).active
+    assert not tr.tp_plan(cfg, 3).active       # nothing divides by 3
+    qk = dataclasses.replace(cfg, qk_norm=True)
+    specs = sh.tp_specs(qk, 2)
+    assert specs["blocks"]["q_norm"].kind == "partial"
+    assert sh.tp_specs(qk, 4)["blocks"]["q_norm"].kind == "replicate"
+
+
+@given(pre=st.integers(1, 3), mid=st.integers(1, 4), post=st.integers(1, 3),
+       dim=st.integers(0, 2), tp=st.sampled_from([1, 2, 4]))
+@settings(max_examples=25, deadline=None)
+def test_tp_split_merge_roundtrip(pre, mid, post, dim, tp):
+    shape = [3 * pre, 4 * mid, 5 * post]
+    shape[dim] *= tp
+    x = jnp.arange(np.prod(shape), dtype=jnp.float32).reshape(shape)
+    spec = sh.TPSpec(dim, "col")
+    shards = sh.tp_split_leaf(x, spec, tp)
+    assert shards.shape == (tp, *sh.tp_local_shape(tuple(shape), spec, tp))
+    np.testing.assert_array_equal(sh.tp_merge_leaf(shards, spec), x)
+    # replicated leaves: stacked copies, merge = shard 0
+    rep = sh.TPSpec()
+    np.testing.assert_array_equal(
+        sh.tp_merge_leaf(sh.tp_split_leaf(x, rep, tp), rep), x)
+
+
+def test_composite_store_spec():
+    from jax.sharding import PartitionSpec as P
+    # distinct dims: one axis each
+    assert sh.composite_store_spec(2, 1, "data") == P(None, "data", "model")
+    # same dim: model-major contiguous blocks, client-segmented within
+    assert sh.composite_store_spec(1, 1, ("pod", "data")) == \
+        P(None, ("model", "pod", "data"))
+    assert sh.composite_store_spec(-1, 0, "data") == P("data")
+    assert sh.composite_store_spec(0, -1, "data") == P("model")
+    assert sh.composite_store_spec(-1, -1, "data") == P()
+
+
+def test_store_layout_is_model_and_client_sharded():
+    """The 'store' layout of a TP-able config shards FFN/vocab leaves
+    over BOTH meshes and keeps every leaf's spec consistent with its
+    TP-local scatter dim."""
+    cfg = _smoke("qwen2-0.5b")
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    # build specs AS IF the mesh were (2 data, 2 model) — spec math only
+    specs = sh.tp_specs(cfg, 2)
+    assert specs["embed"] == sh.TPSpec(0, "vocab")
+    assert specs["blocks"]["w_down"] == sh.TPSpec(1, "row")
+    assert specs["blocks"]["wo"] == sh.TPSpec(1, "row")
+    # on the real (trivial) mesh the composite reduces to the FSA layout
+    from jax.sharding import PartitionSpec as P
+    store = sh.store_specs(cfg, mesh)
+    for s in jax.tree_util.tree_leaves(
+            store, is_leaf=lambda x: isinstance(x, P)):
+        flat = []
+        for part in tuple(s):
+            flat.extend(part if isinstance(part, tuple) else [part])
+        assert "model" not in flat, s
+
+
+# ----------------------------------------- sharded-vs-replicated parity
+PARITY_TP_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import dataclasses
+    import json
+    import jax, jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import Mesh, PartitionSpec as P
+    from repro.configs import get_config
+    from repro.dist import sharding as sh
+    from repro.launch.train import _shard_map
+    from repro.models import transformer as tr
+
+    KEY = jax.random.PRNGKey(0)
+    # minimal TP-able config: the wiring is identical per layer, so one
+    # layer at small width keeps the subprocess fast-tier-cheap while
+    # exercising every collective placement
+    BASE = dataclasses.replace(
+        get_config("qwen2-0.5b").smoke(), n_layers=1, d_model=128,
+        head_dim=32, d_ff=256, vocab=256, attn_chunk=16)
+
+    CASES = [
+        ("tp2_full", 2, {}),                       # attn+ffn+vocab all TP
+        ("tp4_gqa_fallback", 4, {}),               # kv=2: attn replicated
+        ("tp2_qknorm_untied", 2,                   # partial grads + lm_head
+         dict(qk_norm=True, tie_embeddings=False, loss_fp32_logits=False)),
+        ("tp4_masked", 4, {"_mask": True}),
+    ]
+
+    def run_case(name, tp, opts):
+        opts = dict(opts)
+        use_mask = opts.pop("_mask", False)
+        cfg = dataclasses.replace(BASE, **opts)
+        params = tr.init_params(KEY, cfg)
+        toks = jax.random.randint(jax.random.fold_in(KEY, 1), (2, 16),
+                                  0, cfg.vocab)
+        batch = {"tokens": toks}
+        if use_mask:
+            batch["loss_mask"] = (jax.random.uniform(
+                jax.random.fold_in(KEY, 2), (2, 16)) > 0.3).astype(
+                jnp.float32)
+
+        ref_loss, ref_grads = jax.value_and_grad(
+            lambda p: tr.loss_fn(p, cfg, batch))(params)
+
+        mesh = Mesh(np.array(jax.devices()[:tp]), ("model",))
+        specs = sh.tp_specs(cfg, tp)
+        plan = tr.tp_plan(cfg, tp)
+        pspec = jax.tree.map(
+            lambda s: P(*([None] * s.dim + ["model"])) if s.dim >= 0
+            else P(), specs)
+
+        def body(params, midx):
+            tp_rt = tr.TPRuntime("model", tp, midx[0], plan)
+            loss, grads = jax.value_and_grad(
+                lambda p: tr.loss_fn(p, cfg, batch, tp=tp_rt))(params)
+            grads = sh.tp_grad_sync(grads, specs, "model")
+            return loss, grads
+
+        fn = _shard_map(body, mesh, in_specs=(pspec, P("model")),
+                        out_specs=(P(), pspec))
+        with mesh:
+            loss, grads = jax.jit(fn)(params,
+                                      jnp.arange(tp, dtype=jnp.int32))
+        errs = {"loss": abs(float(loss) - float(ref_loss))}
+        worst = 0.0       # per-leaf max abs error, scaled by the leaf's
+        for g, r in zip(jax.tree.leaves(grads), jax.tree.leaves(ref_grads)):
+            g, r = np.asarray(g, np.float64), np.asarray(r, np.float64)
+            worst = max(worst, float(
+                np.max(np.abs(g - r)) / (np.max(np.abs(r)) + 1e-8)))
+        errs["grad_relerr"] = worst
+        return errs
+
+    out = {name: run_case(name, tp, opts) for name, tp, opts in CASES}
+    print("TPPARITY" + json.dumps(out))
+""")
+
+
+def test_tp_loss_and_grads_match_replicated():
+    """ISSUE acceptance: loss_fn under 2-way and 4-way TP reproduces the
+    replicated loss AND gradients to fp32 tolerance across plan variants
+    (full TP, GQA attention fallback, qk-norm partial grads, untied
+    unembed, masked loss)."""
+    r = subprocess.run([sys.executable, "-c", PARITY_TP_SCRIPT],
+                       capture_output=True, text=True, timeout=900,
+                       env=SUBPROC_ENV)
+    assert r.returncode == 0, r.stderr[-3000:]
+    line = [ln for ln in r.stdout.splitlines()
+            if ln.startswith("TPPARITY")][-1]
+    out = json.loads(line[len("TPPARITY"):])
+    assert set(out) == {"tp2_full", "tp4_gqa_fallback",
+                        "tp2_qknorm_untied", "tp4_masked"}
+    for name, errs in out.items():
+        assert errs["loss"] < 1e-5, (name, errs)
+        assert errs["grad_relerr"] < 1e-3, (name, errs)
