@@ -10,7 +10,12 @@ Collective weights (ring algorithms on a 1D slice of the mesh):
   all-reduce: 2x that;  collective-permute: 1x.
   all-to-all: (n-1)/n — each device keeps 1/n of its payload local and
   ships the rest (this is the scatter half of the FSA reduce-scatter when
-  the payload is int8-quantized, so it must be weighted like one).
+  the payload is int8-quantized, so it must be weighted like one; on the
+  MODEL axis it is the expert-parallel MoE token dispatch/combine).
+These weights make the sequence-parallel conjugate pair (psum_scatter +
+all_gather, (n-1)/n each) cost exactly one all-reduce (2(n-1)/n) on the
+wire — the per-axis pricing below is what the seq-parallel 512-device
+regression compares.
 HLO FLOPs / bytes are trip-count-aware (repro.launch.hlo_analysis); the
 payload bytes come from the HLO operand dtypes, so the int8 wire path is
 accounted at its actual ~1.03 B/coord, not the ``grad_dtype`` width.
@@ -59,6 +64,18 @@ def collective_seconds(coll: dict, devices: int,
     w = _ring_weights(devices)
     per_kind = {k: coll.get(k, 0.0) * w[k] / ICI_BW for k in w}
     return sum(per_kind.values()), per_kind
+
+
+def model_axis_seconds(rec: dict) -> float:
+    """Ring-weighted link-seconds of the MODEL-axis collectives alone —
+    the quantity a sequence-parallel plan must not increase (it trades
+    each psum pair for the psum_scatter/all_gather conjugates at equal
+    wire cost) and an expert-parallel plan spends on token all_to_all."""
+    model_size = rec.get("tp", {}).get("size", 1)
+    by_kind = rec["collective_bytes_per_device"].get("axes", {}).get(
+        "model", {})
+    w = _ring_weights(max(model_size, 2))
+    return sum(v * w.get(k, 1.0) / ICI_BW for k, v in by_kind.items())
 
 
 def model_flops(rec: dict) -> float:

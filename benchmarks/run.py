@@ -21,6 +21,8 @@ MODULES = [
     ("pareto", "Fig. 4 / F.10: utility-privacy Pareto analysis"),
     ("kernels_bench", "kernel reference timings + TPU expectations"),
     ("roofline", "dry-run roofline terms per (arch x shape x mesh)"),
+    ("tp_snapshot", "committed BENCH_tp.json: compile time + per-axis "
+                    "collective bytes + roofline across PRs"),
 ]
 
 

@@ -7,10 +7,14 @@ The mesh has two kinds of axes:
   layout), receives exactly that segment of every client update via
   ``psum_scatter`` (Eq. 2), and runs the shard-local optimizer on it.
 * **model axis** — manual-collective tensor parallelism inside each
-  client group (Megatron pairing: column/row matmul pairs wired through
-  ``models/layers.tp_push``/``tp_pull``).  :class:`TPSpec` maps every
-  entry of ``models/transformer.param_spec`` to its model-axis shard dim
-  (or replicate); the serving path keeps its GSPMD "use" layout.
+  client group under the family-generic shard plan
+  (``models/shard_plan``): Megatron column/row pairs, vocab-parallel
+  embed/unembed, expert-parallel MoE (expert-dim shards + token
+  all_to_all), head-/channel-sharded recurrent mixers, and optional
+  sequence parallelism.  :class:`TPSpec` (re-exported from the shard
+  plan) maps every entry of ``models/transformer.param_spec`` to its
+  model-axis shard dim (or replicate/partial); the serving path keeps
+  its GSPMD "use" layout.
 
 The segment-of-a-parameter choice is the *scatter dim*: for each leaf we
 pick the rightmost dimension OF THE TP-LOCAL SHAPE divisible by the
@@ -66,65 +70,11 @@ def _abstract_params(cfg):
 
 
 # --------------------------------------------------- tensor-parallel spec
-@dataclasses.dataclass(frozen=True)
-class TPSpec:
-    """Model-axis placement of one parameter leaf (stacked shapes).
-
-    ``kind``:
-      * ``col`` / ``row`` — Megatron column/row shard at ``dim``; the
-        leaf's gradient is naturally shard-local.
-      * ``vocab``   — vocab-parallel embedding rows (col shard of the
-        unembed); shard-local gradients like col/row.
-      * ``replicate`` — identical on every model position; the gradient
-        comes out replicated (full) on each position.
-      * ``partial`` — replicated VALUES consumed inside a TP region on
-        local shards only (qk-norm scales over local heads): each
-        position's gradient is a partial sum, and the train body must
-        ``psum`` it over the model axis (see :func:`tp_grad_sync`).
-    """
-
-    dim: int = -1
-    kind: str = "replicate"
-
-
-def tp_specs(cfg, tp: int) -> Any:
-    """Pytree of :class:`TPSpec` matching the parameter tree: every entry
-    of ``models/transformer.param_spec`` mapped to its model-axis shard
-    dim (or replicate), following the Megatron pairing of
-    ``models/transformer.tp_plan``."""
-    from repro.models import transformer as tr
-    plan = tr.tp_plan(cfg, tp)
-    rep = TPSpec()
-
-    def block_spec(name: str) -> TPSpec:
-        if plan.attn:
-            if name in ("wq", "wk", "wv"):
-                return TPSpec(2, "col")
-            if name in ("bq", "bk", "bv"):
-                return TPSpec(1, "col")
-            if name == "wo":
-                return TPSpec(1, "row")
-            if name in ("q_norm", "k_norm"):
-                return TPSpec(-1, "partial")
-        if plan.ffn:
-            if name in ("w_gate", "w_up"):
-                return TPSpec(2, "col")
-            if name == "w_down":
-                return TPSpec(1, "row")
-        return rep
-
-    spec = tr.param_spec(cfg)
-    out: dict[str, Any] = {}
-    for name in spec:
-        if name == "blocks":
-            out["blocks"] = {bn: block_spec(bn) for bn in spec["blocks"]}
-        elif name == "embed":
-            out["embed"] = TPSpec(0, "vocab") if plan.vocab else rep
-        elif name == "lm_head":
-            out["lm_head"] = TPSpec(1, "col") if plan.vocab else rep
-        else:                                   # ln_f, proj_in, ...
-            out[name] = rep
-    return out
+# The per-leaf placement (TPSpec) and the derivation from param_spec role
+# metadata live in the family-generic shard-plan subsystem; re-exported
+# here because the mesh-side geometry below (local shapes, split/merge,
+# composite store specs, wire layouts) is expressed in terms of them.
+from repro.models.shard_plan import TPSpec, tp_specs  # noqa: E402,F401
 
 
 def tp_local_shape(shape: tuple[int, ...], spec: TPSpec,

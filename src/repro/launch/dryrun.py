@@ -91,7 +91,8 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
         "int8_wire": int8_wire,
         "wire_dtype": deep["collective_bytes"].get("wire_dtype", ""),
         "tp": {"size": int(model_size), "attn": plan.attn,
-               "ffn": plan.ffn, "vocab": plan.vocab,
+               "ffn": plan.ffn, "vocab": plan.vocab, "moe": plan.moe,
+               "mixer": plan.mixer, "seq": plan.seq,
                "sharded_leaves": int(n_tp_sharded)} if shape.kind == "train"
         else {"size": int(model_size)},
         "tag": tag,
@@ -137,7 +138,7 @@ def main():
     ap.add_argument("--tag", default="")
     ap.add_argument("--opt", default="",
                     help="ModelConfig overrides, e.g. "
-                         "tp_head_aligned=true,megatron_ffn=true")
+                         "seq_parallel=true,vocab=50176")
     ap.add_argument("--out", default="experiments/dryrun")
     args = ap.parse_args()
     rec = run_one(args.arch, args.shape, args.multi_pod, args.dsc,

@@ -261,15 +261,22 @@ class HloModule:
 
         With ``model_axis_size`` the per-op replica groups additionally
         classify every collective onto its mesh axis — ``axes`` maps
-        {model | client | all} -> {kind -> payload bytes} and
-        ``axis_counts`` the trip-weighted op counts, separating the
-        tensor-parallel psum traffic from the FSA client wire.
+        {model | client | all} -> {kind -> payload bytes},
+        ``axis_counts`` the trip-weighted op counts, and ``axis_dtypes``
+        the per-axis dtype split — separating the tensor-parallel
+        traffic (Megatron psums, seq-parallel psum_scatter/all_gather
+        conjugates, expert-parallel token all_to_alls) from the FSA
+        client wire.  ``wire_dtype`` is derived from the CLIENT axis
+        only: a model-axis reduce-scatter (sequence parallelism) or
+        all-to-all (MoE dispatch) must not masquerade as the FSA
+        exchange format.
         """
         out = {k: 0.0 for k in COLLECTIVES}
         counts = {k: 0 for k in COLLECTIVES}
         dtypes: dict[str, dict[str, float]] = {k: {} for k in COLLECTIVES}
         axes: dict[str, dict[str, float]] = {}
         axis_counts: dict[str, dict[str, int]] = {}
+        axis_dtypes: dict[str, dict[str, dict[str, float]]] = {}
         for comp, ops in self.computations.items():
             m = self.multipliers.get(comp, 1.0)
             for op in ops:
@@ -293,6 +300,7 @@ class HloModule:
                     self.op_shape[nm] for nm in
                     re.findall(r"%([\w.\-]+)", op["rest"].split("),")[0])
                     if nm in self.op_shape)
+                axd = axis_dtypes.setdefault(axis, {}).setdefault(kind, {})
                 for dt, dims in _SHAPE_RE.findall(text):
                     n = 1
                     for d in dims.split(","):
@@ -300,19 +308,22 @@ class HloModule:
                             n *= int(d)
                     dtypes[kind][dt] = dtypes[kind].get(dt, 0.0) \
                         + m * n * _DTYPE_BYTES[dt]
+                    axd[dt] = axd.get(dt, 0.0) + m * n * _DTYPE_BYTES[dt]
         out["counts"] = counts
         out["dtypes"] = dtypes
         out["axes"] = axes
         out["axis_counts"] = axis_counts
-        out["wire_dtype"] = self._wire_dtype(dtypes)
+        out["axis_dtypes"] = axis_dtypes
+        out["wire_dtype"] = self._wire_dtype(
+            axis_dtypes.get("client") or axis_dtypes.get("all") or {})
         return out
 
     @staticmethod
     def _wire_dtype(dtypes: dict) -> str:
         """Dominant payload dtype of the FSA reduce-scatter stage (the
-        collective carrying the client updates): reduce-scatter when the
-        payload is summable on the wire, else the all-to-all scatter half
-        of the quantized exchange."""
+        collective carrying the client updates over the CLIENT axes):
+        reduce-scatter when the payload is summable on the wire, else
+        the all-to-all scatter half of the quantized exchange."""
         for kind in ("reduce-scatter", "all-to-all"):
             if dtypes.get(kind):
                 return max(dtypes[kind], key=dtypes[kind].get)

@@ -11,15 +11,21 @@ configs, so the lowering keeps nothing automatic:
      all-gather: x^t = sum_a m_(a) . x^t_(a)   (Algorithm 1 line 14).
   2. *Local update* — each client-axis position computes gradients on its
      own client group's batch shard.  The ``model`` axis runs
-     manual-collective Megatron tensor parallelism (``tp_plan``): QKV /
-     gate / up column-parallel, wo / down row-parallel, vocab-parallel
-     embedding + unembed, each pair wired through the
-     ``tp_push``/``tp_pull`` conjugate collectives (exactly two psums per
-     pair, forward and backward) with the cross-entropy computed on
-     vocab-sharded logits.  Architectures the plan cannot shard (moe /
-     ssm / hybrid, or indivisible dims) fall back to the previous
-     behavior: the model axis data-parallelizes the group batch when it
-     divides, else replicates the group's computation.
+     manual-collective tensor parallelism under the family-generic shard
+     plan (``models/shard_plan``): Megatron column/row pairs (QKV∘wo,
+     gate/up∘down) wired through the ``tp_push``/``tp_pull`` conjugates,
+     vocab-parallel embedding + unembed with the cross-entropy on
+     vocab-sharded logits, expert-parallel MoE (expert-dim-sharded
+     w_gate/w_up/w_down + token ``all_to_all`` dispatch/combine,
+     replicated router with partial-grad psum), head-/channel-sharded
+     recurrent mixers (mLSTM / hybrid mamba; the chunked scans run fully
+     local), and optional sequence parallelism
+     (``ModelConfig.seq_parallel``: the psum pairs become
+     ``psum_scatter``/``all_gather`` conjugates so inter-region
+     activations hold (B, S/tp, D)).  A config with NO shardable region
+     falls back to the previous behavior: the model axis
+     data-parallelizes the group batch when it divides, else replicates
+     the group's computation.
   3. *DSC (optional)* — each client group shift-compresses its update
      v_k = C(g_k - s_k), s_k += gamma v_k, before transmission.
   4. *FSA aggregation* — the reduce-scatter stage.  Two wire formats:
@@ -148,9 +154,8 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh, opt: Optimizer,
     """Returns (train_step, shardings dict)."""
     # GSPMD placement hints are meaningless (and illegal) inside the
     # fully-manual region — the model axis is manual like every other.
-    if cfg.attn_batch_shard or cfg.moe_expert_shard_acts:
-        cfg = dataclasses.replace(cfg, attn_batch_shard=False,
-                                  moe_expert_shard_acts=False)
+    if cfg.attn_batch_shard:
+        cfg = dataclasses.replace(cfg, attn_batch_shard=False)
     ca = sh.client_axes(mesh)
     caxis = ca if len(ca) > 1 else ca[0]
     n_client = _client_size(mesh)

@@ -46,9 +46,9 @@ class ModelConfig:
     loss_fp32_logits: bool = True   # False: CE with f16 logits + f32 accum
     ssm_scan_f32: bool = True       # False: associative-scan elems in f16
     attn_scores_f32: bool = True    # False: keep score chunks in f16
-    moe_expert_shard_acts: bool = False  # constrain MoE dispatch to the
-                                    # expert axis (token all-to-all instead
-                                    # of expert-weight all-gather)
+    seq_parallel: bool = False      # sequence-parallel activations between
+                                    # TP regions (psum_scatter/all_gather
+                                    # conjugates; needs ffn+vocab to shard)
     attn_batch_shard: bool = False  # context-parallel attention: shard the
                                     # (local) batch over 'model' instead of
                                     # splitting heads (for heads % tp != 0)

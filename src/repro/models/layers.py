@@ -52,8 +52,87 @@ def _tp_pull_bwd(axis, _, ct):
 tp_pull.defvjp(_tp_pull_fwd, _tp_pull_bwd)
 
 
+# --------------------------------------------- sequence-parallel region
+# The psum_scatter/all_gather conjugates of the psum pair above.  Under a
+# sequence-parallel plan the activations BETWEEN TP regions are sharded
+# along the sequence dim: a region is entered by gathering the full
+# sequence (tp_seq_gather: all-gather fwd, reduce-scatter bwd — each
+# shard's cotangent is a partial sum over its columns/slice) and exited
+# by reduce-scattering the row-parallel partials (tp_seq_scatter:
+# psum_scatter fwd, all-gather bwd).  all_reduce == all_gather ∘
+# reduce_scatter, so the wire bytes equal the psum pair's — but the
+# norm/residual regions in between hold 1/tp of the activations.
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def tp_seq_gather(x, axis, dim):
+    """Enter a TP region from sequence shards: all-gather forward,
+    psum_scatter(cotangent) backward."""
+    return jax.lax.all_gather(x, axis, axis=dim, tiled=True)
+
+
+def _tp_seq_gather_fwd(x, axis, dim):
+    return jax.lax.all_gather(x, axis, axis=dim, tiled=True), None
+
+
+def _tp_seq_gather_bwd(axis, dim, _, ct):
+    return (jax.lax.psum_scatter(ct, axis, scatter_dimension=dim,
+                                 tiled=True),)
+
+
+tp_seq_gather.defvjp(_tp_seq_gather_fwd, _tp_seq_gather_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def tp_seq_scatter(x, axis, dim):
+    """Exit a TP region to sequence shards: psum_scatter(partials)
+    forward, all-gather(cotangent) backward."""
+    return jax.lax.psum_scatter(x, axis, scatter_dimension=dim, tiled=True)
+
+
+def _tp_seq_scatter_fwd(x, axis, dim):
+    return (jax.lax.psum_scatter(x, axis, scatter_dimension=dim,
+                                 tiled=True), None)
+
+
+def _tp_seq_scatter_bwd(axis, dim, _, ct):
+    return (jax.lax.all_gather(ct, axis, axis=dim, tiled=True),)
+
+
+tp_seq_scatter.defvjp(_tp_seq_scatter_fwd, _tp_seq_scatter_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def tp_psum(x, axis):
+    """psum forward AND backward — for reduction statistics whose output
+    is consumed on every shard (e.g. the channel-sharded RMS-norm
+    variance): every position's cotangent contributes to every
+    position's operand, so the backward must itself sum over the axis
+    (jax's default psum transpose is per-position identity)."""
+    return jax.lax.psum(x, axis)
+
+
+def _tp_psum_fwd(x, axis):
+    return jax.lax.psum(x, axis), None
+
+
+def _tp_psum_bwd(axis, _, ct):
+    return (jax.lax.psum(ct, axis),)
+
+
+tp_psum.defvjp(_tp_psum_fwd, _tp_psum_bwd)
+
+
 def rms_norm(x, scale, eps=1e-6):
     var = jnp.mean(jnp.square(x.astype(jnp.float32)), -1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps).astype(x.dtype)) * scale
+
+
+def rms_norm_sharded(x, scale, eps, axis, full_dim: int):
+    """RMS norm whose normalized dim is sharded over ``axis``: the mean
+    of squares is assembled with a (both-ways) psum over the model axis
+    — the mixer's only cross-shard dependence, one scalar field per
+    (batch, time) position."""
+    ss = jnp.sum(jnp.square(x.astype(jnp.float32)), -1, keepdims=True)
+    var = tp_psum(ss, axis) / full_dim
     return (x * jax.lax.rsqrt(var + eps).astype(x.dtype)) * scale
 
 

@@ -3,69 +3,149 @@
 TPU-native formulation (Switch/MaxText style): tokens are reshaped into
 groups of ``group`` tokens; within each group the router's top-k choices
 are turned into a one-hot dispatch tensor (group, E, capacity) so the
-expert computation is three dense einsums with the expert dimension
-shardable over the 'model' mesh axis.  Tokens beyond an expert's capacity
-are dropped (standard capacity-factor semantics)."""
+expert computation is three dense einsums.  Tokens beyond an expert's
+capacity are dropped (standard capacity-factor semantics); token counts
+that don't divide the group size are padded with masked tokens that
+never claim capacity and never combine output.
+
+Under an expert-parallel plan (``tp.plan.moe``) the expert dimension of
+w_gate/w_up/w_down is sharded over the ``model`` axis and tokens reach
+their experts through an explicit ``all_to_all`` dispatch/combine:
+token groups are sharded over the axis inside the region (entered with
+``tp_push``, exited with a zero-padded ``tp_pull``), each position
+routes its own groups with the replicated router (partial-grad psum,
+see ``models/shard_plan``), and the dispatched (group, E, cap, D)
+slots cross the axis so every expert computes where its weights live.
+"""
 from __future__ import annotations
+
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 
-def moe_ffn(x, router_w, w_gate, w_up, w_down, *, top_k: int,
-            capacity_factor: float = 1.25, group: int = 256,
-            expert_shard_acts: bool = False):
-    """x: (B, S, D); router_w: (D, E); w_gate/w_up: (E, D, F);
-    w_down: (E, F, D).  Returns (B, S, D) plus aux losses dict."""
-    B, S, D = x.shape
-    E = router_w.shape[-1]
-    T = B * S
-    xt = x.reshape(T, D)
-    group = min(group, T)
-    n_groups = T // group
-    assert n_groups * group == T, (T, group)
-    xg = xt.reshape(n_groups, group, D)
+def route_tokens(xg, router_w, valid, *, top_k: int,
+                 capacity_factor: float, total_valid: Optional[float] = None):
+    """Group-local routing: top-k gates -> capacity-limited dispatch.
 
+    xg: (g, t, D) grouped tokens; router_w: (D, E); valid: (g, t) bool —
+    False rows (padding) never claim a capacity slot and never combine
+    output.  ``total_valid`` is the number of real tokens ACROSS ALL
+    groups (defaults to this call's valid count; the expert-parallel
+    caller passes the global count so per-position aux terms sum to the
+    replicated value).
+
+    Returns ``(disp, comb, aux)``: ``disp`` (g, t, E, c) 0/1 dispatch,
+    ``comb`` (g, t, E, c) combine weights (per-token sum over (E, c)
+    <= 1, exactly 0 for dropped/invalid tokens), and aux loss terms
+    computed over valid tokens only, each group weighted by its share of
+    ``total_valid``.
+    """
+    n_groups, group, _ = xg.shape
+    E = router_w.shape[-1]
     logits = jnp.einsum("gtd,de->gte", xg, router_w).astype(jnp.float32)
     probs = jax.nn.softmax(logits, -1)
     gate_vals, idx = jax.lax.top_k(probs, top_k)          # (g, t, k)
     gate_vals = gate_vals / jnp.maximum(
         gate_vals.sum(-1, keepdims=True), 1e-9)
+    vmask = valid.astype(jnp.float32)                     # (g, t)
+    gate_vals = gate_vals * vmask[..., None]
 
     cap = max(1, int(capacity_factor * top_k * group / E))
-    # position of each (token, choice) within its expert's queue
-    onehot = jax.nn.one_hot(idx, E, dtype=jnp.int32)      # (g, t, k, e)
+    # position of each (token, choice) within its expert's queue;
+    # invalid tokens carry a zero one-hot so they consume no capacity
+    onehot = jax.nn.one_hot(idx, E, dtype=jnp.int32) * \
+        valid[..., None, None].astype(jnp.int32)          # (g, t, k, e)
     flat = onehot.reshape(n_groups, group * top_k, E)
     pos = jnp.cumsum(flat, axis=1) - flat                 # (g, t*k, e)
     pos = pos.reshape(n_groups, group, top_k, E)
     within_cap = pos < cap
-    dispatch = (onehot * within_cap).astype(x.dtype)      # (g,t,k,e) 0/1
-    pos_oh = jax.nn.one_hot(jnp.clip(pos, 0, cap - 1), cap, dtype=x.dtype)
+    dispatch = onehot * within_cap                        # (g,t,k,e) 0/1
+    pos_oh = jax.nn.one_hot(jnp.clip(pos, 0, cap - 1), cap, dtype=xg.dtype)
     # (g, t, e, c): token t of group g goes to slot c of expert e
-    disp = jnp.einsum("gtke,gtkec->gtec", dispatch.astype(x.dtype), pos_oh)
+    disp = jnp.einsum("gtke,gtkec->gtec", dispatch.astype(xg.dtype), pos_oh)
     comb = jnp.einsum("gtke,gtk,gtkec->gtec",
                       dispatch.astype(jnp.float32),
-                      gate_vals, pos_oh.astype(jnp.float32)).astype(x.dtype)
+                      gate_vals, pos_oh.astype(jnp.float32)).astype(xg.dtype)
 
-    xe = jnp.einsum("gtec,gtd->gecd", disp, xg)           # (g, E, cap, D)
-    if expert_shard_acts:
-        # keep dispatched tokens sharded by EXPERT over 'model' so each
-        # expert's FFN runs where its weights live (the collective becomes
-        # an all-to-all of tokens instead of an all-gather of weights)
-        from jax.sharding import PartitionSpec as _P
-        espec = _P(None, "model")
-        xe = jax.lax.with_sharding_constraint(xe, espec)
+    # load-balance aux loss (Switch): E * sum_e f_e * p_e over VALID
+    # tokens, each group weighted by its valid-token share so padded
+    # groups contribute nothing and the masked value equals the unpadded
+    gcount = jnp.maximum(vmask.sum(1), 1.0)               # (g,)
+    density = onehot.astype(jnp.float32).sum(2).sum(1) / gcount[:, None]
+    p_mean = (probs * vmask[..., None]).sum(1) / gcount[:, None]
+    total = jnp.maximum(
+        vmask.sum() if total_valid is None else total_valid, 1.0)
+    w_g = vmask.sum(1) / total
+    routed = (dispatch.sum((2, 3)) > 0).astype(jnp.float32) * vmask
+    aux = {"load_balance": (w_g * (E * (density * p_mean).sum(-1))).sum(),
+           "dropped_frac": (vmask.sum() - routed.sum()) / total}
+    return disp, comb, aux
+
+
+def _expert_ffn(xe, w_gate, w_up, w_down):
+    """The three dense expert einsums on dispatched slots (g, E, c, D)."""
     h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, w_gate)) * \
         jnp.einsum("gecd,edf->gecf", xe, w_up)
-    ye = jnp.einsum("gecf,efd->gecd", h, w_down)          # (g, E, cap, D)
-    if expert_shard_acts:
-        ye = jax.lax.with_sharding_constraint(ye, espec)
-    y = jnp.einsum("gtec,gecd->gtd", comb, ye)
+    return jnp.einsum("gecf,efd->gecd", h, w_down)
 
-    # load-balance aux loss (Switch): E * sum_e f_e * p_e
-    density = onehot.astype(jnp.float32).sum(2).mean(1)   # (g, e) token frac
-    p_mean = probs.mean(1)
-    aux = {"load_balance": (E * (density * p_mean).sum(-1)).mean(),
-           "dropped_frac": 1.0 - (dispatch.sum((2, 3)) > 0)
-                                 .astype(jnp.float32).mean()}
-    return y.reshape(B, S, D), aux
+
+def moe_ffn(x, router_w, w_gate, w_up, w_down, *, top_k: int,
+            capacity_factor: float = 1.25, group: int = 256, tp=None):
+    """x: (B, S, D); router_w: (D, E) — always the FULL expert count;
+    w_gate/w_up: (E, D, F); w_down: (E, F, D) — the LOCAL expert shard
+    (E/tp, ...) under an expert-parallel ``tp`` plan.  Returns (B, S, D)
+    plus aux losses dict."""
+    B, S, D = x.shape
+    E = router_w.shape[-1]
+    ep = tp is not None and tp.plan.moe
+    tp_size = tp.size if ep else 1
+    T = B * S
+    group = min(group, T)
+    # pad the token count to a multiple of group (x tp under expert
+    # parallelism, so the group axis splits evenly); padded tokens are
+    # masked out of dispatch, capacity, aux, and output
+    tile = group * tp_size
+    Tp = -(-T // tile) * tile
+    xt = x.reshape(T, D)
+    if Tp != T:
+        xt = jnp.pad(xt, ((0, Tp - T), (0, 0)))
+    n_groups = Tp // group
+    xg = xt.reshape(n_groups, group, D)
+    valid = (jnp.arange(Tp) < T).reshape(n_groups, group)
+
+    if ep:
+        from repro.models import layers as L
+        gl = n_groups // tp_size
+        xg = L.tp_push(xg, tp.axis)
+        start = tp.index * gl
+        xg = jax.lax.dynamic_slice_in_dim(xg, start, gl, axis=0)
+        v_loc = jax.lax.dynamic_slice_in_dim(
+            valid.astype(jnp.int32), start, gl, axis=0).astype(bool)
+        disp, comb, aux = route_tokens(
+            xg, router_w, v_loc, top_k=top_k,
+            capacity_factor=capacity_factor, total_valid=float(T))
+        xe = jnp.einsum("gtec,gtd->gecd", disp, xg)       # (gl, E, cap, D)
+        # token dispatch: this position's slots for expert e travel to
+        # e's owner; combine is the conjugate all_to_all
+        xe = jax.lax.all_to_all(xe, tp.axis, split_axis=1, concat_axis=0,
+                                tiled=True)               # (gl*tp, E/tp,..)
+        ye = _expert_ffn(xe, w_gate, w_up, w_down)
+        ye = jax.lax.all_to_all(ye, tp.axis, split_axis=0, concat_axis=1,
+                                tiled=True)               # (gl, E, cap, D)
+        y_loc = jnp.einsum("gtec,gecd->gtd", comb, ye)
+        y = jnp.zeros((n_groups, group, D), y_loc.dtype)
+        y = jax.lax.dynamic_update_slice_in_dim(y, y_loc, start, axis=0)
+        y = L.tp_pull(y, tp.axis)
+        # per-position aux terms are partial sums (group-weighted by the
+        # GLOBAL token count) — one psum each assembles the full value
+        aux = {k: L.tp_pull(v, tp.axis) for k, v in aux.items()}
+    else:
+        disp, comb, aux = route_tokens(xg, router_w, valid, top_k=top_k,
+                                       capacity_factor=capacity_factor)
+        xe = jnp.einsum("gtec,gtd->gecd", disp, xg)       # (g, E, cap, D)
+        ye = _expert_ffn(xe, w_gate, w_up, w_down)
+        y = jnp.einsum("gtec,gecd->gtd", comb, ye)
+
+    return y.reshape(Tp, D)[:T].reshape(B, S, D), aux

@@ -1,0 +1,259 @@
+"""Family-generic model-axis shard plans.
+
+One subsystem decides what the ``model`` mesh axis shards for EVERY
+architecture family in the config zoo.  Three objects:
+
+* :class:`TPPlan` — the static per-config decision: which *regions*
+  (attn / ffn / vocab / moe / mixer) shard, and whether the activations
+  between regions are sequence-sharded (``seq``).
+* :class:`TPRuntime` — the per-trace context (axis name, size, this
+  position's coordinate, plan) threaded through ``transformer.forward``.
+* :class:`TPSpec` — the per-parameter-leaf placement, derived from the
+  role metadata each ``param_spec`` entry carries (see
+  :data:`PARAM_ROLES`), not from architecture-specific code.
+
+Regions by family (each wired through the conjugate collectives in
+``models/layers``):
+
+* ``attn``  — Megatron column/row pairing of wq/wk/wv ∘ wo (families
+  with attention); requires heads AND kv-heads divisible.
+* ``ffn``   — column/row pairing of the gated MLP: w_gate/w_up ∘ w_down
+  (dense/audio/vlm/hybrid) or p_up/p_gate ∘ p_down (ssm family's
+  in-block projection).
+* ``vocab`` — vocab-parallel embedding + column-parallel unembed with
+  the CE on vocab-sharded logits.
+* ``moe``   — expert parallelism: the expert dimension of
+  w_gate/w_up/w_down shards over ``model``; tokens are group-sharded
+  inside the region and reach their experts through an explicit
+  ``all_to_all`` dispatch/combine (``models/moe.moe_ffn``); the router
+  stays replicated with partial-gradient psum.
+* ``mixer`` — recurrent mixers run fully local: mLSTM shards heads
+  (xq/xk/xv/xo + i/f gates), the hybrid selective SSM shards channels
+  (m_dt/m_A/m_D/m_ln/m_out; m_in/m_bc stay replicated with partial
+  grads).  State dims are per-head/per-channel, so the chunked scan
+  needs zero extra collectives.
+
+``seq`` (sequence parallelism, dense-family opt-in via
+``ModelConfig.seq_parallel``) converts each region's psum pair into the
+``psum_scatter``/``all_gather`` conjugates: the norm/residual regions
+between matmul pairs hold (B, S/tp, D) activations — same collective
+bytes on the wire, 1/tp the activation memory.  It requires ``ffn`` and
+``vocab`` to shard (the CE path must run on vocab-sharded logits so the
+unembed gather has column-parallel consumers); a replicated-attention
+fallback region is entered with a gather and exited with this
+position's sequence slice, which turns the attention leaves into
+``partial``-gradient kind.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+
+
+# ============================================================== TPPlan
+@dataclasses.dataclass(frozen=True)
+class TPPlan:
+    """What the model axis shards for one config (static).
+
+    Field order (size, attn, ffn, vocab) is stable API — callers build
+    plans positionally.
+    """
+
+    size: int = 1
+    attn: bool = False
+    ffn: bool = False
+    vocab: bool = False
+    moe: bool = False        # expert-parallel MoE dispatch/combine
+    mixer: bool = False      # head/channel-sharded recurrent mixer
+    seq: bool = False        # sequence-sharded inter-region activations
+
+    @property
+    def active(self) -> bool:
+        return self.size > 1 and (self.attn or self.ffn or self.vocab
+                                  or self.moe or self.mixer)
+
+
+class TPRuntime(NamedTuple):
+    """Per-trace TP context threaded through forward/loss_fn.
+
+    ``index`` is this position's model-axis coordinate (a traced scalar —
+    ``axis_index`` lowers to an unsupported PartitionId under fully-manual
+    SPMD, so the caller feeds it in as a sharded input instead)."""
+
+    axis: str
+    size: int
+    index: jax.Array
+    plan: TPPlan
+
+
+# ======================================================== plan builders
+def _attn_divides(cfg, size: int) -> bool:
+    return cfg.n_heads % size == 0 and cfg.n_kv_heads % size == 0
+
+
+def _plan_dense(cfg, size: int) -> TPPlan:
+    ffn = cfg.d_ff > 0 and cfg.d_ff % size == 0
+    vocab = cfg.vocab % size == 0
+    # seq parallelism needs the CE on vocab-sharded logits (so the
+    # unembed gather has column-parallel consumers) and a sharded FFN;
+    # the VLM frontend concat would break the uniform sequence shards
+    seq = (cfg.seq_parallel and ffn and vocab and cfg.frontend == "none")
+    return TPPlan(size, attn=_attn_divides(cfg, size), ffn=ffn,
+                  vocab=vocab, seq=seq)
+
+
+def _plan_moe(cfg, size: int) -> TPPlan:
+    return TPPlan(size, attn=_attn_divides(cfg, size),
+                  vocab=cfg.vocab % size == 0,
+                  moe=cfg.n_experts > 0 and cfg.n_experts % size == 0)
+
+
+def _plan_ssm(cfg, size: int) -> TPPlan:
+    # mixer = mLSTM heads; ffn = the gated in-block projection (2*D wide)
+    return TPPlan(size, ffn=(2 * cfg.d_model) % size == 0,
+                  vocab=cfg.vocab % size == 0,
+                  mixer=cfg.n_heads % size == 0)
+
+
+def _plan_hybrid(cfg, size: int) -> TPPlan:
+    return TPPlan(size, attn=_attn_divides(cfg, size),
+                  ffn=cfg.d_ff > 0 and cfg.d_ff % size == 0,
+                  vocab=cfg.vocab % size == 0,
+                  mixer=cfg.d_model % size == 0)
+
+
+_PLAN_BUILDERS = {"dense": _plan_dense, "audio": _plan_dense,
+                  "vlm": _plan_dense, "moe": _plan_moe,
+                  "ssm": _plan_ssm, "hybrid": _plan_hybrid}
+
+
+def build_plan(cfg, size: int) -> TPPlan:
+    """The model-axis sharding plan for ``cfg`` at ``size`` shards.
+    A family without a registered builder replicates (inactive plan) —
+    new families degrade gracefully instead of crashing the runtime."""
+    builder = _PLAN_BUILDERS.get(cfg.family)
+    if size <= 1 or builder is None:
+        return TPPlan(size=max(size, 1))
+    return builder(cfg, size)
+
+
+# `tp_plan` is the historical name (re-exported by models.transformer)
+tp_plan = build_plan
+
+
+# ============================================================== TPSpec
+@dataclasses.dataclass(frozen=True)
+class TPSpec:
+    """Model-axis placement of one parameter leaf (stacked shapes).
+
+    ``kind``:
+      * ``col`` / ``row`` — Megatron column/row shard at ``dim``; the
+        leaf's gradient is naturally shard-local.
+      * ``expert`` — expert-parallel shard of the expert dimension;
+        shard-local gradients like col/row (each position only ever
+        computes its own experts).
+      * ``vocab``   — vocab-parallel embedding rows (col shard of the
+        unembed); shard-local gradients like col/row.
+      * ``replicate`` — identical on every model position; the gradient
+        comes out replicated (full) on each position.
+      * ``partial`` — replicated VALUES consumed inside a TP region on
+        local shards only (qk-norm scales over local heads, the MoE
+        router over local token groups, seq-parallel norm scales over
+        local sequence slices): each position's gradient is a partial
+        sum, and the train body must ``psum`` it over the model axis
+        (see ``dist.sharding.tp_grad_sync``).
+    """
+
+    dim: int = -1
+    kind: str = "replicate"
+
+
+_REP = TPSpec()
+_PARTIAL = TPSpec(-1, "partial")
+
+# Role metadata for every ``param_spec`` entry: leaf name ->
+# (region, dim, kind).  The region names match TPPlan fields; a leaf
+# shards iff its region is active in the plan.  Region "seq" marks
+# leaves consumed on sequence-sharded activations (norm scales): they
+# replicate their VALUES always, but their grads become partial sums
+# when the plan sequence-shards.  Names are unique per family (the
+# moe/hybrid ``w_gate`` collision is resolved by the family key).
+_ATTN_ROLES = {"wq": ("attn", 2, "col"), "wk": ("attn", 2, "col"),
+               "wv": ("attn", 2, "col"), "wo": ("attn", 1, "row"),
+               "bq": ("attn", 1, "col"), "bk": ("attn", 1, "col"),
+               "bv": ("attn", 1, "col"),
+               "q_norm": ("attn", -1, "partial"),
+               "k_norm": ("attn", -1, "partial")}
+
+_FFN_ROLES = {"w_gate": ("ffn", 2, "col"), "w_up": ("ffn", 2, "col"),
+              "w_down": ("ffn", 1, "row")}
+
+PARAM_ROLES = {
+    "dense": {**_ATTN_ROLES, **_FFN_ROLES},
+    "moe": {**_ATTN_ROLES,
+            "router": ("moe", -1, "partial"),
+            "w_gate": ("moe", 1, "expert"), "w_up": ("moe", 1, "expert"),
+            "w_down": ("moe", 1, "expert")},
+    "ssm": {"xq": ("mixer", 2, "col"), "xk": ("mixer", 2, "col"),
+            "xv": ("mixer", 2, "col"), "xo": ("mixer", 1, "row"),
+            "w_i": ("mixer", 2, "col"), "w_f": ("mixer", 2, "col"),
+            "b_i": ("mixer", 1, "col"), "b_f": ("mixer", 1, "col"),
+            "p_up": ("ffn", 2, "col"), "p_gate": ("ffn", 2, "col"),
+            "p_down": ("ffn", 1, "row")},
+    "hybrid": {**_ATTN_ROLES, **_FFN_ROLES,
+               "m_dt": ("mixer", 2, "col"), "m_A": ("mixer", 1, "col"),
+               "m_D": ("mixer", 1, "col"), "m_ln": ("mixer", 1, "col"),
+               "m_out": ("mixer", 1, "row"),
+               "m_in": ("mixer", -1, "partial"),
+               "m_bc": ("mixer", -1, "partial")},
+}
+PARAM_ROLES["audio"] = PARAM_ROLES["dense"]
+PARAM_ROLES["vlm"] = PARAM_ROLES["dense"]
+
+_NORM_LEAVES = ("ln1", "ln2")        # block norms consumed on seq shards
+
+
+def _leaf_spec(plan: TPPlan, roles: dict, name: str) -> TPSpec:
+    if name in _NORM_LEAVES:
+        # block norm scales: replicated values; consumed on (B, S/tp, D)
+        # residual shards under a seq plan => partial grads
+        return _PARTIAL if plan.seq else _REP
+    role = roles.get(name)
+    if role is None:
+        return _REP
+    region, dim, kind = role
+    if getattr(plan, region):
+        return TPSpec(dim, kind)
+    if region == "attn" and plan.seq:
+        # replicated-attention fallback inside a seq plan: the region is
+        # entered with a gather whose backward psum_scatters, so each
+        # position's attention-weight grads cover only its sequence
+        # slice's cotangent — partial sums over the model axis
+        return _PARTIAL
+    return _REP
+
+
+def tp_specs(cfg, size: int) -> Any:
+    """Pytree of :class:`TPSpec` matching the parameter tree: every
+    entry of ``models/transformer.param_spec`` mapped through its
+    :data:`PARAM_ROLES` metadata under the family's plan."""
+    from repro.models import transformer as tr
+    plan = build_plan(cfg, size)
+    roles = PARAM_ROLES.get(cfg.family, {})
+    spec = tr.param_spec(cfg)
+    out: dict[str, Any] = {}
+    for name in spec:
+        if name == "blocks":
+            out["blocks"] = {bn: _leaf_spec(plan, roles, bn)
+                             for bn in spec["blocks"]}
+        elif name == "embed":
+            out["embed"] = TPSpec(0, "vocab") if plan.vocab else _REP
+        elif name == "lm_head":
+            out["lm_head"] = TPSpec(1, "col") if plan.vocab else _REP
+        elif name == "ln_f" and plan.seq:
+            out["ln_f"] = _PARTIAL          # consumed on sequence shards
+        else:                               # ln_f (non-seq), proj_in, ...
+            out[name] = _REP
+    return out

@@ -28,8 +28,14 @@ def ssm_scan(u, dt, B, C, A_log, D_skip, *, chunk: int = 128,
     N = B.shape[-1]
     A = -jnp.exp(A_log.astype(jnp.float32))                      # (Di, N)
     chunk = min(chunk, T)
-    n_chunks = T // chunk
-    assert n_chunks * chunk == T, (T, chunk)
+    n_chunks = -(-T // chunk)
+    Tp = n_chunks * chunk
+    if Tp != T:
+        # pad time with zeros: dt == 0 makes the padded steps identity
+        # transitions (a = exp(0·A) = 1, b = 0), so h_final is exact and
+        # the padded y rows are simply discarded
+        u, dt, B, C = (jnp.pad(a, ((0, 0), (0, Tp - T), (0, 0)))
+                       for a in (u, dt, B, C))
 
     def reshape_c(x):
         return x.reshape(Bt, n_chunks, chunk, *x.shape[2:]).swapaxes(0, 1)
@@ -61,7 +67,7 @@ def ssm_scan(u, dt, B, C, A_log, D_skip, *, chunk: int = 128,
 
     h0 = jnp.zeros((Bt, Di, N), jnp.float32)
     h_final, ys = jax.lax.scan(body, h0, (uc, dtc, Bc, Cc))
-    return ys.swapaxes(0, 1).reshape(Bt, T, Di), h_final
+    return ys.swapaxes(0, 1).reshape(Bt, Tp, Di)[:, :T], h_final
 
 
 def ssm_decode_step(h, u, dt, B, C, A_log, D_skip):

@@ -12,8 +12,7 @@ state (None in train/prefill).
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, NamedTuple, Optional
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
@@ -25,58 +24,11 @@ from repro.models.config import ModelConfig
 
 
 # ==================================================== tensor parallelism
-@dataclasses.dataclass(frozen=True)
-class TPPlan:
-    """What the model axis shards, Megatron-style (static, from cfg).
-
-    Each True member is one column/row matmul pair wired through the
-    ``layers.tp_push``/``tp_pull`` conjugate collectives:
-
-    * ``attn``  — wq/wk/wv (+biases) column-parallel on heads, wo
-      row-parallel; requires n_heads AND n_kv_heads divisible by ``size``
-      (GQA with fewer kv heads than shards falls back to replicated
-      attention rather than duplicating kv state).
-    * ``ffn``   — w_gate/w_up column-parallel on d_ff, w_down row-parallel.
-    * ``vocab`` — vocab-parallel embedding (masked lookup + psum) and
-      column-parallel unembed; the cross-entropy runs on vocab-sharded
-      logits (pmax/psum logsumexp + masked target gather).
-
-    Only the dense-FFN families participate; moe/ssm/hybrid replicate the
-    model axis (their expert/state sharding is a different axis plan).
-    """
-
-    size: int = 1
-    attn: bool = False
-    ffn: bool = False
-    vocab: bool = False
-
-    @property
-    def active(self) -> bool:
-        return self.size > 1 and (self.attn or self.ffn or self.vocab)
-
-
-def tp_plan(cfg: ModelConfig, size: int) -> TPPlan:
-    """The model-axis sharding plan for ``cfg`` at ``size`` shards."""
-    if size <= 1 or cfg.family not in ("dense", "audio", "vlm"):
-        return TPPlan(size=max(size, 1))
-    return TPPlan(
-        size=size,
-        attn=cfg.n_heads % size == 0 and cfg.n_kv_heads % size == 0,
-        ffn=cfg.d_ff > 0 and cfg.d_ff % size == 0,
-        vocab=cfg.vocab % size == 0)
-
-
-class TPRuntime(NamedTuple):
-    """Per-trace TP context threaded through forward/loss_fn.
-
-    ``index`` is this position's model-axis coordinate (a traced scalar —
-    ``axis_index`` lowers to an unsupported PartitionId under fully-manual
-    SPMD, so the caller feeds it in as a sharded input instead)."""
-
-    axis: str
-    size: int
-    index: jax.Array
-    plan: TPPlan
+# The model-axis shard-plan subsystem lives in ``models/shard_plan``
+# (family-generic: expert-parallel MoE, sharded recurrent mixers,
+# sequence parallelism).  Re-exported here under the historical names.
+from repro.models.shard_plan import (TPPlan, TPRuntime,  # noqa: F401
+                                     tp_plan)
 
 
 # ============================================================ param spec
@@ -175,13 +127,19 @@ def init_params(key: jax.Array, cfg: ModelConfig) -> dict:
 
 # ================================================================= blocks
 def _attn(cfg: ModelConfig, lp, x, positions, mode, cache, window, tp=None):
-    B, S, D = x.shape
+    B = x.shape[0]
     tp_attn = tp is not None and tp.plan.attn
+    seq = tp is not None and tp.plan.seq
     n_heads = cfg.n_heads // (tp.size if tp_attn else 1)
     n_kv = cfg.n_kv_heads // (tp.size if tp_attn else 1)
     h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
-    if tp_attn:
+    if seq:
+        # sequence-parallel entry: assemble the full sequence (bwd:
+        # psum_scatter of the shards' partial cotangents)
+        h = L.tp_seq_gather(h, tp.axis, 1)
+    elif tp_attn:
         h = L.tp_push(h, tp.axis)
+    S = h.shape[1]
     q = h @ lp["wq"]
     k = h @ lp["wk"]
     v = h @ lp["wv"]
@@ -218,31 +176,63 @@ def _attn(cfg: ModelConfig, lp, x, positions, mode, cache, window, tp=None):
             out = jax.lax.with_sharding_constraint(out, _P("model"))
         new_cache = ({"k": k, "v": v} if mode == "prefill" else None)
     y = out.reshape(B, S, n_heads * cfg.hd) @ lp["wo"]
-    if tp_attn:
+    if seq and tp_attn:
+        y = L.tp_seq_scatter(y, tp.axis, 1)     # partials -> seq shards
+    elif seq:
+        # replicated-attention fallback under a seq plan: every position
+        # computed the full (identical) output; keep this position's
+        # sequence slice — the entry gather's psum_scatter assembles the
+        # per-slice cotangent contributions on the way back
+        s_loc = S // tp.size
+        y = jax.lax.dynamic_slice_in_dim(y, tp.index * s_loc, s_loc, 1)
+    elif tp_attn:
         y = L.tp_pull(y, tp.axis)
     return x + y, new_cache
 
 
+def _gated_mlp(h, w_gate, w_up, w_down):
+    return (jax.nn.silu(h @ w_gate) * (h @ w_up)) @ w_down
+
+
 def _ffn(cfg, lp, x, tp=None):
     tp_ffn = tp is not None and tp.plan.ffn
+    seq = tp is not None and tp.plan.seq       # seq plans imply tp_ffn
     h = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
-    if tp_ffn:
+    if seq:
+        h = L.tp_seq_gather(h, tp.axis, 1)
+    elif tp_ffn:
         h = L.tp_push(h, tp.axis)
-    y = (jax.nn.silu(h @ lp["w_gate"]) * (h @ lp["w_up"])) @ lp["w_down"]
-    if tp_ffn:
+    y = _gated_mlp(h, lp["w_gate"], lp["w_up"], lp["w_down"])
+    if seq:
+        y = L.tp_seq_scatter(y, tp.axis, 1)
+    elif tp_ffn:
         y = L.tp_pull(y, tp.axis)
     return x + y
 
 
-def _mamba(cfg, lp, x, mode, state):
-    """Selective-SSM branch (hybrid).  Returns (delta, new_state)."""
+def _mamba(cfg, lp, x, mode, state, tp=None):
+    """Selective-SSM branch (hybrid).  Returns (delta, new_state).
+
+    Under a sharded-mixer plan the CHANNEL dim is split over the model
+    axis: m_dt/m_A/m_D/m_ln/m_out hold local channels and the chunked
+    scan runs fully local (state is per-channel).  m_in and m_bc stay
+    replicated (their z/u and B/C halves straddle the split) with
+    partial-grad psum; the per-channel slices of z/u are taken locally.
+    The m_ln RMS norm is the one cross-shard statistic (psum'd mean of
+    squares over the full channel width)."""
     B, S, D = x.shape
-    zu = x @ lp["m_in"]
+    tp_mix = tp is not None and tp.plan.mixer
+    x_in = L.tp_push(x, tp.axis) if tp_mix else x
+    zu = x_in @ lp["m_in"]
     z, u = jnp.split(zu, 2, axis=-1)
-    u = jax.nn.silu(u)
-    dt = jax.nn.softplus(x @ lp["m_dt"])
-    bc = x @ lp["m_bc"]
+    dt = jax.nn.softplus(x_in @ lp["m_dt"])
+    bc = x_in @ lp["m_bc"]
     Bm, Cm = jnp.split(bc, 2, axis=-1)
+    if tp_mix:
+        d_loc = dt.shape[-1]                   # m_dt is column-sharded
+        z = jax.lax.dynamic_slice_in_dim(z, tp.index * d_loc, d_loc, -1)
+        u = jax.lax.dynamic_slice_in_dim(u, tp.index * d_loc, d_loc, -1)
+    u = jax.nn.silu(u)
     if mode == "decode":
         h_new, y = ssm_lib.ssm_decode_step(
             state, u[:, 0], dt[:, 0], Bm[:, 0], Cm[:, 0],
@@ -253,16 +243,28 @@ def _mamba(cfg, lp, x, mode, state):
                                     chunk=cfg.scan_chunk,
                                     scan_f32=cfg.ssm_scan_f32)
         h_new = h_new if mode == "prefill" else None
-    y = L.rms_norm(y, lp["m_ln"], cfg.norm_eps) * jax.nn.silu(z)
-    return y @ lp["m_out"], h_new
+    if tp_mix:
+        y = L.rms_norm_sharded(y, lp["m_ln"], cfg.norm_eps, tp.axis, D)
+    else:
+        y = L.rms_norm(y, lp["m_ln"], cfg.norm_eps)
+    y = y * jax.nn.silu(z)
+    out = y @ lp["m_out"]
+    return (L.tp_pull(out, tp.axis) if tp_mix else out), h_new
 
 
-def _mlstm(cfg, lp, x, mode, state):
+def _mlstm(cfg, lp, x, mode, state, tp=None):
     B, S, D = x.shape
+    tp_mix = tp is not None and tp.plan.mixer
+    n_heads = cfg.n_heads // (tp.size if tp_mix else 1)
     h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
-    q = (h @ lp["xq"]).reshape(B, S, cfg.n_heads, cfg.hd)
-    k = (h @ lp["xk"]).reshape(B, S, cfg.n_heads, cfg.hd)
-    v = (h @ lp["xv"]).reshape(B, S, cfg.n_heads, cfg.hd)
+    if tp_mix:
+        # head-sharded mixer: xq/xk/xv and the i/f gates are
+        # column-parallel on heads, xo row-parallel; the recurrent state
+        # is per-head, so the whole chunked recurrence runs local
+        h = L.tp_push(h, tp.axis)
+    q = (h @ lp["xq"]).reshape(B, S, n_heads, cfg.hd)
+    k = (h @ lp["xk"]).reshape(B, S, n_heads, cfg.hd)
+    v = (h @ lp["xv"]).reshape(B, S, n_heads, cfg.hd)
     i_pre = h @ lp["w_i"] + lp["b_i"]
     f_pre = h @ lp["w_f"] + lp["b_f"]
     if cfg.attn_batch_shard and mode != "decode":
@@ -292,7 +294,10 @@ def _mlstm(cfg, lp, x, mode, state):
             elems = (q.swapaxes(0, 1), k.swapaxes(0, 1), v.swapaxes(0, 1),
                      i_pre.swapaxes(0, 1), f_pre.swapaxes(0, 1))
             new_state, _ = jax.lax.scan(step, st0, elems)
-    return x + out.reshape(B, S, cfg.q_dim) @ lp["xo"], new_state
+    y = out.reshape(B, S, n_heads * cfg.hd) @ lp["xo"]
+    if tp_mix:
+        y = L.tp_pull(y, tp.axis)
+    return x + y, new_state
 
 
 def init_mlstm_state(cfg, B, dtype=jnp.float32):
@@ -306,19 +311,24 @@ def _block(cfg: ModelConfig, lp, x, positions, mode, cache, window, tp=None):
     aux = {}
     if cfg.family == "ssm":
         x, mix_state = _mlstm(cfg, lp, x, mode,
-                              cache["mix"] if cache else None)
+                              cache["mix"] if cache else None, tp)
+        tp_ffn = tp is not None and tp.plan.ffn
         h = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
-        y = (jax.nn.silu(h @ lp["p_gate"]) * (h @ lp["p_up"])) @ lp["p_down"]
+        if tp_ffn:                      # gated in-block projection pair
+            h = L.tp_push(h, tp.axis)
+        y = _gated_mlp(h, lp["p_gate"], lp["p_up"], lp["p_down"])
+        if tp_ffn:
+            y = L.tp_pull(y, tp.axis)
         x = x + y
         new_cache = {"mix": mix_state} if mode != "train" else None
         return x, new_cache, aux
     if cfg.family == "hybrid":
         attn_out, kv = _attn(cfg, lp, x, positions, mode,
-                             cache.get("kv") if cache else None, window)
+                             cache.get("kv") if cache else None, window, tp)
         m_out, m_state = _mamba(cfg, lp, x, mode,
-                                cache.get("ssm") if cache else None)
+                                cache.get("ssm") if cache else None, tp)
         x = 0.5 * (attn_out + (x + m_out))       # parallel heads, averaged
-        x = _ffn(cfg, lp, x)
+        x = _ffn(cfg, lp, x, tp)
         new_cache = ({"kv": kv, "ssm": m_state} if mode != "train" else None)
         return x, new_cache, aux
     # dense / moe / audio / vlm
@@ -329,8 +339,7 @@ def _block(cfg: ModelConfig, lp, x, positions, mode, cache, window, tp=None):
         y, aux = moe_lib.moe_ffn(h, lp["router"], lp["w_gate"], lp["w_up"],
                                  lp["w_down"], top_k=cfg.top_k,
                                  capacity_factor=cfg.capacity_factor,
-                                 group=cfg.moe_group_size,
-                                 expert_shard_acts=cfg.moe_expert_shard_acts)
+                                 group=cfg.moe_group_size, tp=tp)
         x = x + y
     else:
         x = _ffn(cfg, lp, x, tp)
@@ -353,7 +362,12 @@ def embed_inputs(params, cfg: ModelConfig, tokens,
         ok = (idx >= 0) & (idx < v_loc)
         x = jnp.where(ok[..., None],
                       params["embed"][jnp.clip(idx, 0, v_loc - 1)], 0)
-        x = L.tp_pull(x, tp.axis)
+        if tp.plan.seq:
+            # sequence-parallel residual stream: reduce-scatter the
+            # vocab partials straight into (B, S/tp, D) shards
+            x = L.tp_seq_scatter(x, tp.axis, 1)
+        else:
+            x = L.tp_pull(x, tp.axis)
     else:
         x = params["embed"][tokens]
     if cfg.frontend == "vlm":
@@ -374,10 +388,21 @@ def forward(params, cfg: ModelConfig, tokens, frontend_embeds=None,
     With ``tp`` (inside a manual shard_map over tp.axis) params are the
     local shards of the TPPlan and, when the plan shards the vocab, the
     returned logits are vocab-sharded (B, S, V/tp) — ``loss_fn`` computes
-    the cross-entropy without ever materializing full logits.
+    the cross-entropy without ever materializing full logits.  Under a
+    sequence-parallel plan the residual stream between TP regions is
+    (B, S/tp, D); the logits come back full-sequence (the unembed
+    gathers), so the loss path is unchanged.
     """
+    seq = tp is not None and tp.plan.seq
+    if seq:
+        s_full = tokens.shape[1]
+        if s_full % tp.size != 0:
+            raise ValueError(
+                f"sequence-parallel plan needs seq_len divisible by the "
+                f"model axis: {s_full} % {tp.size} != 0")
     x = embed_inputs(params, cfg, tokens, frontend_embeds, tp)
-    B, S, D = x.shape
+    B = x.shape[0]
+    S = x.shape[1] * (tp.size if seq else 1)    # full sequence length
     positions = jnp.broadcast_to(jnp.arange(S), (B, S))
 
     def body(carry, lp):
@@ -391,7 +416,9 @@ def forward(params, cfg: ModelConfig, tokens, frontend_embeds=None,
     x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
     head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
     if tp is not None and tp.plan.vocab:
-        x = L.tp_push(x, tp.axis)       # column-parallel unembed
+        # column-parallel unembed; a seq plan assembles the sequence here
+        x = (L.tp_seq_gather(x, tp.axis, 1) if seq
+             else L.tp_push(x, tp.axis))
     logits = x @ head
     return logits, caches, {"load_balance": lb.mean()}
 

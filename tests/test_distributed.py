@@ -201,7 +201,8 @@ def test_512_device_lowering_int8_wire(tmp_path):
     assert not dtypes["reduce-scatter"]
     # --- tensor parallelism actually engaged on the model axis ---------
     assert rec["tp"] == {"size": 16, "attn": False, "ffn": True,
-                         "vocab": True, "sharded_leaves": 4}
+                         "vocab": True, "moe": False, "mixer": False,
+                         "seq": False, "sharded_leaves": 4}
     axes = rec["collective_bytes_per_device"]["axes"]
     counts = rec["collective_bytes_per_device"]["axis_counts"]
     # Megatron psums: >= one all-reduce per layer per direction (24
@@ -214,3 +215,106 @@ def test_512_device_lowering_int8_wire(tmp_path):
     assert axes["client"]["all-to-all"] > 0
     assert "all-to-all" not in axes.get("model", {})
     assert "all-gather" not in axes.get("model", {})
+
+
+@pytest.mark.slow
+def test_512_device_lowering_moe_expert_parallel(tmp_path):
+    """ISSUE 4 regression: the 512-device lowering of an MoE config
+    engages EXPERT parallelism on the model axis — stored expert weights
+    are model-sharded on their expert dim, token dispatch/combine cross
+    the model axis as ``all_to_all``s (disjoint from the client wire,
+    which stays int8), and the router replicates with partial-grad
+    psums."""
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch",
+         "olmoe-1b-7b", "--shape", "train_1k", "--multi-pod",
+         "--int8-wire", "--out", str(tmp_path)],
+        capture_output=True, text=True, timeout=1800,
+        env=SUBPROC_ENV)
+    assert r.returncode == 0, (r.stdout[-500:], r.stderr[-2000:])
+    rec = json.loads(
+        (tmp_path / "olmoe-1b-7b__train_1k_mp.json").read_text())
+    assert rec["devices"] == 512
+    tp = rec["tp"]
+    assert tp["size"] == 16 and tp["moe"] and tp["vocab"] and tp["attn"]
+    # olmoe shards attn (16 kv heads) + 3 expert leaves + embed/head:
+    # wq wk wv wo w_gate w_up w_down embed lm_head
+    assert tp["sharded_leaves"] == 9
+    axes = rec["collective_bytes_per_device"]["axes"]
+    counts = rec["collective_bytes_per_device"]["axis_counts"]
+    # expert-parallel token traffic: >= 2 all_to_alls per layer per
+    # direction (16 layers; dispatch + combine, fwd + transpose)
+    assert axes["model"]["all-to-all"] > 0
+    assert counts["model"]["all-to-all"] >= 4 * 16
+    # the FSA client wire is still int8 and still client-only — the
+    # model-axis token all_to_all must not masquerade as the wire
+    assert rec["wire_dtype"] == "s8"
+    a2a_model = rec["collective_bytes_per_device"]["axis_dtypes"][
+        "model"]["all-to-all"]
+    assert a2a_model.get("s8", 0) == 0          # tokens, not wire blocks
+    assert axes["client"]["all-to-all"] > 0
+
+
+@pytest.mark.slow
+def test_512_device_lowering_seq_parallel(tmp_path):
+    """ISSUE 4 regression: a sequence-parallel dense plan converts the
+    per-region Megatron psum pairs into psum_scatter/all_gather
+    conjugates — the per-region all-reduces collapse, every psum byte
+    reappears as exactly one psum_scatter (reduce-scatter) byte, and
+    the ring-weighted model-axis link cost stays within the full-remat
+    allowance (the backward re-gathers each region entry; the base
+    plan's remat recomputes the corresponding psums, but an entry psum
+    is identity-forward so its recompute is free — one extra all-gather
+    per region, bounded below).
+
+    gptneo (16 MHA heads, d_ff 8192) is the arch whose ATTENTION also
+    shards 16-way, so base and seq run the same set of sharded regions;
+    the vocab override (50257 -> 50176) makes the vocab divisible, which
+    a seq plan requires."""
+    for opt, tag in [("vocab=50176", "base"),
+                     ("vocab=50176,seq_parallel=true", "seq")]:
+        r = subprocess.run(
+            [sys.executable, "-m", "repro.launch.dryrun", "--arch",
+             "eris-gptneo-1.3b", "--shape", "train_1k", "--multi-pod",
+             "--int8-wire", "--opt", opt, "--tag", tag,
+             "--out", str(tmp_path)],
+            capture_output=True, text=True, timeout=1800,
+            env=SUBPROC_ENV)
+        assert r.returncode == 0, (tag, r.stdout[-500:], r.stderr[-2000:])
+    base = json.loads(
+        (tmp_path / "eris-gptneo-1_3b__train_1k_mp_base.json").read_text())
+    seq = json.loads(
+        (tmp_path / "eris-gptneo-1_3b__train_1k_mp_seq.json").read_text())
+    assert not base["tp"]["seq"] and seq["tp"]["seq"]
+    assert base["tp"]["attn"] and seq["tp"]["attn"]
+    b_ax = base["collective_bytes_per_device"]["axes"]
+    s_ax = seq["collective_bytes_per_device"]["axes"]
+    b_cnt = base["collective_bytes_per_device"]["axis_counts"]
+    s_cnt = seq["collective_bytes_per_device"]["axis_counts"]
+    # the conjugate pair replaces the paired psums: byte-for-byte, the
+    # base's model-axis all-reduce payload becomes reduce-scatter
+    # payload (same multiset of region collectives, scatter halves)...
+    assert b_cnt["model"].get("reduce-scatter", 0) == 0
+    rs, ar = s_ax["model"]["reduce-scatter"], b_ax["model"]["all-reduce"]
+    assert abs(rs - ar) / ar < 0.02, (rs, ar)
+    # ...the per-region all-reduces are gone (only the CE scalar fields
+    # remain)...
+    assert s_cnt["model"]["all-reduce"] < b_cnt["model"]["all-reduce"] / 8
+    assert s_ax["model"].get("all-gather", 0) > 0
+    # ...and the ring-weighted model-axis link cost stays within the
+    # remat re-gather allowance (AR costs RS + AG on the wire; the one
+    # extra AG per region recompute bounds the overhead well under 25%).
+    # Ring weights inline (mirrors benchmarks/roofline.py) so the test
+    # stays hermetic — no sys.path mutation to import benchmarks/.
+    def model_link_cost(rec):
+        n = rec["tp"]["size"]
+        w = {"all-reduce": 2 * (n - 1) / n, "all-gather": (n - 1) / n,
+             "reduce-scatter": (n - 1) / n, "all-to-all": (n - 1) / n}
+        model = rec["collective_bytes_per_device"]["axes"]["model"]
+        return sum(v * w.get(k, 1.0) for k, v in model.items())
+
+    assert model_link_cost(seq) <= model_link_cost(base) * 1.25, (
+        model_link_cost(seq), model_link_cost(base))
+    # the client wire format is untouched by the activation re-layout
+    assert seq["wire_dtype"] == "s8"
+    assert s_ax["client"]["all-to-all"] > 0

@@ -1,11 +1,16 @@
 """MoE dispatch correctness: grouped capacity dispatch vs a naive
-per-token reference, load-balance loss, capacity dropping."""
+per-token reference, load-balance loss, capacity dropping, padding on
+indivisible token counts, and hypothesis invariants of the dispatch
+tensors (capacity respected, dropped tokens zeroed, combine weights
+sum <= 1)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.models.moe import moe_ffn
+from hypothesis import given, settings, strategies as st
+
+from repro.models.moe import moe_ffn, route_tokens
 
 KEY = jax.random.PRNGKey(0)
 
@@ -67,6 +72,75 @@ def test_load_balance_range():
     _, aux = moe_ffn(x, rw, wg, wu, wd, top_k=2, group=64)
     # Switch aux loss is ~top_k for uniform routing, >= 1 always
     assert 0.9 <= float(aux["load_balance"]) < float(E * 2)
+
+
+def test_indivisible_token_count_pads():
+    """ISSUE 4 satellite: T % group != 0 pads (masked) instead of
+    crashing; real tokens match the naive reference, padded tokens never
+    claim capacity."""
+    B, S, D, F, E = 1, 24, 8, 16, 4          # T=24, group=16 -> pad to 32
+    x = jax.random.normal(KEY, (B, S, D))
+    rw, wg, wu, wd = make_weights(jax.random.fold_in(KEY, 5), D, E, F)
+    y, aux = moe_ffn(x, rw, wg, wu, wd, top_k=2,
+                     capacity_factor=float(E), group=16)
+    ref = naive_moe(x, rw, wg, wu, wd, 2)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                               atol=1e-4, rtol=1e-4)
+    assert float(aux["dropped_frac"]) == 0.0
+
+
+def test_padded_groups_leave_aux_unchanged():
+    """The masked aux terms weight each group by its VALID-token share:
+    appending an all-padding group changes nothing."""
+    g, t, D, E = 3, 8, 8, 4
+    xg = jax.random.normal(jax.random.fold_in(KEY, 6), (g, t, D))
+    rw = jax.random.normal(jax.random.fold_in(KEY, 7), (D, E)) * 0.2
+    all_valid = jnp.ones((g, t), bool)
+    _, _, aux = route_tokens(xg, rw, all_valid, top_k=2,
+                             capacity_factor=2.0)
+    xg_pad = jnp.concatenate([xg, jnp.zeros((1, t, D))])
+    v_pad = jnp.concatenate([all_valid, jnp.zeros((1, t), bool)])
+    _, _, aux_pad = route_tokens(xg_pad, rw, v_pad, top_k=2,
+                                 capacity_factor=2.0)
+    np.testing.assert_allclose(float(aux["load_balance"]),
+                               float(aux_pad["load_balance"]), rtol=1e-6)
+    np.testing.assert_allclose(float(aux["dropped_frac"]),
+                               float(aux_pad["dropped_frac"]), atol=1e-7)
+
+
+@given(seed=st.integers(0, 2**16), top_k=st.integers(1, 3),
+       e_pow=st.integers(1, 3), cap_f=st.floats(0.2, 2.0),
+       n_valid=st.integers(1, 32))
+@settings(max_examples=20, deadline=None)
+def test_route_invariants(seed, top_k, e_pow, cap_f, n_valid):
+    """Dispatch invariants: (i) no expert ever receives more than its
+    capacity; (ii) each (expert, slot) holds at most one token; (iii)
+    per-token combine weights sum to <= 1; (iv) dropped and invalid
+    tokens combine to exactly zero."""
+    E = 2 ** e_pow
+    top_k = min(top_k, E)
+    g, t, D = 2, 16, 4
+    key = jax.random.PRNGKey(seed)
+    xg = jax.random.normal(key, (g, t, D))
+    rw = jax.random.normal(jax.random.fold_in(key, 1), (D, E))
+    valid = (jnp.arange(g * t) < n_valid).reshape(g, t)
+    disp, comb, aux = route_tokens(xg, rw, valid, top_k=top_k,
+                                   capacity_factor=cap_f)
+    disp = np.asarray(disp)
+    comb = np.asarray(comb)
+    cap = disp.shape[-1]
+    # (i) per-(group, expert) load <= capacity
+    assert disp.sum((1, 3)).max() <= cap + 1e-6
+    # (ii) each capacity slot holds at most one token
+    assert disp.sum(1).max() <= 1 + 1e-6
+    # (iii) combine weights per token sum to <= 1
+    assert comb.sum((2, 3)).max() <= 1 + 1e-5
+    # (iv) dropped or invalid tokens get zero combine weight
+    routed = disp.sum((2, 3)) > 0
+    assert np.all(comb.sum((2, 3))[~routed] == 0.0)
+    assert np.all(comb[~np.asarray(valid)] == 0.0)
+    assert np.all(disp[~np.asarray(valid)] == 0.0)
+    assert 0.0 <= float(aux["dropped_frac"]) <= 1.0
 
 
 def test_moe_grad_flows_to_router():

@@ -24,8 +24,11 @@ def naive_ssm(u, dt, B, C, A_log, D_skip):
     return np.stack(ys, 1), h
 
 
-@pytest.mark.parametrize("T,chunk", [(32, 32), (32, 8), (64, 16)])
+@pytest.mark.parametrize("T,chunk", [(32, 32), (32, 8), (64, 16),
+                                     (33, 8), (17, 32)])
 def test_ssm_scan_matches_recurrence(T, chunk):
+    """Includes indivisible T (ISSUE 4 satellite): time is padded with
+    dt=0 identity steps, so y AND h_final stay exact."""
     Bt, Di, N = 2, 6, 4
     ks = jax.random.split(KEY, 5)
     u = jax.random.normal(ks[0], (Bt, T, Di))
