@@ -23,6 +23,8 @@ MODULES = [
     ("roofline", "dry-run roofline terms per (arch x shape x mesh)"),
     ("tp_snapshot", "committed BENCH_tp.json: compile time + per-axis "
                     "collective bytes + roofline across PRs"),
+    ("privacy_snapshot", "committed BENCH_privacy.json: MIA AUC (CIs) + "
+                         "DLG MSE vs A / wire / collusion, Thm 3.3 gate"),
 ]
 
 

@@ -14,15 +14,12 @@ import argparse   # noqa: E402
 import time       # noqa: E402
 
 import jax        # noqa: E402
-import jax.numpy as jnp  # noqa: E402
-from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
 from repro.configs import get_config            # noqa: E402
 from repro.data import lm_token_batches         # noqa: E402
-from repro.dist import sharding as sh           # noqa: E402
 from repro.launch.mesh import make_host_mesh    # noqa: E402
 from repro.launch.train import (TrainSettings,  # noqa: E402
-                                make_train_step)
+                                init_dsc_state, make_train_step)
 from repro.models import transformer as tr      # noqa: E402
 from repro.optim import adam                    # noqa: E402
 
@@ -46,19 +43,10 @@ def main():
     step, shardings = make_train_step(cfg, mesh, opt, settings)
 
     params = tr.init_params(KEY, cfg)
-    n_client = 4           # data-axis size = number of aggregators
     with mesh:
         params = jax.device_put(params, shardings["store"])
         opt_state = opt.init(params)     # global view; sharded by the step
-        if args.dsc:
-            dsc_ref = jax.tree.map(
-                lambda p: jnp.zeros((n_client, *p.shape), jnp.float32),
-                params)
-            dsc_ref = jax.device_put(dsc_ref, jax.tree.map(
-                lambda _: NamedSharding(mesh, P("data")), dsc_ref))
-        else:
-            dsc_ref = jax.tree.map(
-                lambda p: jnp.zeros((), jnp.float32), params)
+        dsc_ref = init_dsc_state(cfg, mesh, settings)
 
         toks = lm_token_batches(KEY, 1, 8, 32, cfg.vocab)[0]   # (8, 32)
         batch = {"tokens": toks}

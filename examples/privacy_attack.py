@@ -1,83 +1,53 @@
-"""Privacy demo: run the MIA audit and DLG inversion against ERIS at
-different aggregator counts — the Fig. 2 / Fig. 12 story in one script.
+"""Privacy demo: the empirical Thm 3.3 story in one script — MIA audit
+(with bootstrap CIs) and DLG inversion against the captured adversary
+views at different aggregator counts, wire formats (f32 vs the int8
+round trip, DSC shifted compression) and colluding-coalition sizes.
 
     PYTHONPATH=src python examples/privacy_attack.py
 """
-import jax
-import jax.numpy as jnp
-from jax.flatten_util import ravel_pytree
-
-from repro.core import masks as masks_lib
-from repro.core import privacy
-from repro.core.fl import FLConfig, FLRun
-from repro.data import federated_classification
-
-KEY = jax.random.PRNGKey(0)
+from repro.privacy import harness
 
 
 def main():
-    # ---------------- membership inference (Fig. 2 left) ----------------
-    M, K, dim, classes = 8, 4, 8, 3
-    x, y = federated_classification(KEY, K, 2 * M, dim=dim,
-                                    n_classes=classes)
-    y_can = jax.random.randint(jax.random.fold_in(KEY, 3), y.shape, 0, 3)
-
-    def init(key):
-        k1, k2 = jax.random.split(key)
-        return {"w": 0.3 * jax.random.normal(k1, (dim, classes)),
-                "b": jnp.zeros(classes)}
-
-    def loss_fn(p, batch):
-        xx, yy = batch
-        logp = jax.nn.log_softmax(xx @ p["w"] + p["b"])
-        return -jnp.take_along_axis(logp, yy[:, None], 1).mean()
-
-    print("== Membership inference vs number of aggregators A ==")
+    # ------------- membership inference vs A (Fig. 2 left) --------------
+    kw = dict(rounds=40, lr=0.5, n_canaries=24, n_bootstrap=128)
+    print("== MIA vs number of aggregators A (scan-compiled capture) ==")
     for A in (1, 2, 4, 8):
-        cfg = FLConfig(method="eris", K=K, A=A, rounds=40, lr=0.4, seed=1)
-        run = FLRun(cfg, init(KEY), loss_fn)
-        xs, views = [], []
-        for _ in range(cfg.rounds):
-            xs.append(run.x)
-            views.append(run.step((x[:, :M], y_can[:, :M]),
-                                  collect_views=True)[0])
-        assign = masks_lib.make_assignment(run.n, A, "strided")
-        obs = masks_lib.mask_for(assign, 0)
-        grad_fn = jax.grad(lambda xf, c: loss_fn(
-            run.unravel(xf), (c[:-1][None], c[-1][None].astype(jnp.int32))))
-        members = jnp.concatenate([x[0, :M], y_can[0, :M, None]], 1)
-        non = jnp.concatenate([x[0, M:], y_can[0, M:, None]], 1)
-        res = privacy.mia_audit(KEY, grad_fn, jnp.stack(xs),
-                                jnp.stack(views) * obs, obs, members, non)
-        bound = privacy.mi_bound(run.n, cfg.rounds, 1.0, A)
-        print(f"  A={A}: attack AUC={res['auc']:.3f}   "
-              f"MI bound ∝ {bound:.0f} nats")
+        res = harness.mia_mlp(harness.AuditSpec(A=A, seed=0, **kw), dim=16)
+        lo, hi = res["auc_ci"]
+        print(f"  A={A}: AUC={res['auc']:.3f} [{lo:.3f}, {hi:.3f}]   "
+              f"MI bound ∝ {res['mi_bound']:.0f} nats")
+
+    print("\n== ... with the REAL wire (DSC p=1 + int8 round trip) ==")
+    for A in (1, 8):
+        res = harness.mia_mlp(harness.AuditSpec(
+            A=A, seed=0, use_dsc=True, int8_wire=True, **kw), dim=16)
+        lo, hi = res["auc_ci"]
+        print(f"  A={A}: AUC={res['auc']:.3f} [{lo:.3f}, {hi:.3f}]")
+
+    # ------------------- collusion curve (Fig. 5) -----------------------
+    print("\n== Colluding aggregators at A=8 (Cor. D.2, one vmapped "
+          "sweep) ==")
+    sweep = harness.mia_mlp_collusion_sweep(
+        harness.AuditSpec(A=8, seed=0, **kw), dim=16)
+    for i, a_c in enumerate(sweep["a_c"]):
+        lo, hi = sweep["auc_ci"][i]
+        print(f"  a_c={int(a_c)}: AUC={float(sweep['auc'][i]):.3f} "
+              f"[{lo:.3f}, {hi:.3f}]")
 
     # ------------------- gradient inversion (Fig. 12) -------------------
     print("\n== DLG reconstruction vs A (lower MSE = better attack) ==")
-    dim = 64
-    k1, k2, k3 = jax.random.split(KEY, 3)
-    p0 = {"w1": 0.4 * jax.random.normal(k1, (dim, 4)), "b1": jnp.zeros(4),
-          "w2": 0.4 * jax.random.normal(k2, (4, 4)), "b2": jnp.zeros(4)}
-    x_flat, unravel = ravel_pytree(p0)
+    for wire in ("f32", "int8"):
+        out = harness.dlg_mlp([1, 4, 16], wire=wire, steps=300)
+        row = "  ".join(f"A={A}: {mse:.3f}" for A, mse in out.items())
+        print(f"  {wire:>4} wire:  {row}")
 
-    def loss_single(xf, inp, label):
-        p = unravel(xf)
-        h = jnp.tanh(inp @ p["w1"] + p["b1"])
-        return -jax.nn.log_softmax(h @ p["w2"] + p["b2"])[label]
-
-    grad_fn = jax.grad(loss_single)
-    target = jax.random.normal(k3, (dim,))
-    g_true = grad_fn(x_flat, target, jnp.int32(2))
-    for A in (1, 4, 16):
-        assign = masks_lib.make_assignment(x_flat.shape[0], A, "strided")
-        obs = masks_lib.mask_for(assign, 0)
-        out = privacy.dlg_attack(jax.random.fold_in(KEY, 7), grad_fn,
-                                 x_flat, g_true * obs, obs, (dim,),
-                                 jnp.int32(2), steps=300, lr=0.05)
-        mse = privacy.reconstruction_mse(out["reconstruction"], target)
-        print(f"  A={A}: observed={1/A:.1%} of gradient, "
-              f"reconstruction MSE={mse:.3f}")
+    # ------------- transformer-family (config zoo) attacks --------------
+    print("\n== Transformer (config-zoo tiny member): embedding DLG ==")
+    cfg = harness.tiny_lm_config()
+    out = harness.dlg_lm(cfg, [1, 4, 16], wire="f32", steps=150)
+    for A, mse in out.items():
+        print(f"  A={A}: observed={1/A:.1%}, embedding SI-MSE={mse:.3f}")
 
 
 if __name__ == "__main__":

@@ -57,6 +57,9 @@ class FLConfig:
     link_failure: float = 0.0
     compress_impl: str = "jnp"    # jnp | pallas (fused kernels/dsc_update)
     int8_wire: bool = False       # Pallas int8 wire quantization stage
+    keep_views: bool = False      # materialize (A, K, n) aggregator views
+                                  # (eris: routes through literal FSASharded
+                                  # — the privacy-audit path)
     seed: int = 0
 
 
@@ -74,7 +77,7 @@ class FLRun:
         self.pipeline = rounds_lib.build_round(cfg, self.n)
         self.state: RoundState = self.pipeline.init_state(flat0, cfg.K)
         self._round = jax.jit(self._round_impl)
-        self._scan = None
+        self._scan: dict = {}
 
     # -------------------------------------------------- state conveniences
     @property
@@ -107,17 +110,26 @@ class FLRun:
         self.state, views = self._round(sub, self.state, batches)
         return views if collect_views else None
 
-    def run_scanned(self, batches_stacked):
+    def run_scanned(self, batches_stacked, collect_views: bool = False):
         """Run T rounds (T = leading dim of batches_stacked) as a single
         scan-compiled program.  Trajectory-identical to T ``step`` calls.
-        Returns the per-round model iterates (T, n)."""
-        if self._scan is None:
-            self._scan = jax.jit(
+        Returns the per-round model iterates (T, n); with
+        ``collect_views`` also the stacked per-round adversary views
+        (``(T, A, K, n)`` under ``FLConfig.keep_views``) — the
+        scan-compiled privacy-audit capture."""
+        fn = self._scan.get(collect_views)
+        if fn is None:
+            fn = jax.jit(
                 lambda key, state, bs: self.pipeline.scan_rounds(
                     self._grad, key, state, bs,
-                    participation=self.cfg.participation))
-        self.key, self.state, xs = self._scan(self.key, self.state,
-                                              batches_stacked)
+                    participation=self.cfg.participation,
+                    collect_views=collect_views))
+            self._scan[collect_views] = fn
+        if collect_views:
+            self.key, self.state, xs, views = fn(self.key, self.state,
+                                                 batches_stacked)
+            return xs, views
+        self.key, self.state, xs = fn(self.key, self.state, batches_stacked)
         return xs
 
     def params(self):

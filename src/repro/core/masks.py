@@ -44,6 +44,15 @@ def mask_for(assign: jax.Array, a) -> jax.Array:
     return (assign == a).astype(jnp.float32)
 
 
+def union_mask(assign: jax.Array, coalition) -> jax.Array:
+    """Colluding-coalition view mask (Cor. D.2): the union of the
+    coalition members' masks.  Disjointness makes the union a plain sum,
+    so its density is exactly ``observed_fraction(1.0, A, a_c)`` up to
+    per-mask rounding."""
+    coalition = jnp.asarray(coalition, dtype=jnp.int32)
+    return (assign[None, :] == coalition[:, None]).any(0).astype(jnp.float32)
+
+
 def masks_stacked(assign: jax.Array, A: int) -> jax.Array:
     """All masks as an (A, n) stack (small-n simulator/testing only)."""
     return jax.nn.one_hot(assign, A, dtype=jnp.float32).T

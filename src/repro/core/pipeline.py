@@ -299,7 +299,13 @@ class FSASharded(AggregateStage):
     draw is reproducible and identical across engines.  ``use_dsc`` adds
     the aggregator-side shift compensation of Eq. 4 on the sharded mean
     (u = s_agg + mean; s_agg += gamma mean) — the composition the eris
-    fresh-mask path runs."""
+    fresh-mask path runs.
+
+    ``assign_override`` pins the coordinate->aggregator assignment to an
+    explicit vector instead of a scheme — used by the privacy-audit
+    harness to attack the simulator under the DISTRIBUTED runtime's
+    per-leaf segment layout (``repro.privacy.views.mesh_flat_assignment``),
+    so per-aggregator views are comparable across engines."""
 
     A: int = 4
     mask_scheme: str = "strided"
@@ -308,8 +314,11 @@ class FSASharded(AggregateStage):
     use_dsc: bool = False
     gamma: float = 0.0
     key_role: str = "mask"
+    assign_override: Optional[jax.Array] = None
 
     def assignment(self, keys: RoundKeys, n: int) -> jax.Array:
+        if self.assign_override is not None:
+            return self.assign_override
         if self.fresh_masks:
             return masks_lib.make_assignment(n, self.A, "random",
                                              key=self._key(keys))
@@ -446,14 +455,19 @@ class RoundPipeline:
 
     def scan_rounds(self, grad_fn: Callable, key: jax.Array,
                     state: RoundState, batches_stacked, weights=None,
-                    participation: float = 1.0
-                    ) -> tuple[RoundState, jax.Array]:
+                    participation: float = 1.0,
+                    collect_views: bool = False):
         """All T rounds as ONE compiled program: ``jax.lax.scan`` over the
         leading (round) axis of ``batches_stacked``.  Key handling matches
         the per-round driver (split the carry key once per round), so the
         trajectory is identical to stepping — just without T dispatches
         and T retrace-sized XLA programs.  Returns (final_key, final_state,
-        x_traj) with final_key advanced exactly as T step calls would."""
+        x_traj) with final_key advanced exactly as T step calls would.
+
+        ``collect_views`` additionally stacks the per-round adversary
+        views (the privacy-audit path: e.g. ``FSASharded.keep_views``
+        shard views become one ``(T, A, K, n)`` array out of the single
+        fused program)."""
         K = state.dsc.s_clients.shape[0]
 
         def body(carry, batches_t):
@@ -462,8 +476,17 @@ class RoundPipeline:
             keys = split_round_keys(sub)
             w = weights if weights is not None else \
                 participation_weights(keys.part, K, participation)
-            st, _ = self.run_round(grad_fn, keys, st, batches_t, w)
+            st, views = self.run_round(grad_fn, keys, st, batches_t, w)
+            if collect_views:
+                if views is None:
+                    raise ValueError(
+                        "collect_views: this pipeline exposes no adversary "
+                        "view (view='none' and no aggregate override)")
+                return (k, st), (st.x, views)
             return (k, st), st.x
 
-        (key, state), xs = jax.lax.scan(body, (key, state), batches_stacked)
-        return key, state, xs
+        (key, state), out = jax.lax.scan(body, (key, state), batches_stacked)
+        if collect_views:
+            xs, views = out
+            return key, state, xs, views
+        return key, state, out

@@ -4,9 +4,20 @@
 * ``gaussian_cmax`` — the Gaussian instantiation  C_max <= 1/2 log(1+SNR)
 * ``mia_audit``     — Steinke-style one-run canary auditing, gradient-
                       alignment attacker restricted to the coordinates the
-                      adversary (a single aggregator) actually observes
+                      adversary (an aggregator, or a colluding coalition
+                      of a_c aggregators) actually observes.  Rounds are
+                      consumed under ``lax.scan`` (memory stays O(C * n)
+                      however long the trajectory) and the audit key
+                      drives a bootstrap confidence interval on AUC /
+                      balanced accuracy, so CI gates can compare
+                      intervals instead of point estimates.
+* ``mia_audit_sweep`` — the same audit vmapped over a STACK of
+                      observation masks (per-aggregator, or the colluding
+                      unions of Cor. D.2): one compiled program per
+                      leakage curve.
 * ``dlg_attack``    — DLG gradient-inversion (Zhu et al. 2019) against a
-                      masked observed gradient; reports reconstruction MSE
+                      masked observed gradient; ``dlg_attack_batch``
+                      vmaps it over a canary batch.
 """
 from __future__ import annotations
 
@@ -38,15 +49,9 @@ def observed_fraction(p: float, A: int, a_c: int = 1) -> float:
 
 
 # ----------------------------------------------------------------- MIA audit
-def mia_audit(key: jax.Array,
-              grad_fn: Callable[[jax.Array, jax.Array], jax.Array],
-              x_traj: jax.Array,           # (T, n) model iterates
-              views: jax.Array,            # (T, n) adversary-observed update
-              obs_mask: jax.Array,         # (n,) 0/1 observed coordinates
-              canaries_in: jax.Array,      # (C, ...) member canary samples
-              canaries_out: jax.Array      # (C, ...) non-member canaries
-              ) -> dict:
-    """Gradient-alignment membership inference.
+def _mia_scores(grad_fn: Callable, x_traj: jax.Array, views: jax.Array,
+                obs_mask: jax.Array, all_c: jax.Array) -> jax.Array:
+    """Per-canary alignment scores, rounds folded under ``lax.scan``.
 
     For each canary c, score = sum_t <g~(x^t, c)|_obs, view^t|_obs> / ||view^t|_obs||
     where g~ is the canary gradient CALIBRATED by subtracting the mean
@@ -55,28 +60,98 @@ def mia_audit(key: jax.Array,
     the *view* is normalized (scale-stabilizes across rounds); the canary
     gradient's magnitude is deliberately kept — how strongly a canary
     still pulls on the model is itself membership signal, and dividing it
-    out (a plain cosine) measurably weakens the audit.  Members (whose
-    gradients actually entered the observed update) score higher.
-    Returns AUC-style pairwise accuracy and balanced accuracy at the
-    median threshold — the metric family used for Fig. 2 trends.
+    out (a plain cosine) measurably weakens the audit.
     """
-    del key
-    n_in = canaries_in.shape[0]
-    all_c = jnp.concatenate([canaries_in, canaries_out], axis=0)
-
-    def per_round(x_t, v_t):
+    def per_round(acc, xv):
+        x_t, v_t = xv
         g = jax.vmap(lambda c: grad_fn(x_t, c))(all_c) * obs_mask
         g = g - g.mean(0, keepdims=True)           # calibration
         v = v_t * obs_mask
-        return (g @ v) / (jnp.linalg.norm(v) + 1e-12)
+        return acc + (g @ v) / (jnp.linalg.norm(v) + 1e-12), None
 
-    scores = jax.vmap(per_round)(x_traj, views).sum(0)
-    s_in, s_out = scores[:n_in], scores[n_in:]
+    scores, _ = jax.lax.scan(per_round, jnp.zeros(all_c.shape[0]),
+                             (x_traj, views))
+    return scores
+
+
+def _auc_balacc(s_in: jax.Array, s_out: jax.Array):
     auc = jnp.mean((s_in[:, None] > s_out[None, :]).astype(jnp.float32))
     thresh = jnp.median(jnp.concatenate([s_in, s_out]))
-    bal_acc = 0.5 * (jnp.mean(s_in > thresh) + jnp.mean(s_out <= thresh))
-    return {"auc": float(auc), "balanced_accuracy": float(bal_acc),
-            "score_gap": float(s_in.mean() - s_out.mean())}
+    bal = 0.5 * (jnp.mean(s_in > thresh) + jnp.mean(s_out <= thresh))
+    return auc, bal
+
+
+def _mia_stats(key: jax.Array, grad_fn: Callable, x_traj: jax.Array,
+               views: jax.Array, obs_mask: jax.Array,
+               canaries_in: jax.Array, canaries_out: jax.Array,
+               n_bootstrap: int) -> dict:
+    """Array-valued audit core (vmap-friendly; see :func:`mia_audit`)."""
+    n_in = canaries_in.shape[0]
+    n_out = canaries_out.shape[0]
+    all_c = jnp.concatenate([canaries_in, canaries_out], axis=0)
+    scores = _mia_scores(grad_fn, x_traj, views, obs_mask, all_c)
+    s_in, s_out = scores[:n_in], scores[n_in:]
+    auc, bal = _auc_balacc(s_in, s_out)
+    out = {"auc": auc, "balanced_accuracy": bal,
+           "score_gap": s_in.mean() - s_out.mean()}
+    if n_bootstrap:
+        # percentile bootstrap over canaries (members and non-members
+        # resampled independently, preserving the class sizes)
+        def boot(k):
+            ki, ko = jax.random.split(k)
+            si = s_in[jax.random.randint(ki, (n_in,), 0, n_in)]
+            so = s_out[jax.random.randint(ko, (n_out,), 0, n_out)]
+            return _auc_balacc(si, so)
+
+        aucs, bals = jax.vmap(boot)(jax.random.split(key, n_bootstrap))
+        q = jnp.array([2.5, 97.5])
+        out["auc_ci"] = jnp.percentile(aucs, q)
+        out["bal_acc_ci"] = jnp.percentile(bals, q)
+    return out
+
+
+def mia_audit(key: jax.Array,
+              grad_fn: Callable[[jax.Array, jax.Array], jax.Array],
+              x_traj: jax.Array,           # (T, n) model iterates
+              views: jax.Array,            # (T, n) adversary-observed update
+              obs_mask: jax.Array,         # (n,) 0/1 observed coordinates
+              canaries_in: jax.Array,      # (C, ...) member canary samples
+              canaries_out: jax.Array,     # (C, ...) non-member canaries
+              n_bootstrap: int = 200) -> dict:
+    """Gradient-alignment membership inference (see :func:`_mia_scores`).
+
+    Members (whose gradients actually entered the observed update) score
+    higher.  Returns AUC-style pairwise accuracy and balanced accuracy at
+    the median threshold — the metric family used for Fig. 2 trends —
+    plus 95% bootstrap intervals ``auc_ci`` / ``bal_acc_ci`` keyed on
+    ``key`` (``n_bootstrap=0`` disables them)."""
+    stats = _mia_stats(key, grad_fn, x_traj, views, obs_mask,
+                       canaries_in, canaries_out, n_bootstrap)
+    out = {k: float(v) for k, v in stats.items() if jnp.ndim(v) == 0}
+    for k in ("auc_ci", "bal_acc_ci"):
+        if k in stats:
+            lo, hi = jax.device_get(stats[k])
+            out[k] = (float(lo), float(hi))
+    return out
+
+
+def mia_audit_sweep(key: jax.Array, grad_fn: Callable,
+                    x_traj: jax.Array,        # (T, n)
+                    views: jax.Array,         # (M, T, n) per-mask views
+                    obs_masks: jax.Array,     # (M, n) mask stack
+                    canaries_in: jax.Array, canaries_out: jax.Array,
+                    n_bootstrap: int = 200) -> dict:
+    """One compiled attack suite for a whole leakage curve: the audit
+    vmapped over a stack of observation masks (e.g. every aggregator, or
+    the colluding unions a_c = 1..A of Cor. D.2) with the matching
+    per-mask view trajectories.  Returns arrays of shape (M,) (CIs:
+    (M, 2))."""
+    keys = jax.random.split(key, obs_masks.shape[0])
+    stats = jax.vmap(
+        lambda k, v, m: _mia_stats(k, grad_fn, x_traj, v, m, canaries_in,
+                                   canaries_out, n_bootstrap))(
+        keys, views, obs_masks)
+    return jax.device_get(stats)
 
 
 # ------------------------------------------------------------------ DLG/iDLG
@@ -88,8 +163,9 @@ def dlg_attack(key: jax.Array,
                input_shape: tuple,
                label: jax.Array,            # iDLG: label assumed recovered
                steps: int = 300, lr: float = 0.1) -> dict:
-    """Reconstruct the input from an observed (possibly FSA/DSC-masked)
-    per-sample gradient by gradient matching on observed coordinates."""
+    """Reconstruct the input from an observed (possibly FSA/DSC-masked,
+    possibly int8-wire round-tripped) per-sample gradient by gradient
+    matching on observed coordinates (``lax.scan`` over attack steps)."""
     dummy0 = 0.1 * jax.random.normal(key, input_shape)
 
     def match_loss(dummy):
@@ -108,6 +184,20 @@ def dlg_attack(key: jax.Array,
     (dummy, _), losses = jax.lax.scan(body, (dummy0, state0), None,
                                       length=steps)
     return {"reconstruction": dummy, "match_losses": losses}
+
+
+def dlg_attack_batch(key: jax.Array, grad_fn: Callable, x: jax.Array,
+                     g_obs: jax.Array,       # (C, n) observed gradients
+                     obs_mask: jax.Array, input_shape: tuple,
+                     labels: jax.Array,      # (C,) recovered labels
+                     steps: int = 300, lr: float = 0.1) -> dict:
+    """DLG vmapped over a canary batch: C independent inversions in ONE
+    compiled program (shared model point and mask)."""
+    keys = jax.random.split(key, g_obs.shape[0])
+    return jax.vmap(
+        lambda k, g, lab: dlg_attack(k, grad_fn, x, g, obs_mask,
+                                     input_shape, lab, steps, lr))(
+        keys, g_obs, labels)
 
 
 def reconstruction_mse(recon: jax.Array, target: jax.Array) -> float:

@@ -117,17 +117,27 @@ def _build_eris(cfg, n):
         compress += (EFCompress(compressor=compressor, key_role="comp"),)
     elif int8:
         compress += (Int8Wire(key_role="wire"),)
+    keep_views = getattr(cfg, "keep_views", False)
     if cfg.agg_dropout > 0 or cfg.link_failure > 0:
+        if keep_views:
+            raise ValueError(
+                "keep_views is not supported with failure injection: "
+                "FailureInjectedFSA does not materialize the (A, K, n) "
+                "aggregator views (audit the failure-free wire, or add "
+                "view capture to the failure path)")
         aggregate = FailureInjectedFSA(
             A=cfg.A, mask_scheme=cfg.mask_scheme,
             agg_dropout=cfg.agg_dropout, link_failure=cfg.link_failure,
             use_dsc=cfg.use_dsc, gamma=gamma, key_role="fail")
-    elif getattr(cfg, "fresh_masks", False):
-        # the paper's m^t path: literal FSA with a keyed per-round random
-        # assignment — the same FSASharded stage eris.round_step runs
+    elif getattr(cfg, "fresh_masks", False) or keep_views:
+        # the paper's m^t path and/or the privacy-audit path: literal FSA
+        # (keyed per-round assignment when fresh; ``keep_views``
+        # materializes the (A, K, n) aggregator views) — the same
+        # FSASharded stage eris.round_step runs
         aggregate = FSASharded(
-            A=cfg.A, mask_scheme=cfg.mask_scheme, fresh_masks=True,
-            use_dsc=cfg.use_dsc, gamma=gamma, keep_views=False,
+            A=cfg.A, mask_scheme=cfg.mask_scheme,
+            fresh_masks=getattr(cfg, "fresh_masks", False),
+            use_dsc=cfg.use_dsc, gamma=gamma, keep_views=keep_views,
             key_role="mask")
     elif cfg.use_dsc:
         aggregate = DSCAggregate(gamma=gamma, use_weights=True)

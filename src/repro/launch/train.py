@@ -74,6 +74,10 @@ class TrainSettings:
     dsc_gamma: float = 0.5
     remat: bool = True
     fsa: bool = True                 # False => FedAvg all-reduce baseline
+    capture_views: bool = False      # adversary-view tap: return, per
+                                     # aggregator, the REAL observed wire
+                                     # payload (dequantized int8 segments /
+                                     # grad_dtype rows) as round output
 
 
 def dsc_stage(settings: TrainSettings) -> DSCCompress:
@@ -81,6 +85,29 @@ def dsc_stage(settings: TrainSettings) -> DSCCompress:
     distributed runtime (one DSC implementation, zero drift)."""
     return DSCCompress(compressor=RandP(p=settings.dsc_p),
                        gamma=settings.dsc_gamma)
+
+
+def dsc_spec_tree(cfg: ModelConfig, mesh: Mesh, settings: TrainSettings):
+    """PartitionSpec tree of the DSC shift state — the ONE definition the
+    shard_map specs, the jit in_shardings and ``init_dsc_state`` all
+    derive from.  ``s_clients`` leaves are client-stacked on dim 0
+    (each position holds its own s_k), TP-sharded over 'model' at the
+    leaf's shifted TP dim; ``s_agg`` lives in the params' layout (store
+    under FSA — each aggregator compensates its own segment — else the
+    TP broadcast layout).  Without DSC: a replicated-scalar placeholder
+    tree."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    tp_spec_tree = sh.tp_specs(cfg, int(sizes.get("model", 1)))
+    if not settings.use_dsc:
+        return jax.tree.map(lambda s: P(), tp_spec_tree)
+    ca = sh.client_axes(mesh)
+    caxis = ca if len(ca) > 1 else ca[0]
+    return {
+        "s_clients": jax.tree.map(
+            lambda s: sh.dsc_store_spec(s, caxis), tp_spec_tree),
+        "s_agg": (sh.store_specs(cfg, mesh) if settings.fsa
+                  else sh.tp_param_in_specs(cfg, mesh)),
+    }
 
 
 def _client_size(mesh: Mesh) -> int:
@@ -117,9 +144,13 @@ def _int8_wire_exchange(v: jax.Array, dim: int, seed: jax.Array,
     per-256-block, sends the int8 blocks + f32 scales over the client
     axes (``all_to_all`` — segment a of every client lands on aggregator
     a), dequantizes aggregator-side and reduces.  Returns
-    ``(my_segment_mean f32, v_hat)`` where ``v_hat`` is the local
-    quantized round trip of the FULL leaf (what the aggregators actually
-    received) for DSC shift updates, or None when not requested.
+    ``(my_segment_mean f32, v_hat, rx_rows)`` where ``v_hat`` is the
+    local quantized round trip of the FULL leaf (what the aggregators
+    actually received) for DSC shift updates, or None when not
+    requested, and ``rx_rows`` is the (n_client, m) matrix of dequantized
+    per-client segments this aggregator received — the literal
+    honest-but-curious adversary view of this leaf (the adversary-view
+    tap; dead code unless captured, XLA drops it).
     """
     from repro.kernels import quantize as q_kernel
     lay = sh.wire_layout_for(v.shape, n_client)      # the (block, scale)
@@ -143,10 +174,11 @@ def _int8_wire_exchange(v: jax.Array, dim: int, seed: jax.Array,
     # --- the wire: int8 blocks + f32 scales cross the client axes -------
     q_rx = jax.lax.all_to_all(q, caxis, 0, 0, tiled=True)
     s_rx = jax.lax.all_to_all(scale, caxis, 0, 0, tiled=True)
-    my = deq(q_rx, s_rx).mean(0)                      # aggregator-side sum
+    rx_rows = deq(q_rx, s_rx)                         # (n_client, m) views
+    my = rx_rows.mean(0)                              # aggregator-side sum
     shard_shape = list(v.shape)
     shard_shape[dim] //= n_client
-    return my.reshape(shard_shape), v_hat
+    return my.reshape(shard_shape), v_hat, rx_rows
 
 
 def make_train_step(cfg: ModelConfig, mesh: Mesh, opt: Optimizer,
@@ -202,23 +234,25 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh, opt: Optimizer,
 
         leaves, treedef = jax.tree.flatten(grads)
         stage = dsc_stage(settings) if settings.use_dsc else None
-        refs = jax.tree.leaves(dsc_ref) if settings.use_dsc else [None] * len(leaves)
+        refs = (jax.tree.leaves(dsc_ref["s_clients"]) if settings.use_dsc
+                else [None] * len(leaves))
         dims = (jax.tree.leaves(scatter_dims) if settings.fsa
                 else [-1] * len(leaves))
+        capture = settings.capture_views and settings.fsa
 
         # --- compress + FSA aggregation, leaf-wise ------------------------
         def wire_seed(i):
             k = jax.random.fold_in(jax.random.fold_in(key, 0x3177 + i), aidx)
             return jax.random.bits(k, dtype=jnp.uint32)
 
-        out_leaves, refs_new = [], []
+        out_leaves, refs_new, views = [], [], {}
         for i, (g, s_stk, dim) in enumerate(zip(leaves, refs, dims)):
             int8 = settings.int8_wire and settings.fsa and dim >= 0
             if stage is not None:
                 # client-side shifted compression (Sec. 3.2.2) — the SAME
                 # DSCCompress stage the simulator pipeline runs, leaf-wise.
-                # dsc_ref leaves are client-stacked (n_client, *shape), so
-                # each client-axis position holds its OWN s_k (local (1,)).
+                # s_clients leaves are client-stacked (n_client, *shape),
+                # so each client-axis position holds its OWN s_k ((1,)).
                 k = jax.random.fold_in(jax.random.fold_in(key, i), aidx)
                 s = s_stk[0]
                 if int8:
@@ -226,23 +260,40 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh, opt: Optimizer,
                     # update with what the aggregators actually receive
                     # (the simulator's Int8RoundTrip(inner=RandP)).
                     v = stage.compressor(k, g.astype(s.dtype) - s)
-                    agg, v_hat = _int8_wire_exchange(
+                    agg, v_hat, rx = _int8_wire_exchange(
                         v, dim, wire_seed(i), caxis, n_client,
                         need_round_trip=True)
                     refs_new.append((s + stage.gamma * v_hat)[None])
                     out_leaves.append(agg)
+                    if capture:
+                        views[str(i)] = rx[None]
                     continue
                 v, s_new = stage.apply_leaf(k, g, s)
                 refs_new.append(s_new[None])
                 g = v.astype(g.dtype)
             if int8:
-                agg, _ = _int8_wire_exchange(g, dim, wire_seed(i), caxis,
-                                             n_client, need_round_trip=False)
+                agg, _, rx = _int8_wire_exchange(
+                    g, dim, wire_seed(i), caxis, n_client,
+                    need_round_trip=False)
                 out_leaves.append(agg)
+                if capture:
+                    views[str(i)] = rx[None]
                 continue
             # un-quantized path: reduce-scatter in grad_dtype
             g = g.astype(settings.grad_dtype)
             if settings.fsa and dim >= 0:
+                if capture:
+                    # the tap needs the PER-CLIENT segments, so the
+                    # reduce-scatter lowers to its scatter half (exactly
+                    # like the int8 wire) and the reduction runs
+                    # aggregator-side — same result, exposed payload
+                    rows = sh.split_shards(g, dim, n_client)
+                    rx = jax.lax.all_to_all(rows, caxis, 0, 0, tiled=True)
+                    views[str(i)] = rx[None].astype(jnp.float32)
+                    shard_shape = list(g.shape)
+                    shard_shape[dim] //= n_client
+                    out_leaves.append(rx.mean(0).reshape(shard_shape))
+                    continue
                 g = jax.lax.psum_scatter(g, caxis, scatter_dimension=dim,
                                          tiled=True)
             else:
@@ -251,7 +302,19 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh, opt: Optimizer,
 
         grads = jax.tree.unflatten(treedef, out_leaves)
         if settings.use_dsc:
-            dsc_ref = jax.tree.unflatten(treedef, refs_new)
+            # Eq. 4 aggregator-side shift compensation, on this
+            # aggregator's own segment (every term it needs is local):
+            # u = s_agg + mean_k v_k ;  s_agg <- s_agg + gamma mean_k v_k
+            # — the DSCAggregate/FSASharded(use_dsc) composition the
+            # simulator runs; without it the model update would miss the
+            # mean-shift the clients subtracted.
+            s_agg = dsc_ref["s_agg"]
+            grads = jax.tree.map(lambda s, m: s + m.astype(s.dtype),
+                                 s_agg, grads)
+            s_agg = jax.tree.map(
+                lambda s, u: s + settings.dsc_gamma * (u - s), s_agg, grads)
+            dsc_ref = {"s_clients": jax.tree.unflatten(treedef, refs_new),
+                       "s_agg": s_agg}
 
         # --- shard-local optimizer on this aggregator's segment ----------
         def my_shard(p, dim):
@@ -283,6 +346,8 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh, opt: Optimizer,
         gnorm = jax.lax.psum(gn2, caxis) ** 0.5 \
             if settings.fsa else jnp.sqrt(gn2)
         metrics = {"loss": loss_val.astype(jnp.float32), "grad_norm": gnorm}
+        if capture:
+            return params_shard, opt_state, dsc_ref, metrics, views
         return params_shard, opt_state, dsc_ref, metrics
 
     # ------------------------- shard_map specs ---------------------------
@@ -302,11 +367,19 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh, opt: Optimizer,
         params_abs,
         jax.tree.leaves(param_specs, is_leaf=lambda x: isinstance(x, P)),
         opt_abs_local, P())
-    # DSC refs are client-stacked on dim 0 -> shard dim 0 over the client
-    # axes, TP-sharded over 'model' at each leaf's (shifted) TP dim
-    dsc_specs = jax.tree.map(
-        lambda s: sh.dsc_store_spec(s, caxis) if settings.use_dsc else P(),
-        tp_spec_tree)
+    dsc_specs = dsc_spec_tree(cfg, mesh, settings)
+    # adversary-view tap: each captured leaf is the (1, n_client, m)
+    # per-client received-segment matrix of ONE aggregator; the leading
+    # dim shards over the client axes (global (A, K, m)), the flattened
+    # segment concatenates over 'model' (TP-local segments)
+    if settings.capture_views and settings.fsa:
+        view_spec = (P(caxis, None, "model")
+                     if "model" in mesh.axis_names else P(caxis))
+        view_specs = {str(i): view_spec
+                      for i, d in enumerate(jax.tree.leaves(scatter_dims))
+                      if d >= 0}
+    else:
+        view_specs = None
 
     def make_step():
         def step(params_stored, opt_state, dsc_ref, batch, key):
@@ -326,6 +399,8 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh, opt: Optimizer,
                         P())
             out_specs = (param_specs, opt_specs, dsc_specs,
                          {"loss": P(), "grad_norm": P()})
+            if view_specs is not None:
+                out_specs = out_specs + (view_specs,)
             fn = _shard_map(
                 functools.partial(fsa_body, model_split=model_split), mesh,
                 in_specs=in_specs, out_specs=out_specs)
@@ -347,18 +422,49 @@ def abstract_train_state(cfg: ModelConfig, mesh: Mesh, opt: Optimizer,
     scatter dim) and the shard_map specs do the slicing; optimizer/DSC
     state never materializes unsharded on a device (ZeRO-style).
     """
-    n_client = _client_size(mesh) if settings.fsa else 1
+    n_client = _client_size(mesh)
     params = jax.eval_shape(
         functools.partial(tr.init_params, cfg=cfg), jax.random.PRNGKey(0))
     opt_state_global = jax.eval_shape(opt.init, params)
     if settings.use_dsc:
-        dsc_global = jax.tree.map(
-            lambda p: jax.ShapeDtypeStruct((n_client, *p.shape),
-                                           jnp.float32), params)
+        dsc_global = {
+            "s_clients": jax.tree.map(
+                lambda p: jax.ShapeDtypeStruct((n_client, *p.shape),
+                                               jnp.float32), params),
+            "s_agg": jax.tree.map(
+                lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32),
+                params),
+        }
     else:
         dsc_global = jax.tree.map(
             lambda p: jax.ShapeDtypeStruct((), jnp.float32), params)
     return params, opt_state_global, dsc_global
+
+
+def init_dsc_state(cfg: ModelConfig, mesh: Mesh,
+                   settings: TrainSettings):
+    """Materialize the (sharded) DSC shift state: zero client refs
+    stacked over the client axes + a zero aggregator-side shift in the
+    params' store layout (or a replicated-scalar tree when DSC is off —
+    the step function's placeholder).  Layout = :func:`dsc_spec_tree`."""
+    params_abs = jax.eval_shape(
+        functools.partial(tr.init_params, cfg=cfg), jax.random.PRNGKey(0))
+    if not settings.use_dsc:
+        return jax.tree.map(lambda p: jnp.zeros((), jnp.float32),
+                            params_abs)
+    n_client = _client_size(mesh)
+    refs = {
+        "s_clients": jax.tree.map(
+            lambda p: jnp.zeros((n_client, *p.shape), jnp.float32),
+            params_abs),
+        "s_agg": jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params_abs),
+    }
+    shardings = jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        dsc_spec_tree(cfg, mesh, settings),
+        is_leaf=lambda x: isinstance(x, P))
+    return jax.device_put(refs, shardings)
 
 
 def lower_train_step(cfg: ModelConfig, mesh: Mesh,
@@ -375,13 +481,9 @@ def lower_train_step(cfg: ModelConfig, mesh: Mesh,
     store = shardings["store"]
     opt_sh = sh.opt_state_shardings(cfg, mesh, opt, params)
     rep = NamedSharding(mesh, P())
-    ca = sh.client_axes(mesh)
-    caxis = ca if len(ca) > 1 else ca[0]
-    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
-    dsc_sh = jax.tree.map(
-        lambda s: NamedSharding(mesh, sh.dsc_store_spec(s, caxis))
-        if settings.use_dsc else rep,
-        sh.tp_specs(cfg, int(sizes.get("model", 1))))
+    dsc_sh = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                          dsc_spec_tree(cfg, mesh, settings),
+                          is_leaf=lambda x: isinstance(x, P))
     key = jax.ShapeDtypeStruct((2,), jnp.uint32)
     jitted = jax.jit(
         step,
@@ -425,21 +527,11 @@ def main():  # pragma: no cover - thin CLI over the factories
                              int8_wire=args.int8_wire)
     step, shardings = make_train_step(cfg, mesh, opt, settings)
     key = jax.random.PRNGKey(0)
-    n_client = _client_size(mesh)
     with mesh:
         params = jax.device_put(tr.init_params(key, cfg),
                                 shardings["store"])
         opt_state = opt.init(params)
-        if args.dsc:
-            dsc_ref = jax.tree.map(
-                lambda p: jnp.zeros((n_client, *p.shape), jnp.float32),
-                params)
-            dsc_ref = jax.device_put(dsc_ref, jax.tree.map(
-                lambda _: NamedSharding(
-                    mesh, P(sh.client_axes(mesh)[0])), dsc_ref))
-        else:
-            dsc_ref = jax.tree.map(lambda p: jnp.zeros((), jnp.float32),
-                                   params)
+        dsc_ref = init_dsc_state(cfg, mesh, settings)
         toks = lm_token_batches(key, 1, args.batch, args.seq, cfg.vocab)[0]
         batch = {"tokens": toks}
         jstep = jax.jit(step)

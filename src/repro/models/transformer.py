@@ -379,7 +379,8 @@ def embed_inputs(params, cfg: ModelConfig, tokens,
 
 def forward(params, cfg: ModelConfig, tokens, frontend_embeds=None,
             mode: str = "train", window: Optional[int] = None,
-            remat: bool = True, tp: Optional[TPRuntime] = None):
+            remat: bool = True, tp: Optional[TPRuntime] = None,
+            inputs_embeds=None):
     """Full-sequence forward.  Returns (logits, caches, aux).
 
     caches is the per-layer stacked decode state when mode == 'prefill'.
@@ -392,6 +393,11 @@ def forward(params, cfg: ModelConfig, tokens, frontend_embeds=None,
     sequence-parallel plan the residual stream between TP regions is
     (B, S/tp, D); the logits come back full-sequence (the unembed
     gathers), so the loss path is unchanged.
+
+    ``inputs_embeds`` (B, S, D) bypasses the token-embedding lookup — the
+    continuous-input hook the DLG gradient-inversion attack optimizes
+    over (``repro.privacy``); ``tokens`` still supplies positions and CE
+    targets.  Replicated path only (``tp`` must be None).
     """
     seq = tp is not None and tp.plan.seq
     if seq:
@@ -400,7 +406,13 @@ def forward(params, cfg: ModelConfig, tokens, frontend_embeds=None,
             raise ValueError(
                 f"sequence-parallel plan needs seq_len divisible by the "
                 f"model axis: {s_full} % {tp.size} != 0")
-    x = embed_inputs(params, cfg, tokens, frontend_embeds, tp)
+    if inputs_embeds is not None:
+        if tp is not None:
+            raise ValueError("inputs_embeds is a replicated-path hook "
+                             "(attack/simulator side); tp must be None")
+        x = inputs_embeds
+    else:
+        x = embed_inputs(params, cfg, tokens, frontend_embeds, tp)
     B = x.shape[0]
     S = x.shape[1] * (tp.size if seq else 1)    # full sequence length
     positions = jnp.broadcast_to(jnp.arange(S), (B, S))
@@ -438,7 +450,7 @@ def loss_fn(params, cfg: ModelConfig, batch, window=None,
     tokens = batch["tokens"]
     logits, _, aux = forward(params, cfg, tokens,
                              batch.get("frontend_embeds"), "train", window,
-                             tp=tp)
+                             tp=tp, inputs_embeds=batch.get("inputs_embeds"))
     # align: for VLM, logits cover [img; text]; predict text tokens only
     n_pre = cfg.n_frontend_tokens if cfg.frontend == "vlm" else 0
     logits = logits[:, n_pre:, :]

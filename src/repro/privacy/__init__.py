@@ -1,0 +1,21 @@
+"""Empirical privacy-audit subsystem (Thm 3.3 / Cor. D.2, Figs. 2 & 12).
+
+``repro.core.privacy`` holds the attack primitives (MIA audit with
+bootstrap CIs, DLG inversion, the MI bound algebra).  This package turns
+them into an *audit harness* against what an adversary REALLY observes:
+
+* ``views``   — adversary-view geometry: the coordinate->aggregator
+  assignment induced by the distributed runtime's per-leaf segment
+  layout, reassembly of captured ``launch/train.py`` view payloads into
+  the simulator's flat ``(A, K, n)`` form, and colluding-coalition
+  unions.
+* ``harness`` — scan-compiled audit runs: capture views from the
+  simulator/scan engines (``FLConfig.keep_views``) or the distributed
+  tap (``TrainSettings.capture_views``), sweep attacks over A and
+  coalition size, and report leakage curves for the benchmark snapshot
+  and the CI monotonicity gate.
+"""
+from repro.privacy import harness, views                       # noqa: F401
+from repro.privacy.views import (colluding_view,               # noqa: F401
+                                 flat_views_from_leaves,
+                                 mesh_flat_assignment, view_layouts)

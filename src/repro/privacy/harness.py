@@ -1,0 +1,318 @@
+"""Scan-compiled privacy-audit harness (Figs. 2, 5, 12 as a subsystem).
+
+Runs the attack suites of ``repro.core.privacy`` against *captured*
+adversary views — the ``(T, A, K, n)`` per-aggregator shard views the
+scan engine materializes in one fused program (``FLConfig.keep_views`` +
+``FLRun.run_scanned(collect_views=True)``) — for both the small-model
+(MLP) problems of the paper's figures and transformer-family models from
+the config zoo (token-sequence canaries for the MIA audit, continuous
+input-embedding reconstruction for DLG via ``forward(inputs_embeds=...)``).
+
+Everything is keyed on an :class:`AuditSpec`, so the benchmark snapshot
+(``benchmarks/privacy_snapshot.py``), the tier-1 quick audit tests and
+the nightly monotonicity gate all draw from the same runs.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.flatten_util import ravel_pytree
+
+from repro.core import masks as masks_lib
+from repro.core import privacy
+from repro.core.compressors import Identity, Int8RoundTrip, RandP
+from repro.core.fl import FLConfig, FLRun
+
+
+@dataclasses.dataclass(frozen=True)
+class AuditSpec:
+    """One privacy-audit configuration (a point on a leakage curve)."""
+
+    A: int = 4                 # aggregators
+    rounds: int = 30           # T
+    K: int = 4                 # clients
+    n_canaries: int = 8        # members == non-members == n_canaries
+    use_dsc: bool = False      # DSC shifted compression on the wire
+    int8_wire: bool = False    # int8 wire round trip in the payload
+    p: float = 1.0             # DSC RandP retention (Fig. 2 right)
+    a_c: int = 1               # colluding coalition size (Cor. D.2)
+    lr: float = 0.4
+    seed: int = 0
+    mask_scheme: str = "strided"
+    n_bootstrap: int = 200     # bootstrap resamples for the AUC CI
+
+
+def fl_config(spec: AuditSpec) -> FLConfig:
+    """The eris run whose views the audit attacks: literal FSA with
+    materialized aggregator views, composing DSC and/or the int8 wire
+    exactly as the production wire does."""
+    comp = RandP(p=spec.p) if (spec.use_dsc and spec.p < 1.0) else Identity()
+    return FLConfig(method="eris", K=spec.K, A=spec.A, rounds=spec.rounds,
+                    lr=spec.lr, seed=spec.seed, use_dsc=spec.use_dsc,
+                    int8_wire=spec.int8_wire, compressor=comp,
+                    mask_scheme=spec.mask_scheme, keep_views=True)
+
+
+def capture_run(spec: AuditSpec, params0, loss_fn, client_batches):
+    """Run T rounds in ONE scan-compiled program and capture the
+    adversary views.  Returns (run, x_traj (T, n) PRE-round iterates,
+    views (T, A, K, n))."""
+    run = FLRun(fl_config(spec), params0, loss_fn)
+    stacked = jax.tree.map(
+        lambda b: jnp.stack([b] * spec.rounds), client_batches)
+    x0 = run.x
+    xs, views = run.run_scanned(stacked, collect_views=True)
+    x_traj = jnp.concatenate([x0[None], xs[:-1]], axis=0)
+    return run, x_traj, views
+
+
+def coalition_views(views, assign, a_c: int, client: int = 0):
+    """(obs_mask, observed view trajectory) for the union of the first
+    ``a_c`` aggregators' views of one client (Cor. D.2 coalition)."""
+    coalition = jnp.arange(a_c)
+    obs = masks_lib.union_mask(assign, coalition)
+    v = views[:, :a_c, client, :].sum(axis=1)       # (T, n) disjoint union
+    return obs, v
+
+
+def dsc_gamma_of(run: FLRun) -> float:
+    """Effective DSC step of the run's compress stage (0.0 without DSC)."""
+    from repro.core.pipeline import DSCCompress
+    for st in run.pipeline.compress:
+        if isinstance(st, DSCCompress):
+            return st.gamma
+    return 0.0
+
+
+def deshift_views(v_tn: jax.Array, gamma: float) -> jax.Array:
+    """Protocol-aware adversary against DSC: the client shift updates
+    s_{t+1} = s_t + gamma v_t from TRANSMITTED values only (s_0 = 0), so
+    an aggregator reconstructs, coordinate-wise on its own mask, the
+    un-shifted payload  g~_t = v_t + gamma * sum_{tau<t} v_tau  exactly —
+    shifted compression re-codes the wire, it does not hide the gradient
+    from a curious aggregator.  Identity when gamma == 0."""
+    if gamma == 0.0:
+        return v_tn
+
+    def body(s, v):
+        return s + gamma * v, v + s
+
+    _, g = jax.lax.scan(body, jnp.zeros_like(v_tn[0]), v_tn)
+    return g
+
+
+# ------------------------------------------------------- MLP (Fig. 2/5)
+def mlp_model(dim: int = 8, classes: int = 3, hidden: int = 16):
+    def init(key):
+        k1, k2 = jax.random.split(key)
+        return {"w1": 0.3 * jax.random.normal(k1, (dim, hidden)),
+                "b1": jnp.zeros(hidden),
+                "w2": 0.3 * jax.random.normal(k2, (hidden, classes)),
+                "b2": jnp.zeros(classes)}
+
+    def loss_fn(p, batch):
+        xx, yy = batch
+        h = jnp.tanh(xx @ p["w1"] + p["b1"])
+        logits = h @ p["w2"] + p["b2"]
+        return -jnp.take_along_axis(jax.nn.log_softmax(logits),
+                                    yy[:, None], 1).mean()
+
+    return init, loss_fn
+
+
+def mlp_canary_problem(spec: AuditSpec, dim: int = 8, classes: int = 3,
+                       hidden: int = 16):
+    """Steinke-style one-run canary setup: OOD Gaussian inputs with
+    random labels; the first half of client 0's canaries train (members,
+    memorized), the second half is held out."""
+    key = jax.random.PRNGKey(spec.seed)
+    M = spec.n_canaries
+    init, loss_fn = mlp_model(dim, classes, hidden)
+    x = jax.random.normal(jax.random.fold_in(key, 2),
+                          (spec.K, 2 * M, dim))                  # OOD
+    y_can = jax.random.randint(jax.random.fold_in(key, 3),
+                               (spec.K, 2 * M), 0, classes)
+    batches = (x[:, :M], y_can[:, :M])
+    members = jnp.concatenate([x[0, :M], y_can[0, :M, None]], axis=1)
+    non = jnp.concatenate([x[0, M:], y_can[0, M:, None]], axis=1)
+    params0 = init(key)
+    return params0, loss_fn, batches, members, non
+
+
+def _audit_captured(spec: AuditSpec, run, x_traj, views, grad_fn,
+                    members, non, key_salt: int) -> dict:
+    """The shared audit plumbing: coalition union -> protocol-aware
+    de-shift -> ``mia_audit`` -> Thm 3.3 bound (one definition for every
+    model family, so the MLP and transformer curves cannot diverge)."""
+    assign = masks_lib.make_assignment(run.n, spec.A, spec.mask_scheme)
+    obs, v = coalition_views(views, assign, spec.a_c)
+    v = deshift_views(v, dsc_gamma_of(run))
+    res = privacy.mia_audit(
+        jax.random.fold_in(jax.random.PRNGKey(spec.seed), key_salt),
+        grad_fn, x_traj, v, obs, members, non,
+        n_bootstrap=spec.n_bootstrap)
+    res["mi_bound"] = privacy.mi_bound(
+        run.n, spec.rounds, spec.p if spec.use_dsc else 1.0, spec.A,
+        a_c=spec.a_c)
+    return res
+
+
+def mia_mlp(spec: AuditSpec, dim: int = 8, classes: int = 3) -> dict:
+    """MIA audit of the captured views under ``spec``.  Returns the
+    ``core.privacy.mia_audit`` metrics + the matching Thm 3.3 bound."""
+    params0, loss_fn, batches, members, non = mlp_canary_problem(
+        spec, dim, classes)
+    run, x_traj, views = capture_run(spec, params0, loss_fn, batches)
+    grad_fn = jax.grad(lambda xf, c: loss_fn(
+        run.unravel(xf), (c[:-1][None], c[-1][None].astype(jnp.int32))))
+    return _audit_captured(spec, run, x_traj, views, grad_fn, members,
+                           non, 0xA0D1)
+
+
+def mia_mlp_collusion_sweep(spec: AuditSpec, dim: int = 8,
+                            classes: int = 3) -> dict:
+    """ONE captured run, the whole Cor. D.2 collusion curve: the audit
+    vmapped (``mia_audit_sweep``) over the coalition unions
+    a_c = 1..A.  Returns arrays indexed by a_c - 1."""
+    params0, loss_fn, batches, members, non = mlp_canary_problem(
+        spec, dim, classes)
+    run, x_traj, views = capture_run(spec, params0, loss_fn, batches)
+    assign = masks_lib.make_assignment(run.n, spec.A, spec.mask_scheme)
+    gamma = dsc_gamma_of(run)
+    masks, vs = [], []
+    for a_c in range(1, spec.A + 1):
+        obs, v = coalition_views(views, assign, a_c)
+        masks.append(obs)
+        vs.append(deshift_views(v, gamma))
+    grad_fn = jax.grad(lambda xf, c: loss_fn(
+        run.unravel(xf), (c[:-1][None], c[-1][None].astype(jnp.int32))))
+    out = privacy.mia_audit_sweep(
+        jax.random.fold_in(jax.random.PRNGKey(spec.seed), 0xC011),
+        grad_fn, x_traj, jnp.stack(vs), jnp.stack(masks), members, non,
+        n_bootstrap=spec.n_bootstrap)
+    out["a_c"] = np.arange(1, spec.A + 1)
+    return out
+
+
+def dlg_mlp(A_values, wire: str = "f32", seed: int = 0, dim: int = 36,
+            classes: int = 3, steps: int = 400, lr: float = 0.05) -> dict:
+    """DLG inversion strength vs A for one wire format ('f32' or 'int8'
+    — the int8 payload is the dequantized per-block round trip, exactly
+    what an aggregator receives).  Returns {A: scale-invariant MSE}."""
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    params0 = {"w": 0.5 * jax.random.normal(k1, (dim, classes)),
+               "b": jnp.zeros(classes)}
+    x_flat, unravel = ravel_pytree(params0)
+
+    def loss_single(xf, inp, label):
+        p = unravel(xf)
+        return -jax.nn.log_softmax(inp @ p["w"] + p["b"])[label]
+
+    grad_fn = jax.grad(loss_single)
+    target = jax.random.normal(k2, (dim,))
+    label = jnp.int32(1)
+    g_true = grad_fn(x_flat, target, label)
+    if wire == "int8":
+        g_wire = Int8RoundTrip(inner=Identity())(k4, g_true)
+    elif wire == "f32":
+        g_wire = g_true
+    else:
+        raise ValueError(f"unknown wire format {wire!r}")
+    out = {}
+    for A in A_values:
+        assign = masks_lib.make_assignment(x_flat.shape[0], A, "strided")
+        obs = masks_lib.mask_for(assign, 0)
+        rec = privacy.dlg_attack(k3, grad_fn, x_flat, g_wire * obs, obs,
+                                 (dim,), label, steps=steps, lr=lr)
+        out[A] = privacy.reconstruction_mse(rec["reconstruction"], target)
+    return out
+
+
+# ------------------------------------- transformer family (config zoo)
+def tiny_lm_config(arch: str = "qwen2-0.5b"):
+    """A CPU-sized member of the config zoo's family (one block below
+    ``smoke()``) — small enough that (T, A, K, n) view capture fits in a
+    quick-tier test."""
+    import dataclasses as dc
+    from repro.configs import get_config
+    cfg = get_config(arch).smoke()
+    return dc.replace(cfg, name=cfg.name + "-audit", n_layers=1,
+                      d_model=64, n_heads=2, n_kv_heads=2, head_dim=32,
+                      d_ff=128, vocab=256, qkv_bias=False, qk_norm=False,
+                      attn_chunk=16)
+
+
+def lm_canary_problem(cfg, spec: AuditSpec, seq: int = 16):
+    """Token-sequence canaries for a transformer: random sequences, the
+    member half trains as client 0's corpus (low-data memorization
+    regime), the non-member half is held out."""
+    from repro.models import transformer as tr
+    key = jax.random.PRNGKey(spec.seed)
+    M = spec.n_canaries
+    canaries = jax.random.randint(jax.random.fold_in(key, 1),
+                                  (2 * M, seq), 0, cfg.vocab)
+    filler = jax.random.randint(jax.random.fold_in(key, 2),
+                                (spec.K - 1, M, seq), 0, cfg.vocab)
+    batches = {"tokens": jnp.concatenate([canaries[None, :M], filler], 0)}
+    params0 = tr.init_params(key, cfg)
+
+    def loss_fn(p, batch):
+        return tr.loss_fn(p, cfg, batch)
+
+    return params0, loss_fn, batches, canaries[:M], canaries[M:]
+
+
+def mia_lm(cfg, spec: AuditSpec, seq: int = 16) -> dict:
+    """MIA audit against a transformer-family model's captured views
+    (canary = token sequence; gradient alignment on the ravel'd
+    parameter vector, rounds folded under ``lax.scan``)."""
+    from repro.models import transformer as tr
+    params0, loss_fn, batches, members, non = lm_canary_problem(
+        cfg, spec, seq)
+    run, x_traj, views = capture_run(spec, params0, loss_fn, batches)
+    grad_fn = jax.grad(lambda xf, c: tr.loss_fn(
+        run.unravel(xf), cfg, {"tokens": c[None]}))
+    return _audit_captured(spec, run, x_traj, views, grad_fn, members,
+                           non, 0xA0D2)
+
+
+def dlg_lm(cfg, A_values, wire: str = "f32", seed: int = 0, seq: int = 8,
+           steps: int = 200, lr: float = 0.05) -> dict:
+    """DLG against a transformer: reconstruct the continuous input
+    embeddings of one training sequence from the observed (masked, wire-
+    formatted) parameter gradient via ``forward(inputs_embeds=...)``.
+    Returns {A: scale-invariant MSE vs the true embeddings}."""
+    from repro.models import transformer as tr
+    key = jax.random.PRNGKey(seed)
+    params0 = tr.init_params(jax.random.fold_in(key, 1), cfg)
+    x_flat, unravel = ravel_pytree(params0)
+    tokens = jax.random.randint(jax.random.fold_in(key, 2), (1, seq),
+                                0, cfg.vocab)
+    emb_true = params0["embed"][tokens[0]]
+
+    def grad_fn(xf, dummy, label_toks):
+        return jax.grad(lambda f: tr.loss_fn(
+            unravel(f), cfg,
+            {"tokens": label_toks, "inputs_embeds": dummy}))(xf)
+
+    g_true = grad_fn(x_flat, emb_true[None], tokens)
+    if wire == "int8":
+        g_wire = Int8RoundTrip(inner=Identity())(
+            jax.random.fold_in(key, 3), g_true)
+    else:
+        g_wire = g_true
+    out = {}
+    for A in A_values:
+        assign = masks_lib.make_assignment(x_flat.shape[0], A, "strided")
+        obs = masks_lib.mask_for(assign, 0)
+        rec = privacy.dlg_attack(jax.random.fold_in(key, 4), grad_fn,
+                                 x_flat, g_wire * obs, obs,
+                                 (1, seq, cfg.d_model), tokens,
+                                 steps=steps, lr=lr)
+        out[A] = privacy.reconstruction_mse(rec["reconstruction"][0],
+                                            emb_true)
+    return out

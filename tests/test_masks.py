@@ -1,0 +1,181 @@
+"""Property tests for the FSA mask algebra (Section 3.2.1) — every
+assignment scheme must partition all n coordinates exactly once, coalition
+unions must match the Thm 3.3 observed fraction, and the mesh-induced
+assignment must mirror the distributed runtime's segment layout."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core import masks as masks_lib
+from repro.core import privacy
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ------------------------------------------------- partition properties
+@given(n=st.integers(4, 257), A=st.integers(1, 9),
+       scheme=st.sampled_from(["strided", "contiguous", "random"]))
+@settings(max_examples=25, deadline=None)
+def test_assignment_partitions_every_coordinate_once(n, A, scheme):
+    key = jax.random.fold_in(KEY, n * 31 + A) if scheme == "random" else None
+    assign = masks_lib.make_assignment(n, A, scheme, key=key)
+    m = masks_lib.masks_stacked(assign, A)
+    # completeness: every coordinate covered exactly once
+    np.testing.assert_array_equal(np.asarray(m.sum(0)), np.ones(n))
+    # disjointness: pairwise products vanish
+    assert masks_lib.check_disjoint_complete(assign, A)
+    # values live in [0, A)
+    a = np.asarray(assign)
+    assert a.min() >= 0 and a.max() < A
+    # shard sizes balanced to within 1 for strided
+    if scheme == "strided":
+        sizes = np.asarray(masks_lib.shard_sizes(assign, A))
+        assert sizes.max() - sizes.min() <= 1
+
+
+@given(n=st.integers(16, 200), A=st.integers(2, 8),
+       scheme=st.sampled_from(["strided", "contiguous"]))
+@settings(max_examples=20, deadline=None)
+def test_mask_for_disjoint_across_aggregators(n, A, scheme):
+    """``mask_for`` never double-books a coordinate, for both strided and
+    block (contiguous) assignments."""
+    assign = masks_lib.make_assignment(n, A, scheme)
+    total = sum(np.asarray(masks_lib.mask_for(assign, a)) for a in range(A))
+    np.testing.assert_array_equal(total, np.ones(n))
+    for a in range(A):
+        for b in range(a + 1, A):
+            overlap = (np.asarray(masks_lib.mask_for(assign, a))
+                       * np.asarray(masks_lib.mask_for(assign, b)))
+            assert overlap.sum() == 0
+
+
+# ------------------------------------------- coalition union densities
+@given(n=st.integers(32, 400), A=st.integers(2, 8), a_c=st.integers(1, 8))
+@settings(max_examples=20, deadline=None)
+def test_union_density_matches_observed_fraction(n, A, a_c):
+    """|union of a_c colluders' masks| / n == observed_fraction(1, A, a_c)
+    up to the per-mask rounding of at most 1 coordinate each."""
+    a_c = min(a_c, A)
+    assign = masks_lib.make_assignment(n, A, "strided")
+    union = np.asarray(masks_lib.union_mask(assign, jnp.arange(a_c)))
+    assert set(np.unique(union)) <= {0.0, 1.0}
+    expected = privacy.observed_fraction(1.0, A, a_c) * n
+    assert abs(union.sum() - expected) <= a_c
+
+
+@given(A=st.integers(2, 8), a_c=st.integers(1, 4),
+       p=st.sampled_from([0.2, 0.5, 1.0]))
+@settings(max_examples=10, deadline=None)
+def test_randp_composed_density_matches_observed_fraction(A, a_c, p):
+    """Composing a RandP(p) payload with the coalition union: the expected
+    fraction of OBSERVED nonzero coordinates is p * a_c / A (the Thm 3.3
+    retention term), within binomial tolerance."""
+    from repro.core.compressors import RandP
+    a_c = min(a_c, A)
+    n = 4096
+    assign = masks_lib.make_assignment(n, A, "strided")
+    union = masks_lib.union_mask(assign, jnp.arange(a_c))
+    v = jnp.ones(n)
+    observed = np.asarray(RandP(p=p)(jax.random.fold_in(KEY, A * 10 + a_c),
+                                     v) * union)
+    frac = privacy.observed_fraction(p, A, a_c)
+    got = (observed != 0).sum()
+    sigma = np.sqrt(max(n * frac * (1 - frac), 1.0))
+    assert abs(got - frac * n) <= 5 * sigma + a_c
+
+
+# -------------------------------------------------- mesh-induced masks
+def test_mesh_assignment_mirrors_segment_layout():
+    """``privacy.views.mesh_flat_assignment`` partitions every coordinate
+    of segment-sharded leaves exactly once, maps psum-fallback leaves to
+    -1, and ``flat_views_from_leaves`` reassembles ``split_shards`` rows
+    into exactly the masked flat vector — the geometry contract between
+    the distributed tap and the simulator's (A, K, n) views."""
+    from repro.dist.sharding import split_shards
+    from repro.privacy import views as pv
+    params = {"w": jnp.arange(24.0).reshape(2, 12),
+              "b": jnp.arange(100.0, 108.0),
+              "odd": jnp.arange(3.0)}       # 3 not divisible by n_client=4
+    n_client = 4
+    assign = pv.mesh_flat_assignment(params, n_client)
+    flat = np.concatenate([np.asarray(v).ravel()
+                           for v in jax.tree.leaves(params)])
+    assert assign.shape == flat.shape
+    covered = assign >= 0
+    # the indivisible leaf is psum-fallback (-1); the rest partition
+    assert (~covered).sum() == 3
+    sizes = np.bincount(assign[covered], minlength=n_client)
+    assert sizes.sum() == covered.sum() and (sizes > 0).all()
+    # captured split_shards rows reassemble to the masked flat vector
+    leaves = jax.tree.leaves(params)
+    layouts = pv.view_layouts(params, n_client)
+    captured = {str(lay.index): np.asarray(
+        split_shards(jnp.asarray(leaves[lay.index]), lay.dim, n_client)
+    )[:, None, :] for lay in layouts if lay.dim >= 0}     # K=1 client
+    flat_v = pv.flat_views_from_leaves(captured, params, n_client)
+    assert flat_v.shape == (n_client, 1, flat.shape[0])
+    for a in range(n_client):
+        np.testing.assert_allclose(flat_v[a, 0],
+                                   np.where(assign == a, flat, 0.0))
+
+
+def test_mesh_assignment_and_reassembly_under_tp():
+    """tp > 1 geometry: the tap emits, per captured leaf, the model
+    positions' segment rows concatenated along the last dim (the
+    shard_map out-spec places 'model' there, mesh-position order ==
+    contiguous-chunk order).  Reassembly must land every value on its
+    flat coordinate — for TP-sharded leaves (disjoint model chunks) AND
+    model-replicated leaves (duplicate chunks, first one read)."""
+    from repro.dist.sharding import split_shards
+    from repro.models.shard_plan import TPSpec
+    from repro.privacy import views as pv
+    n_client, tp, K = 4, 2, 3
+    params = {"w": jnp.arange(48.0).reshape(2, 24),     # TP col @ dim 1
+              "b": jnp.arange(100.0, 116.0)}            # replicated
+    specs = {"w": TPSpec(dim=1, kind="col"),
+             "b": TPSpec(dim=-1, kind="replicate")}
+    flat = np.concatenate([np.asarray(v).ravel()
+                           for v in jax.tree.leaves(params)])
+    assign = pv.mesh_flat_assignment(params, n_client, tp=tp,
+                                     tp_specs=specs)
+    assert (assign >= 0).all()
+
+    def emulate_tap(leaf, spec):
+        """What fsa_body captures for one client: per model position,
+        split_shards of the TP-LOCAL leaf, concatenated on the last dim
+        (duplicate chunks for replicated leaves)."""
+        chunks = (jnp.split(leaf, tp, axis=spec.dim) if spec.dim >= 0
+                  else [leaf] * tp)
+        dim_l = pv.scatter_dim_for(chunks[0].shape, n_client)
+        return np.concatenate(
+            [np.asarray(split_shards(c, dim_l, n_client))
+             for c in chunks], axis=-1)
+
+    # K clients transmit scaled copies so client identity is checkable
+    captured = {}
+    for i, (name, leaf) in enumerate(sorted(params.items())):
+        rows = emulate_tap(leaf, specs[name])            # (A, tp*m_loc)
+        captured[str(i)] = np.stack(
+            [(k + 1) * rows for k in range(K)], axis=1)  # (A, K, ...)
+    flat_v = pv.flat_views_from_leaves(captured, params, n_client,
+                                       tp=tp, tp_specs=specs)
+    assert flat_v.shape == (n_client, K, flat.shape[0])
+    for a in range(n_client):
+        for k in range(K):
+            np.testing.assert_allclose(
+                flat_v[a, k],
+                np.where(assign == a, (k + 1) * flat, 0.0))
+
+
+def test_colluding_view_union():
+    from repro.privacy import views as pv
+    v = np.zeros((3, 2, 6))
+    v[0, :, 0] = 1.0
+    v[2, :, 5] = 2.0
+    got = pv.colluding_view(v, [0, 2])
+    assert got.shape == (2, 6)
+    np.testing.assert_allclose(got[:, 0], 1.0)
+    np.testing.assert_allclose(got[:, 5], 2.0)
+    assert got[:, 1:5].sum() == 0

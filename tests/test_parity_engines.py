@@ -229,6 +229,128 @@ def _run_parity(int8: bool) -> dict:
     return json.loads(line[len("PARITY"):])
 
 
+VIEW_PARITY_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import dataclasses as dc
+    import json
+    import jax, jax.numpy as jnp
+    import numpy as np
+    from jax.flatten_util import ravel_pytree
+    from repro.core.compressors import RandP
+    from repro.core.fl import FLConfig, FLRun
+    from repro.data import lm_token_batches
+    from repro.launch.mesh import make_host_mesh
+    from repro.launch.train import (TrainSettings, init_dsc_state,
+                                    make_train_step)
+    from repro.models import transformer as tr
+    from repro.optim import sgd
+    from repro.privacy import views as pv
+    from repro.privacy.harness import tiny_lm_config
+
+    LR, STEPS, A = 0.05, 3, 4
+    KEY = jax.random.PRNGKey(0)
+    cfg = tiny_lm_config()
+    toks = lm_token_batches(KEY, 1, 8, 32, cfg.vocab)[0]
+    batch = {"tokens": toks}
+    params0 = tr.init_params(KEY, cfg)
+    params_abs = jax.eval_shape(lambda k: tr.init_params(k, cfg), KEY)
+    # the flat assignment induced by the mesh's per-leaf segment layout;
+    # every tiny-lm leaf has a 4-divisible dim, so it is complete
+    assign = pv.mesh_flat_assignment(params_abs, A)
+    assert (assign >= 0).all()
+
+    # ---- simulator + scan engines under the SAME (mesh) masks ----------
+    # RandP(p=1) == the distributed dsc_p=1.0 stage, deterministically
+    fl_cfg = FLConfig(method="eris", K=A, A=A, lr=LR, use_dsc=True,
+                      gamma=0.5, int8_wire=True, keep_views=True,
+                      rounds=STEPS, compressor=RandP(p=1.0))
+    loss_fn = lambda p, b: tr.loss_fn(p, cfg, b)
+    client_batches = {"tokens": toks.reshape(A, 2, 32)}
+    def with_mesh_masks(run):
+        agg = dc.replace(run.pipeline.aggregate,
+                         assign_override=jnp.asarray(assign))
+        run.pipeline = dc.replace(run.pipeline, aggregate=agg)
+        return run
+    sim = with_mesh_masks(FLRun(fl_cfg, params0, loss_fn))
+    sim_views = [np.asarray(sim.step(client_batches, collect_views=True))
+                 for _ in range(STEPS)]
+    scan = with_mesh_masks(FLRun(fl_cfg, params0, loss_fn))
+    stacked = jax.tree.map(lambda x: jnp.stack([x] * STEPS),
+                           client_batches)
+    _, scan_views = scan.run_scanned(stacked, collect_views=True)
+
+    # ---- distributed runtime: adversary-view tap on (4 data, 1 model) --
+    mesh = make_host_mesh(data=A, model=1)
+    settings = TrainSettings(grad_dtype="float32", int8_wire=True,
+                             use_dsc=True, dsc_p=1.0, dsc_gamma=0.5,
+                             capture_views=True)
+    step, shardings = make_train_step(cfg, mesh, sgd(LR), settings)
+    with mesh:
+        params = jax.device_put(params0, shardings["store"])
+        opt_state = sgd(LR).init(params)
+        dsc_ref = init_dsc_state(cfg, mesh, settings)
+        jstep = jax.jit(step)
+        dist_views = []
+        for i in range(STEPS):
+            params, opt_state, dsc_ref, m, v = jstep(
+                params, opt_state, dsc_ref, batch, jax.random.PRNGKey(i))
+            dist_views.append(pv.flat_views_from_leaves(
+                jax.device_get(v), params_abs, A))
+    out = {
+        "assign": assign.tolist(),
+        "sim": np.stack(sim_views).tolist(),
+        "scan": np.asarray(scan_views).tolist(),
+        "dist": np.stack(dist_views).tolist(),
+        "sim_x": np.asarray(sim.x).tolist(),
+        "scan_x": np.asarray(scan.x).tolist(),
+        "dist_x": np.asarray(
+            ravel_pytree(jax.device_get(params))[0]).tolist(),
+        "x0": np.asarray(ravel_pytree(params0)[0]).tolist(),
+    }
+    print("VIEWS" + json.dumps(out))
+""")
+
+
+@pytest.mark.slow
+def test_three_engines_adversary_views_agree():
+    """ISSUE 5 satellite: the per-aggregator views captured from the
+    simulator (``keep_views``), the scan engine (``collect_views``) and
+    the distributed runtime's tap (``capture_views``) agree for
+    eris x DSC x int8-wire — same masks (the simulator pinned to the
+    mesh-induced assignment via ``assign_override``), values within the
+    int8 round-trip band (independent stochastic-rounding draws), and
+    supports exactly disjoint.  Also gates the Eq. 4 aggregator-side
+    shift fix: final params of all three engines coincide."""
+    r = subprocess.run([sys.executable, "-c", VIEW_PARITY_SCRIPT],
+                       capture_output=True, text=True, timeout=900,
+                       env=SUBPROC_ENV)
+    assert r.returncode == 0, r.stderr[-3000:]
+    line = [ln for ln in r.stdout.splitlines() if ln.startswith("VIEWS")][-1]
+    out = json.loads(line[len("VIEWS"):])
+    sim, scan, dist = (np.asarray(out[k], dtype=np.float32)
+                       for k in ("sim", "scan", "dist"))
+    assign = np.asarray(out["assign"])
+    # engines sharing the stage list agree exactly
+    np.testing.assert_allclose(scan, sim, rtol=1e-5, atol=1e-6)
+    # the distributed tap lands inside the int8 rounding band, view-for-
+    # view: (T, A, K, n) aligned per aggregator thanks to the shared masks
+    np.testing.assert_allclose(dist, sim, atol=3e-2)
+    assert np.abs(dist - sim).mean() < 1e-3
+    # per-aggregator supports: exactly zero off each aggregator's mask
+    for a in range(dist.shape[1]):
+        assert np.abs(dist[:, a][:, :, assign != a]).max() == 0
+        assert np.abs(sim[:, a][:, :, assign != a]).max() == 0
+    # Eq. 4 end-to-end: the DSC-compensated distributed model follows the
+    # simulator (quantization tolerance), and everyone actually moved
+    sim_x, dist_x, x0 = (np.asarray(out[k])
+                         for k in ("sim_x", "dist_x", "x0"))
+    np.testing.assert_allclose(np.asarray(out["scan_x"]), sim_x,
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(dist_x, sim_x, atol=1e-2)
+    assert np.abs(sim_x - x0).max() > 1e-3
+
+
 @pytest.mark.slow
 @pytest.mark.parametrize("int8", [False])
 def test_three_engines_agree(int8):
