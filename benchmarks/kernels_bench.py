@@ -59,6 +59,25 @@ def run(quick: bool = True):
                  "us_per_call": us,
                  "derived": f"n={n} wire_bytes={n + 4*n//256} "
                             f"compression_vs_bf16={2*n/(n+4*n//256):.2f}x"})
+    # fused vs unfused DSC->int8 wire: the unfused chain (mask/shift ->
+    # quantize -> dequantize -> shift update) sweeps HBM four times; the
+    # one-pass kernels/dsc_quantize does everything per VMEM block.
+    # Wall time below is the composed jnp reference (what the fused
+    # kernel replaces); the HBM accounting is the TPU-side expectation.
+    fused = jax.jit(lambda g, s: ref.dsc_quantize_ref(
+        g, s, jnp.uint32(5), jnp.uint32(7), p=0.1, gamma=0.5))
+    us = time_call(fused, g, s)
+    scale_b = 4 * n // 256
+    unfused_b = n * (12 + 5 + 5 + 12) + 2 * scale_b   # 4 sweeps + scales
+    fused_b = n * (4 + 4 + 1 + 4) + scale_b           # g,s in; q,s' out
+    rows.append({"name": "kernels/dsc_quantize_fused_vs_unfused",
+                 "us_per_call": us,
+                 "derived": f"n={n} unfused_hbm_B/coord="
+                            f"{unfused_b/n:.2f} fused_hbm_B/coord="
+                            f"{fused_b/n:.2f} "
+                            f"sweep_reduction={unfused_b/fused_b:.2f}x "
+                            f"tpu_time_at_819GBps_us="
+                            f"{fused_b/819e9*1e6:.1f}"})
     B, H, S, d = (1, 4, 1024, 64) if quick else (4, 16, 4096, 128)
     qkv = [jax.random.normal(jax.random.fold_in(KEY, i), (B, H, S, d))
            for i in range(3)]
@@ -69,4 +88,21 @@ def run(quick: bool = True):
                  "us_per_call": us,
                  "derived": f"BHSd={B}x{H}x{S}x{d} flops={flops:.2e} "
                             f"tpu_time_at_197TFs_us={flops/197e12*1e6:.1f}"})
+    # flash vs naive training-forward HBM traffic: naive materializes the
+    # S x S score matrix to HBM across the softmax sweeps (and again in
+    # the backward); flash re-reads K/V per query block and never spills
+    # scores.  Wall time is the naive jnp path flash replaces.
+    block_q = 128
+    qkv_b = 3 * B * H * S * d * 4
+    naive_b = qkv_b + B * H * S * S * 4 * 4 + B * H * S * d * 4
+    flash_b = qkv_b + (S // block_q - 1) * 2 * B * H * S * d * 4 \
+        + B * H * S * d * 4
+    rows.append({"name": "kernels/flash_vs_naive_attention",
+                 "us_per_call": us,
+                 "derived": f"BHSd={B}x{H}x{S}x{d} "
+                            f"naive_hbm_B={naive_b:.3e} "
+                            f"flash_hbm_B={flash_b:.3e} "
+                            f"hbm_reduction={naive_b/flash_b:.1f}x "
+                            f"tpu_time_at_819GBps_us="
+                            f"{flash_b/819e9*1e6:.1f}"})
     return rows

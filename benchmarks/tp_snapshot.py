@@ -15,7 +15,12 @@ Each entry keys ``{arch}/{shape}/{mesh}[/{tag}]`` and carries:
 * ``wire_dtype`` — the FSA exchange's on-mesh dtype
 * ``axis_bytes`` / ``axis_counts`` — per-axis {kind: payload bytes /
   trip-weighted op count} from the HLO replica groups (model vs client)
-* ``roofline`` — the three roofline terms (s) + dominant + MFU bound
+* ``roofline`` — the roofline terms (s, incl. the overlapped-collective
+  credit) + dominant + MFU bound
+
+Run as a script with ``--check`` (the nightly job does) to regenerate
+AND gate: any entry whose ``roofline.mfu_upper_bound`` falls more than
+``MFU_REGRESSION_THRESHOLD`` below the committed snapshot fails the run.
 """
 from __future__ import annotations
 
@@ -25,6 +30,30 @@ from pathlib import Path
 from benchmarks.roofline import DRYRUN_DIR, analyze_record
 
 SNAPSHOT = Path(__file__).resolve().parent.parent / "BENCH_tp.json"
+
+# nightly gate: a lowering change may not cost more than this fraction of
+# any entry's roofline MFU upper bound (deterministic — derived from HLO
+# byte/FLOP counts, not wall-clock, so it is safe to gate on in CI)
+MFU_REGRESSION_THRESHOLD = 0.10
+
+
+def check_mfu_regression(committed: dict, fresh: dict,
+                         threshold: float = MFU_REGRESSION_THRESHOLD):
+    """Entries whose regenerated ``roofline.mfu_upper_bound`` fell more
+    than ``threshold`` below the committed snapshot's value.  Only keys
+    present on both sides are compared (new entries have no baseline;
+    stale committed entries have no fresh record)."""
+    failures = []
+    for key in sorted(set(committed) & set(fresh)):
+        old = committed[key].get("roofline", {}).get("mfu_upper_bound")
+        new = fresh[key].get("roofline", {}).get("mfu_upper_bound")
+        if not old or not new:
+            continue
+        if new < old * (1.0 - threshold):
+            failures.append(
+                f"{key}: mfu_upper_bound {old:.5f} -> {new:.5f} "
+                f"({(new / old - 1.0) * 100:+.1f}%, gate -{threshold:.0%})")
+    return failures
 
 
 def snapshot_from_records(records: list[dict]) -> dict:
@@ -100,6 +129,27 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--dryrun-dir", default=None)
     ap.add_argument("--out", default=str(SNAPSHOT))
+    ap.add_argument("--check", action="store_true",
+                    help="fail (exit 1) when any regenerated entry's "
+                         "roofline.mfu_upper_bound regresses more than "
+                         f"{MFU_REGRESSION_THRESHOLD:.0%} below the "
+                         "committed snapshot")
     args = ap.parse_args()
-    snap = write_snapshot(args.dryrun_dir, Path(args.out))
-    print(f"wrote {len(snap)} entries to {args.out}")
+    d = Path(args.dryrun_dir) if args.dryrun_dir else DRYRUN_DIR
+    records = [json.loads(f.read_text()) for f in sorted(d.glob("*.json"))]
+    fresh = snapshot_from_records(records)
+    path = Path(args.out)
+    committed = json.loads(path.read_text()) if path.exists() else {}
+    snap = {**committed, **fresh}
+    if snap:
+        path.write_text(json.dumps(snap, indent=1, sort_keys=True) + "\n")
+    print(f"wrote {len(snap)} entries to {args.out} "
+          f"({len(fresh)} regenerated)")
+    if args.check:
+        fails = check_mfu_regression(committed, fresh)
+        for msg in fails:
+            print(f"MFU REGRESSION: {msg}")
+        if fails:
+            raise SystemExit(1)
+        print(f"mfu gate OK: {len(set(committed) & set(fresh))} entries "
+              f"within {MFU_REGRESSION_THRESHOLD:.0%} of committed")

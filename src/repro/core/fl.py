@@ -55,7 +55,8 @@ class FLConfig:
     shatter_r: int = 4
     agg_dropout: float = 0.0      # appendix F.5 failure injection
     link_failure: float = 0.0
-    compress_impl: str = "jnp"    # jnp | pallas (fused kernels/dsc_update)
+    compress_impl: str = "jnp"    # jnp | pallas (kernels/dsc_update) | fused
+                                  # (one-pass kernels/dsc_quantize, int8+DSC)
     int8_wire: bool = False       # Pallas int8 wire quantization stage
     keep_views: bool = False      # materialize (A, K, n) aggregator views
                                   # (eris: routes through literal FSASharded

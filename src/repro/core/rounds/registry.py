@@ -104,11 +104,13 @@ def _build_eris(cfg, n):
     if int8 and (cfg.use_dsc or cfg.use_ef):
         # wire format INSIDE the shifted/error-feedback compressor, so the
         # client references update with exactly what aggregators receive
-        # (otherwise s_agg random-walks away from mean_k s_k).  The fused
-        # pallas DSC kernel computes a bare RandP; the composed compressor
-        # needs the jnp path.
+        # (otherwise s_agg random-walks away from mean_k s_k).
+        # ``compress_impl='fused'`` keeps the whole composition in the
+        # one-pass ``kernels/dsc_quantize`` kernel; the plain 'pallas'
+        # DSC kernel computes a bare RandP, so anything else routes
+        # through the composed jnp compressor.
         compressor = Int8RoundTrip(inner=compressor)
-        impl = "jnp"
+        impl = "fused" if impl == "fused" else "jnp"
     compress: tuple = ()
     if cfg.use_dsc:
         compress += (DSCCompress(compressor=compressor, gamma=gamma,

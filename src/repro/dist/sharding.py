@@ -186,6 +186,20 @@ def dsc_store_spec(tp_leaf: TPSpec, caxis) -> P:
     return P(*parts)
 
 
+def shift_state_dtype(name: str):
+    """Residency dtype of the DSC shift state (s_clients / s_agg) — the
+    one knob ``TrainSettings.shift_dtype`` threads through the store
+    layout.  bf16 halves the resident shift bytes (2 full model copies
+    per client position otherwise); the fused wire kernels widen to f32
+    on the fly inside VMEM, so only the HBM store narrows."""
+    dt = jnp.dtype(name)
+    if dt not in (jnp.dtype(jnp.float32), jnp.dtype(jnp.bfloat16),
+                  jnp.dtype(jnp.float16)):
+        raise ValueError(f"shift_dtype must be a float store dtype, "
+                         f"got {name!r}")
+    return dt
+
+
 def tp_param_in_specs(cfg, mesh: Mesh) -> Any:
     """shard_map in_specs for the parameter broadcast: sharded over
     ``model`` at each leaf's TP dim, replicated over the client axes (the

@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.common import uniform_from_index
+from repro.kernels.common import largest_divisor, uniform_from_index
 
 LANES = 1024          # 8 * 128
 BLOCK_ROWS = 256      # (256, 1024) f32 tile = 1 MiB in / 2 MiB out of VMEM
@@ -45,12 +45,18 @@ def _kernel(g_ref, s_ref, seed_ref, v_ref, s_out_ref, *, p, gamma, lanes):
 def dsc_update(g, s, seed, *, p: float, gamma: float,
                block_rows: int = BLOCK_ROWS, interpret: bool = False):
     """g: (n,) any float dtype; s: (n,) float32; seed: uint32 scalar.
-    n must be a multiple of 1024 (pad upstream).  Returns (v, s')."""
+    Ragged n is zero-padded internally to a 1024 multiple: the padded
+    tail has g = s = 0, so v = 0 and s' = 0 there regardless of the mask
+    draw, and the first n coordinates match the unpadded oracle exactly
+    (the RNG is indexed by the global flat position, which padding does
+    not displace).  Returns (v, s'), both length n."""
     n = g.shape[0]
-    assert n % LANES == 0, n
-    rows = n // LANES
-    block_rows = min(block_rows, rows)
-    assert rows % block_rows == 0, (rows, block_rows)
+    pad = (-n) % LANES
+    if pad:
+        g = jnp.pad(g, (0, pad))
+        s = jnp.pad(s, (0, pad))
+    rows = (n + pad) // LANES
+    block_rows = largest_divisor(rows, min(block_rows, rows))
     grid = (rows // block_rows,)
     g2 = g.reshape(rows, LANES)
     s2 = s.reshape(rows, LANES)
@@ -71,4 +77,4 @@ def dsc_update(g, s, seed, *, p: float, gamma: float,
         out_shape=out_shapes,
         interpret=interpret,
     )(g2, s2, seed_arr)
-    return v.reshape(n), s_new.reshape(n)
+    return v.reshape(-1)[:n], s_new.reshape(-1)[:n]

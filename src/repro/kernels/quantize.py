@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.common import uniform_from_index
+from repro.kernels.common import largest_divisor, uniform_from_index
 
 QBLOCK = 256          # coords per scale
 BLOCK_B = 1024        # quant blocks per grid step
@@ -54,12 +54,17 @@ def _dequant_kernel(q_ref, scale_ref, x_ref):
 
 
 def quantize(x, seed, *, block_b: int = BLOCK_B, interpret: bool = False):
-    """x: (n,) float, n % 256 == 0.  Returns (q int8 (n,), scales (n/256,))."""
+    """x: (n,) float.  Ragged n zero-pads to the next 256 multiple (the
+    wire layout `wire_payload_bytes` accounts for; zeros quantize to 0
+    deterministically and never move a block scale).  Returns
+    (q int8 (padded_n,), scales (padded_n/256,)), matching the oracle's
+    padded layout."""
     n = x.shape[0]
-    assert n % QBLOCK == 0, n
-    nb = n // QBLOCK
-    block_b = min(block_b, nb)
-    assert nb % block_b == 0, (nb, block_b)
+    pad = (-n) % QBLOCK
+    if pad:
+        x = jnp.pad(x, (0, pad))
+    nb = (n + pad) // QBLOCK
+    block_b = largest_divisor(nb, min(block_b, nb))
     x2 = x.reshape(nb, QBLOCK)
     seed_arr = jnp.asarray([seed], jnp.uint32) if jnp.ndim(seed) == 0 \
         else seed.astype(jnp.uint32)
@@ -74,14 +79,14 @@ def quantize(x, seed, *, block_b: int = BLOCK_B, interpret: bool = False):
                    jax.ShapeDtypeStruct((nb,), jnp.float32)),
         interpret=interpret,
     )(x2, seed_arr)
-    return q.reshape(n), scale
+    return q.reshape(-1), scale
 
 
 def dequantize(q, scale, *, block_b: int = BLOCK_B, interpret: bool = False):
     n = q.shape[0]
+    assert n % QBLOCK == 0, n
     nb = n // QBLOCK
-    block_b = min(block_b, nb)
-    assert nb % block_b == 0
+    block_b = largest_divisor(nb, min(block_b, nb))
     out = pl.pallas_call(
         _dequant_kernel,
         grid=(nb // block_b,),

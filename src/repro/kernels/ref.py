@@ -53,17 +53,44 @@ def dequantize_ref(q, scale, block: int = 256):
     return (qb * scale[:, None]).reshape(-1)
 
 
+# ------------------------------------------------- fused DSC -> int8 wire
+def dsc_quantize_ref(g, s, seed_mask, seed_round, *, p: float, gamma: float,
+                     block: int = 256):
+    """Oracle for the one-pass fused wire kernel: RandP mask-draw on the
+    shifted difference, per-block stochastic int8 of the sparsified
+    update, and a shift update that tracks the DEQUANTIZED value (so the
+    shift state sees exactly what crosses the wire — the Int8RoundTrip
+    composition of Definition 3.1 compressors).
+
+    g, s: (n,) float32 with n % block == 0 (callers pad).
+    Returns (q int8 (n,), scales f32 (n/block,), s_new f32 (n,))."""
+    n = g.size
+    idx = jnp.arange(n, dtype=jnp.uint32)
+    u = uniform_from_index(idx, seed_mask)
+    diff = g.astype(jnp.float32) - s
+    v = jnp.where(u < p, diff / p, 0.0)
+    q, scale = quantize_ref(v, seed_round, block)
+    v_hat = dequantize_ref(q, scale, block)[:n]
+    return q, scale, s + gamma * v_hat
+
+
 # -------------------------------------------------------- flash attention
-def flash_attention_ref(q, k, v, *, causal: bool = True):
-    """Naive attention oracle.  q: (B, H, Sq, d); k/v: (B, H, Skv, d)."""
-    d = q.shape[-1]
-    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32)
+def flash_attention_ref(q, k, v, *, causal: bool = True, window=None):
+    """Naive attention oracle.  q: (B, H, Sq, d); k/v: (B, KV, Skv, d)
+    with H % KV == 0 (grouped-query); differentiable (pure jnp)."""
+    B, H, Sq, d = q.shape
+    KV, Skv = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, Sq, d)
+    scores = jnp.einsum("bkgqd,bksd->bkgqs", qg, k).astype(jnp.float32)
     scores = scores * (d ** -0.5)
-    if causal:
-        Sq, Skv = q.shape[2], k.shape[2]
+    if causal or window is not None:
         qpos = jnp.arange(Sq)[:, None] + (Skv - Sq)
-        mask = jnp.arange(Skv)[None, :] <= qpos
+        kpos = jnp.arange(Skv)[None, :]
+        mask = kpos <= qpos if causal else jnp.ones((Sq, Skv), bool)
+        if window is not None:
+            mask &= kpos > qpos - window
         scores = jnp.where(mask, scores, -jnp.inf)
     w = jax.nn.softmax(scores, axis=-1)
-    return jnp.einsum("bhqk,bhkd->bhqd", w, v.astype(jnp.float32)
-                      ).astype(q.dtype)
+    return jnp.einsum("bkgqs,bksd->bkgqd", w, v.astype(jnp.float32)
+                      ).reshape(B, H, Sq, d).astype(q.dtype)

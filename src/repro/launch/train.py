@@ -72,6 +72,13 @@ class TrainSettings:
     use_dsc: bool = False            # client-side shifted rand-p compression
     dsc_p: float = 0.1
     dsc_gamma: float = 0.5
+    fused_wire: bool = True          # int8+DSC leaves through the one-pass
+                                     # kernels/dsc_quantize kernel (mask,
+                                     # shift-subtract, quantize, shift
+                                     # update in a single VMEM sweep)
+    shift_dtype: str = "float32"     # DSC shift-state residency (bf16
+                                     # halves the resident s_k/s_agg bytes;
+                                     # kernels widen to f32 on the fly)
     remat: bool = True
     fsa: bool = True                 # False => FedAvg all-reduce baseline
     capture_views: bool = False      # adversary-view tap: return, per
@@ -181,6 +188,49 @@ def _int8_wire_exchange(v: jax.Array, dim: int, seed: jax.Array,
     return my.reshape(shard_shape), v_hat, rx_rows
 
 
+def _fused_wire_exchange(g: jax.Array, s: jax.Array, dim: int,
+                         seed_mask: jax.Array, seed_round: jax.Array,
+                         caxis, n_client: int, p: float, gamma: float):
+    """The int8+DSC wire stage for one leaf through the one-pass
+    ``kernels/dsc_quantize`` kernel.
+
+    Splits gradient AND shift state into the n_client FSA segments, runs
+    mask-draw / shift-subtract / per-256-block stochastic int8 / shift
+    update in a single VMEM sweep per segment batch (2 reads + the int8
+    payload + 1 write, vs the compressor->quantize->dequantize chain's ~7
+    HBM sweeps of the leaf), then ships the int8 blocks + f32 scales over
+    the client axes exactly like :func:`_int8_wire_exchange`.  The shift
+    state tracks the dequantized wire value in-register (the simulator's
+    ``Int8RoundTrip`` composition).  Returns
+    ``(my_segment_mean f32, s_new, rx_rows)``.
+    """
+    from repro.kernels import dsc_quantize as dq_kernel
+    from repro.kernels import quantize as q_kernel
+    lay = sh.wire_layout_for(g.shape, n_client)
+    m, mp = lay.shard_elems, lay.padded_elems
+    g_rows = jnp.pad(sh.split_shards(g.astype(jnp.float32), dim, n_client),
+                     ((0, 0), (0, mp - m)))
+    s_rows = jnp.pad(sh.split_shards(s.astype(jnp.float32), dim, n_client),
+                     ((0, 0), (0, mp - m)))
+    block_b = _quant_block_b(n_client * lay.n_blocks)
+    q, scale, s_new_flat = dq_kernel.dsc_quantize(
+        g_rows.reshape(-1), s_rows.reshape(-1), seed_mask, seed_round,
+        p=p, gamma=gamma, block_b=block_b, interpret=_interpret())
+    q = q.reshape(n_client, mp)
+    scale = scale.reshape(n_client, lay.n_blocks)
+    s_new = sh.merge_shards(s_new_flat.reshape(n_client, mp)[:, :m],
+                            dim, g.shape, n_client).astype(s.dtype)
+    # --- the wire: int8 blocks + f32 scales cross the client axes -------
+    q_rx = jax.lax.all_to_all(q, caxis, 0, 0, tiled=True)
+    s_rx = jax.lax.all_to_all(scale, caxis, 0, 0, tiled=True)
+    rx = q_kernel.dequantize(q_rx.reshape(-1), s_rx.reshape(-1),
+                             block_b=block_b, interpret=_interpret())
+    rx_rows = rx.reshape(n_client, mp)[:, :m]
+    shard_shape = list(g.shape)
+    shard_shape[dim] //= n_client
+    return rx_rows.mean(0).reshape(shard_shape), s_new, rx_rows
+
+
 def make_train_step(cfg: ModelConfig, mesh: Mesh, opt: Optimizer,
                     settings: TrainSettings = TrainSettings()):
     """Returns (train_step, shardings dict)."""
@@ -255,6 +305,20 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh, opt: Optimizer,
                 # so each client-axis position holds its OWN s_k ((1,)).
                 k = jax.random.fold_in(jax.random.fold_in(key, i), aidx)
                 s = s_stk[0]
+                if int8 and settings.fused_wire:
+                    # one-pass kernel: mask-draw + shift-subtract +
+                    # quantize + round-trip shift update in a single VMEM
+                    # sweep of the leaf (the wire payload and Eq. 4
+                    # semantics are identical to the chain below)
+                    agg, s_new, rx = _fused_wire_exchange(
+                        g, s, dim, jax.random.bits(k, dtype=jnp.uint32),
+                        wire_seed(i), caxis, n_client,
+                        p=settings.dsc_p, gamma=settings.dsc_gamma)
+                    refs_new.append(s_new[None])
+                    out_leaves.append(agg)
+                    if capture:
+                        views[str(i)] = rx[None]
+                    continue
                 if int8:
                     # wire format INSIDE the shifted compressor: s_k must
                     # update with what the aggregators actually receive
@@ -263,7 +327,8 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh, opt: Optimizer,
                     agg, v_hat, rx = _int8_wire_exchange(
                         v, dim, wire_seed(i), caxis, n_client,
                         need_round_trip=True)
-                    refs_new.append((s + stage.gamma * v_hat)[None])
+                    refs_new.append((s + stage.gamma * v_hat
+                                     ).astype(s.dtype)[None])
                     out_leaves.append(agg)
                     if capture:
                         views[str(i)] = rx[None]
@@ -427,13 +492,13 @@ def abstract_train_state(cfg: ModelConfig, mesh: Mesh, opt: Optimizer,
         functools.partial(tr.init_params, cfg=cfg), jax.random.PRNGKey(0))
     opt_state_global = jax.eval_shape(opt.init, params)
     if settings.use_dsc:
+        sdt = sh.shift_state_dtype(settings.shift_dtype)
         dsc_global = {
             "s_clients": jax.tree.map(
-                lambda p: jax.ShapeDtypeStruct((n_client, *p.shape),
-                                               jnp.float32), params),
-            "s_agg": jax.tree.map(
-                lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32),
+                lambda p: jax.ShapeDtypeStruct((n_client, *p.shape), sdt),
                 params),
+            "s_agg": jax.tree.map(
+                lambda p: jax.ShapeDtypeStruct(p.shape, sdt), params),
         }
     else:
         dsc_global = jax.tree.map(
@@ -453,12 +518,12 @@ def init_dsc_state(cfg: ModelConfig, mesh: Mesh,
         return jax.tree.map(lambda p: jnp.zeros((), jnp.float32),
                             params_abs)
     n_client = _client_size(mesh)
+    sdt = sh.shift_state_dtype(settings.shift_dtype)
     refs = {
         "s_clients": jax.tree.map(
-            lambda p: jnp.zeros((n_client, *p.shape), jnp.float32),
-            params_abs),
+            lambda p: jnp.zeros((n_client, *p.shape), sdt), params_abs),
         "s_agg": jax.tree.map(
-            lambda p: jnp.zeros(p.shape, jnp.float32), params_abs),
+            lambda p: jnp.zeros(p.shape, sdt), params_abs),
     }
     shardings = jax.tree.map(
         lambda s: NamedSharding(mesh, s),

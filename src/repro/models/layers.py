@@ -121,6 +121,134 @@ def _tp_psum_bwd(axis, _, ct):
 tp_psum.defvjp(_tp_psum_fwd, _tp_psum_bwd)
 
 
+# ------------------------------------- overlapped (ring) model collectives
+# An all-reduce decomposed into 2(n-1) ppermute steps (reduce-scatter ring
+# then all-gather ring), double-buffered: the payload is split into TWO
+# interleaved chunk rings whose sends are issued back-to-back each step,
+# so one ring's DMA overlaps the other ring's add — and, unlike the
+# monolithic all-reduce, every step is an independent async send the
+# scheduler can overlap with neighbouring matmuls.  Total wire bytes are
+# identical to the all-reduce (2(n-1)/n of the payload per link);
+# `benchmarks/roofline.py` credits collective-permute bytes as
+# overlappable when scoring `terms_s`.
+#
+# Works inside the fully-manual shard_map train body: the device's ring
+# position is recovered without `axis_index` (unsupported there on this
+# jax pin) from a one-f32-per-device psum_scatter of an iota.
+def _ring_index(axis, n):
+    iot = jnp.arange(n, dtype=jnp.float32)
+    return (jax.lax.psum_scatter(iot, axis, scatter_dimension=0,
+                                 tiled=True) / n)[0].astype(jnp.int32)
+
+
+def ring_all_reduce(x, axis, n: int, *, buffers: int = 2):
+    """psum(x, axis) computed as double-buffered ppermute chunk rings.
+    ``n`` is the static size of the mesh axis."""
+    if n == 1:
+        return x
+    sh, dt = x.shape, x.dtype
+    flat = x.reshape(-1)
+    m = flat.shape[0]
+    nchunks = n * buffers
+    pad = (-m) % nchunks
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    chunks = flat.reshape(nchunks, -1)
+    idx = _ring_index(axis, n)
+    perm = [(i, (i + 1) % n) for i in range(n)]
+
+    def local(r, j):
+        # ring r owns the contiguous row block [r*n, (r+1)*n)
+        return jax.lax.dynamic_index_in_dim(chunks, r * n + j % n, 0,
+                                            keepdims=False)
+
+    # reduce-scatter phase: after n-1 steps device i holds the fully
+    # reduced chunk i of every ring
+    accs = [local(r, idx + n - 1) for r in range(buffers)]
+    for step in range(n - 1):
+        accs = [jax.lax.ppermute(a, axis, perm) for a in accs]
+        accs = [a + local(r, idx + n - 2 - step)
+                for r, a in enumerate(accs)]
+    # all-gather phase: circulate the reduced chunks back around
+    out = jnp.zeros_like(chunks)
+    for r in range(buffers):
+        out = jax.lax.dynamic_update_index_in_dim(out, accs[r],
+                                                  r * n + idx, 0)
+    bufs = accs
+    for step in range(1, n):
+        bufs = [jax.lax.ppermute(b, axis, perm) for b in bufs]
+        for r in range(buffers):
+            out = jax.lax.dynamic_update_index_in_dim(
+                out, bufs[r], r * n + (idx - step) % n, 0)
+    flat_out = out.reshape(-1)
+    if pad:
+        flat_out = flat_out[:m]
+    return flat_out.reshape(sh).astype(dt)
+
+
+# Ring-decomposed conjugates of the tp_push/tp_pull/tp_psum trio above —
+# same contract, but every model-axis sum is the overlappable ring.  Kept
+# as separate custom-vjp functions (``ring`` = static axis size) so the
+# default psum pair stays byte-identical for existing configs.
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def tp_push_ring(x, axis, ring):
+    return x
+
+
+def _tp_push_ring_fwd(x, axis, ring):
+    return x, None
+
+
+def _tp_push_ring_bwd(axis, ring, _, ct):
+    return (ring_all_reduce(ct, axis, ring),)
+
+
+tp_push_ring.defvjp(_tp_push_ring_fwd, _tp_push_ring_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def tp_pull_ring(x, axis, ring):
+    return ring_all_reduce(x, axis, ring)
+
+
+def _tp_pull_ring_fwd(x, axis, ring):
+    return ring_all_reduce(x, axis, ring), None
+
+
+def _tp_pull_ring_bwd(axis, ring, _, ct):
+    return (ct,)
+
+
+tp_pull_ring.defvjp(_tp_pull_ring_fwd, _tp_pull_ring_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def tp_psum_ring(x, axis, ring):
+    return ring_all_reduce(x, axis, ring)
+
+
+def _tp_psum_ring_fwd(x, axis, ring):
+    return ring_all_reduce(x, axis, ring), None
+
+
+def _tp_psum_ring_bwd(axis, ring, _, ct):
+    return (ring_all_reduce(ct, axis, ring),)
+
+
+tp_psum_ring.defvjp(_tp_psum_ring_fwd, _tp_psum_ring_bwd)
+
+
+def tp_enter(x, axis, ring: int = 0):
+    """tp_push, or its ring-overlapped variant when ``ring`` (the static
+    model-axis size) is nonzero."""
+    return tp_push_ring(x, axis, ring) if ring else tp_push(x, axis)
+
+
+def tp_exit(x, axis, ring: int = 0):
+    """tp_pull, or its ring-overlapped variant."""
+    return tp_pull_ring(x, axis, ring) if ring else tp_pull(x, axis)
+
+
 def rms_norm(x, scale, eps=1e-6):
     var = jnp.mean(jnp.square(x.astype(jnp.float32)), -1, keepdims=True)
     return (x * jax.lax.rsqrt(var + eps).astype(x.dtype)) * scale

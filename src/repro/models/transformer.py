@@ -23,6 +23,16 @@ from repro.models import ssm as ssm_lib
 from repro.models.config import ModelConfig
 
 
+def _flash_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _ring(cfg: ModelConfig, tp) -> int:
+    """Static model-axis size when ring-overlapped collectives are on
+    (0 selects the monolithic psum conjugates)."""
+    return tp.size if (tp is not None and cfg.overlap_collectives) else 0
+
+
 # ==================================================== tensor parallelism
 # The model-axis shard-plan subsystem lives in ``models/shard_plan``
 # (family-generic: expert-parallel MoE, sharded recurrent mixers,
@@ -138,7 +148,7 @@ def _attn(cfg: ModelConfig, lp, x, positions, mode, cache, window, tp=None):
         # psum_scatter of the shards' partial cotangents)
         h = L.tp_seq_gather(h, tp.axis, 1)
     elif tp_attn:
-        h = L.tp_push(h, tp.axis)
+        h = L.tp_enter(h, tp.axis, _ring(cfg, tp))
     S = h.shape[1]
     q = h @ lp["wq"]
     k = h @ lp["wk"]
@@ -169,8 +179,21 @@ def _attn(cfg: ModelConfig, lp, x, positions, mode, cache, window, tp=None):
         out = L.decode_attention(q, k_cache, v_cache, pos, window=window)
         new_cache = {"k": k_cache, "v": v_cache}
     else:
-        out = L.causal_attention(q, k, v, window=window, chunk=cfg.attn_chunk,
-                                 scores_f32=cfg.attn_scores_f32)
+        from repro.kernels import flash_attention as fa
+        if (cfg.flash_attention and mode == "train"
+                and not cfg.attn_batch_shard and window != 0
+                and fa.supports(S, cfg.hd)):
+            # blocked online-softmax kernel, custom-VJP backward: no S x S
+            # score materialization in either pass.  Head counts here are
+            # already TP-local; a seq plan entered above, so S is full.
+            out = fa.flash_attention(
+                q.swapaxes(1, 2), k.swapaxes(1, 2), v.swapaxes(1, 2),
+                causal=True, window=window,
+                interpret=_flash_interpret()).swapaxes(1, 2)
+        else:
+            out = L.causal_attention(
+                q, k, v, window=window, chunk=cfg.attn_chunk,
+                scores_f32=cfg.attn_scores_f32 and not cfg.bf16_residency)
         if cfg.attn_batch_shard:
             from jax.sharding import PartitionSpec as _P
             out = jax.lax.with_sharding_constraint(out, _P("model"))
@@ -186,7 +209,7 @@ def _attn(cfg: ModelConfig, lp, x, positions, mode, cache, window, tp=None):
         s_loc = S // tp.size
         y = jax.lax.dynamic_slice_in_dim(y, tp.index * s_loc, s_loc, 1)
     elif tp_attn:
-        y = L.tp_pull(y, tp.axis)
+        y = L.tp_exit(y, tp.axis, _ring(cfg, tp))
     return x + y, new_cache
 
 
@@ -201,12 +224,12 @@ def _ffn(cfg, lp, x, tp=None):
     if seq:
         h = L.tp_seq_gather(h, tp.axis, 1)
     elif tp_ffn:
-        h = L.tp_push(h, tp.axis)
+        h = L.tp_enter(h, tp.axis, _ring(cfg, tp))
     y = _gated_mlp(h, lp["w_gate"], lp["w_up"], lp["w_down"])
     if seq:
         y = L.tp_seq_scatter(y, tp.axis, 1)
     elif tp_ffn:
-        y = L.tp_pull(y, tp.axis)
+        y = L.tp_exit(y, tp.axis, _ring(cfg, tp))
     return x + y
 
 
@@ -348,6 +371,43 @@ def _block(cfg: ModelConfig, lp, x, positions, mode, cache, window, tp=None):
 
 
 # ================================================================ forward
+@jax.custom_vjp
+def _dense_grad_lookup(table, ids):
+    """table[ids] with a dense one-hot-matmul backward.  Value- and
+    gradient-identical to the plain gather (the one-hot dot touches each
+    cotangent row exactly once), but the transpose is a single MXU matmul
+    instead of a scatter-add — which XLA CPU lowers to a serial while
+    loop re-reading the full table every trip (it dominated the train
+    step's HBM-traffic proxy)."""
+    return table[ids]
+
+
+def _dense_grad_lookup_fwd(table, ids):
+    return table[ids], (table, ids)
+
+
+def _dense_grad_lookup_bwd(res, ct):
+    import numpy as np
+    table, ids = res
+    V = table.shape[0]
+    oh = (jax.lax.broadcasted_iota(jnp.int32, (*ids.shape, V), ids.ndim)
+          == ids[..., None]).astype(ct.dtype)
+    dtable = jax.lax.dot_general(
+        oh.reshape(-1, V), ct.reshape(-1, ct.shape[-1]),
+        (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(table.dtype)
+    return dtable, np.zeros(ids.shape, jax.dtypes.float0)
+
+
+_dense_grad_lookup.defvjp(_dense_grad_lookup_fwd, _dense_grad_lookup_bwd)
+
+
+def _embed_rows(params, cfg: ModelConfig, ids):
+    if cfg.dense_embed_grad:
+        return _dense_grad_lookup(params["embed"], ids)
+    return params["embed"][ids]
+
+
 def embed_inputs(params, cfg: ModelConfig, tokens,
                  frontend_embeds=None, tp=None):
     """Token embedding; VLM prepends projected patch embeddings.
@@ -361,20 +421,41 @@ def embed_inputs(params, cfg: ModelConfig, tokens,
         idx = tokens - tp.index * v_loc
         ok = (idx >= 0) & (idx < v_loc)
         x = jnp.where(ok[..., None],
-                      params["embed"][jnp.clip(idx, 0, v_loc - 1)], 0)
+                      _embed_rows(params, cfg, jnp.clip(idx, 0, v_loc - 1)),
+                      0)
         if tp.plan.seq:
             # sequence-parallel residual stream: reduce-scatter the
             # vocab partials straight into (B, S/tp, D) shards
             x = L.tp_seq_scatter(x, tp.axis, 1)
         else:
-            x = L.tp_pull(x, tp.axis)
+            x = L.tp_exit(x, tp.axis, _ring(cfg, tp))
     else:
-        x = params["embed"][tokens]
+        x = _embed_rows(params, cfg, tokens)
     if cfg.frontend == "vlm":
         assert frontend_embeds is not None
         img = frontend_embeds.astype(x.dtype) @ params["proj_in"]
         x = jnp.concatenate([img, x], axis=1)
     return x
+
+
+def _remat_policy(name: str):
+    """Selective-remat policies for the layer-scan checkpoint.  ``full``
+    is the historical blanket remat (save only the carry); the others
+    keep matmul outputs resident so the backward re-runs only the cheap
+    elementwise/softmax glue — HBM re-read traffic drops by the width of
+    every recomputed GEMM input."""
+    cp = jax.checkpoint_policies
+    table = {
+        "full": None,
+        "dots": cp.dots_with_no_batch_dims_saveable,
+        "dots_batch": cp.dots_saveable,
+        "offload_dots": cp.offload_dot_with_no_batch_dims(
+            "device", "pinned_host"),
+    }
+    if name not in table:
+        raise ValueError(
+            f"remat_policy {name!r}: want one of {sorted(table)} | none")
+    return table[name]
 
 
 def forward(params, cfg: ModelConfig, tokens, frontend_embeds=None,
@@ -422,17 +503,29 @@ def forward(params, cfg: ModelConfig, tokens, frontend_embeds=None,
         h, cache, aux = _block(cfg, lp, h, positions, mode, None, window, tp)
         return h, (cache, aux.get("load_balance", jnp.zeros((), jnp.float32)))
 
-    if remat and mode == "train":
-        body = jax.checkpoint(body, prevent_cse=False)
+    if remat and mode == "train" and cfg.remat_policy != "none":
+        body = jax.checkpoint(body, prevent_cse=False,
+                              policy=_remat_policy(cfg.remat_policy))
     x, (caches, lb) = jax.lax.scan(body, x, params["blocks"])
     x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
     head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
     if tp is not None and tp.plan.vocab:
         # column-parallel unembed; a seq plan assembles the sequence here
         x = (L.tp_seq_gather(x, tp.axis, 1) if seq
-             else L.tp_push(x, tp.axis))
+             else L.tp_enter(x, tp.axis, _ring(cfg, tp)))
     logits = x @ head
     return logits, caches, {"load_balance": lb.mean()}
+
+
+def _select_logit(pred, tgt):
+    """pred[..., tgt] as a one-hot masked sum — value- and
+    gradient-identical to take_along_axis (exactly one nonzero term per
+    row), but both directions are dense fused elementwise ops: the gather
+    transpose otherwise lowers to a serial scatter-add while loop on XLA
+    CPU that re-reads the whole (B, S, V) buffer every trip (it was ~60%
+    of the train step's HBM-traffic proxy)."""
+    iota = jax.lax.broadcasted_iota(jnp.int32, pred.shape, pred.ndim - 1)
+    return jnp.sum(jnp.where(iota == tgt[..., None], pred, 0), axis=-1)
 
 
 def loss_fn(params, cfg: ModelConfig, batch, window=None,
@@ -455,28 +548,29 @@ def loss_fn(params, cfg: ModelConfig, batch, window=None,
     n_pre = cfg.n_frontend_tokens if cfg.frontend == "vlm" else 0
     logits = logits[:, n_pre:, :]
     targ = tokens[:, 1:]
+    fp32_logits = cfg.loss_fp32_logits and not cfg.bf16_residency
     if tp is not None and tp.plan.vocab:
         # sharded-vocab CE: max over shards via pmax (stop-grad, like the
         # max-shift below), sum-of-exp and target logit assembled with
         # tp_pull so each shard's backward touches only its own columns
         v_loc = cfg.vocab // tp.size
         pred = logits[:, :-1]
-        if cfg.loss_fp32_logits:
+        if fp32_logits:
             pred = pred.astype(jnp.float32)
         m = jax.lax.pmax(jax.lax.stop_gradient(pred.max(-1)), tp.axis)
         e = jnp.exp(pred - m[..., None])
         lse = m.astype(jnp.float32) + jnp.log(
-            L.tp_pull(jnp.sum(e, axis=-1, dtype=jnp.float32), tp.axis))
+            L.tp_exit(jnp.sum(e, axis=-1, dtype=jnp.float32), tp.axis,
+                      _ring(cfg, tp)))
         idx = targ - tp.index * v_loc
         ok = (idx >= 0) & (idx < v_loc)
-        ll_loc = jnp.take_along_axis(
-            pred, jnp.clip(idx, 0, v_loc - 1)[..., None], -1)[..., 0]
-        ll = L.tp_pull(jnp.where(ok, ll_loc, 0).astype(jnp.float32),
-                       tp.axis)
-    elif cfg.loss_fp32_logits:
+        ll_loc = _select_logit(pred, jnp.clip(idx, 0, v_loc - 1))
+        ll = L.tp_exit(jnp.where(ok, ll_loc, 0).astype(jnp.float32),
+                       tp.axis, _ring(cfg, tp))
+    elif fp32_logits:
         pred = logits[:, :-1].astype(jnp.float32)
         lse = jax.nn.logsumexp(pred, axis=-1)
-        ll = jnp.take_along_axis(pred, targ[..., None], -1)[..., 0]
+        ll = _select_logit(pred, targ)
     else:
         # avoid materializing an f32 copy of the (B,S,V) logits: max-shift
         # and exp in the compute dtype, accumulate the sum in f32
@@ -485,8 +579,7 @@ def loss_fn(params, cfg: ModelConfig, batch, window=None,
         e = jnp.exp(pred - m[..., None])
         lse = m.astype(jnp.float32) + jnp.log(
             jnp.sum(e, axis=-1, dtype=jnp.float32))
-        ll = jnp.take_along_axis(pred, targ[..., None], -1)[..., 0] \
-            .astype(jnp.float32)
+        ll = _select_logit(pred, targ).astype(jnp.float32)
     nll = lse - ll
     mask = batch.get("loss_mask")
     if mask is not None:

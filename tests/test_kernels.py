@@ -9,6 +9,7 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels import ref
+from repro.kernels.dsc_quantize import dsc_quantize
 from repro.kernels.dsc_update import dsc_update
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.quantize import QBLOCK, dequantize, quantize
@@ -81,6 +82,80 @@ def test_quantize_zero_block_safe():
     q, sc = quantize(x, jnp.uint32(0), interpret=True)
     assert not np.any(np.asarray(q))
     assert float(sc[0]) == 0.0
+
+
+# ------------------------------------------- masked-tail (ragged) contract
+# The counter-based RNG indexes the FLAT GLOBAL element position, so a
+# kernel's internal zero-padding must never displace a real element's
+# draw: kernel(x[:n]) == ref-on-exactly-n for ANY n, not just tiles.
+@settings(max_examples=12, deadline=None)
+@given(n=st.integers(1, 5000), seed=st.integers(0, 1000))
+def test_dsc_update_ragged_matches_ref(n, seed):
+    g = jax.random.normal(jax.random.PRNGKey(seed), (n,))
+    s = jax.random.normal(jax.random.PRNGKey(seed + 1), (n,))
+    v, s_new = dsc_update(g, s, jnp.uint32(seed), p=0.3, gamma=0.5,
+                          interpret=True)
+    v_ref, s_ref = ref.dsc_update_ref(g, s, jnp.uint32(seed), p=0.3,
+                                      gamma=0.5)
+    assert v.shape == (n,) and s_new.shape == (n,)
+    np.testing.assert_allclose(np.asarray(v), np.asarray(v_ref),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(s_new), np.asarray(s_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=12, deadline=None)
+@given(n=st.integers(1, 4 * QBLOCK + 37), seed=st.integers(0, 1000))
+def test_quantize_ragged_matches_ref(n, seed):
+    x = 2.0 * jax.random.normal(jax.random.PRNGKey(seed), (n,))
+    q, sc = quantize(x, jnp.uint32(seed), interpret=True)
+    q_ref, sc_ref = ref.quantize_ref(x, jnp.uint32(seed))
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(q_ref))
+    np.testing.assert_allclose(np.asarray(sc), np.asarray(sc_ref),
+                               rtol=1e-6)
+    # padded tail must quantize to exact zeros (scale of a zero block = 0)
+    pad = (-n) % QBLOCK
+    if pad:
+        assert not np.any(np.asarray(q)[n:])
+
+
+# ------------------------------------------------- fused DSC -> int8 wire
+@pytest.mark.parametrize("n", [8 * QBLOCK, 2305, 511])
+@pytest.mark.parametrize("p", [0.25, 1.0])
+def test_dsc_quantize_matches_ref(n, p):
+    g = jax.random.normal(KEY, (n,))
+    s = 0.1 * jax.random.normal(jax.random.fold_in(KEY, 1), (n,))
+    sm, sr = jnp.uint32(11), jnp.uint32(12)
+    q, sc, s_new = dsc_quantize(g, s, sm, sr, p=p, gamma=0.5,
+                                interpret=True)
+    q_ref, sc_ref, s_ref = ref.dsc_quantize_ref(g, s, sm, sr, p=p,
+                                                gamma=0.5)
+    # bit-exact: same RNG indices, same blockmax, same stochastic round
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(q_ref))
+    np.testing.assert_allclose(np.asarray(sc), np.asarray(sc_ref),
+                               rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(s_new), np.asarray(s_ref),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_dsc_quantize_matches_unfused_chain():
+    """The one-pass kernel == dsc_update -> quantize -> dequantize ->
+    shift update composed from the standalone kernels (the unfused wire
+    path it replaces), sharing the same two seeds."""
+    n, p, gamma = 4 * QBLOCK, 0.5, 0.7
+    g = jax.random.normal(KEY, (n,))
+    s = 0.2 * jax.random.normal(jax.random.fold_in(KEY, 2), (n,))
+    sm, sr = jnp.uint32(3), jnp.uint32(4)
+    q, sc, s_new = dsc_quantize(g, s, sm, sr, p=p, gamma=gamma,
+                                interpret=True)
+    v, _ = dsc_update(g, s, sm, p=p, gamma=gamma, interpret=True)
+    q2, sc2 = quantize(v, sr, interpret=True)
+    v_hat = dequantize(q2, sc2, interpret=True)[:n]
+    np.testing.assert_array_equal(np.asarray(q)[:n], np.asarray(q2)[:n])
+    np.testing.assert_allclose(np.asarray(sc), np.asarray(sc2), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(s_new),
+                               np.asarray(s + gamma * v_hat),
+                               rtol=1e-5, atol=1e-6)
 
 
 # ------------------------------------------------------- flash attention

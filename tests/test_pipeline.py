@@ -268,6 +268,34 @@ def test_int8_wire_composes_with_dsc(data):
                                atol=1e-5)
 
 
+def test_fused_wire_stage_trains_and_scan_matches_step(data):
+    """compress_impl='fused' (the one-pass kernels/dsc_quantize wire
+    kernel, interpret mode on CPU): trains, preserves the Eq. 4
+    invariant s_agg == mean_k s_k (the shift updates with exactly the
+    dequantized wire value, in-register), and the scan-compiled driver
+    is trajectory-identical to the step driver through it.  No bit
+    parity with compress_impl='jnp' is asserted: the kernel's
+    counter-based RNG and the composed Int8RoundTrip's threefry draws
+    are different (equally unbiased) sample paths."""
+    full = (data[0].reshape(-1, DIM), data[1].reshape(-1))
+    kw = dict(method="eris", K=K, A=4, rounds=30, lr=0.3,
+              use_dsc=True, compressor=RandP(p=0.3), int8_wire=True,
+              compress_impl="fused")
+    batches = lambda t, k: data
+    r_fus, l_fus = run_fl(FLConfig(**kw), init_mlp(KEY), loss_fn, batches,
+                          eval_batch=full)
+    assert l_fus[-1][1] < l_fus[0][1]
+    np.testing.assert_allclose(np.asarray(r_fus.dsc.s_agg),
+                               np.asarray(r_fus.dsc.s_clients.mean(0)),
+                               atol=1e-5)
+    r_scan, l_scan = run_fl_scan(FLConfig(**kw), init_mlp(KEY), loss_fn,
+                                 batches, eval_batch=full)
+    np.testing.assert_allclose(np.asarray(r_scan.x), np.asarray(r_fus.x),
+                               atol=1e-6)
+    np.testing.assert_allclose([l for _, l in l_scan],
+                               [l for _, l in l_fus], atol=1e-5)
+
+
 def test_fsa_sharded_stage_matches_mean(data):
     """FSASharded (literal Algorithm 1) == AggregateStage mean
     (Theorem B.1) at stage granularity."""
