@@ -5,8 +5,11 @@ into one committed ``BENCH_privacy.json`` at the repo root, next to
 ``BENCH_tp.json``: MIA AUC (with bootstrap CIs), balanced accuracy and
 DLG scale-invariant reconstruction MSE as functions of the aggregator
 count A in {1, 2, 4, 8, 16}, with and without the DSC shifted wire and
-the int8 wire round trip, plus the Cor. D.2 collusion curve and a
-transformer-family (config-zoo) slice.  The nightly CI job regenerates
+the int8 wire round trip, plus the Cor. D.2 collusion curve, the
+sampling-amplified curve (AUC vs per-round participation probability q
+at fixed A, run on the buffered async engine whose arrival model zeroes
+a skipped client's wire rows) and a transformer-family (config-zoo)
+slice.  The nightly CI job regenerates
 the snapshot into its run artifacts and FAILS on leakage-monotonicity
 violations (:func:`check_snapshot`) — intervals are compared, not point
 estimates — and on drift outside the committed entries' CI bands.
@@ -24,6 +27,8 @@ SNAPSHOT = Path(__file__).resolve().parent.parent / "BENCH_privacy.json"
 
 A_GRID = (1, 2, 4, 8, 16)
 LM_A_GRID = (1, 4, 16)
+Q_GRID = (0.125, 0.25, 0.5, 1.0)   # per-round participation (sampling)
+SAMPLING_A = 4                     # fixed aggregator count for the q curve
 SEEDS = (0, 1, 2)
 MIA_KW = dict(rounds=40, lr=0.5, n_canaries=24, n_bootstrap=200)
 MIA_DIM = 16
@@ -62,6 +67,12 @@ def generate() -> dict:
                 harness.AuditSpec(A=A, seed=s, **vkw, **MIA_KW),
                 dim=MIA_DIM) for s in SEEDS]
             snap[f"mia/mlp/{vname}/A={A}"] = _mean_ci(runs)
+    # ---- sampling amplification: AUC vs q at fixed A (async engine) ----
+    for q in Q_GRID:
+        runs = [harness.mia_mlp(
+            harness.AuditSpec(A=SAMPLING_A, q=q, seed=s, **MIA_KW),
+            dim=MIA_DIM) for s in SEEDS]
+        snap[f"mia/mlp/sampling/A={SAMPLING_A}/q={q}"] = _mean_ci(runs)
     # ---- Fig. 5: collusion curve at A = 8 (one run, vmapped sweep) -----
     sweeps = [harness.mia_mlp_collusion_sweep(
         harness.AuditSpec(A=8, seed=s, **MIA_KW), dim=MIA_DIM)
@@ -105,7 +116,10 @@ def _curves(snap: dict, prefix: str) -> dict:
     """Group entries of one metric family into {curve: {A: entry}}."""
     out: dict = {}
     for key, ent in snap.items():
-        if not key.startswith(prefix) or "/collusion/" in key:
+        # sampling entries end in /q=<float>: rpartition on /A= would
+        # choke on the tail — they get their own gate below
+        if (not key.startswith(prefix) or "/collusion/" in key
+                or "/q=" in key):
             continue
         curve, _, a = key.rpartition("/A=")
         out.setdefault(curve, {})[int(a)] = ent
@@ -128,6 +142,38 @@ def check_snapshot(snap: dict, slack: float = 0.0) -> list[str]:
                     bad.append(
                         f"{curve}: AUC not monotone in A — "
                         f"A={a_hi} CI {hi_ci} above A={a_lo} CI {lo_ci}")
+    # sampling: AUC non-decreasing in the participation prob. q
+    # (amplification by subsampling — LESS participation must not leak
+    # MORE), interval-compared; the q-amplified Thm 3.3 bound must be
+    # strictly increasing in q by construction
+    samp: dict = {}
+    for key, ent in snap.items():
+        if "/sampling/" not in key or "/q=" not in key:
+            continue
+        curve, _, qs = key.rpartition("/q=")
+        samp.setdefault(curve, {})[float(qs)] = ent
+    for curve, ents in samp.items():
+        qs = sorted(ents)
+        for i, q_lo in enumerate(qs):
+            for q_hi in qs[i + 1:]:
+                lo_ci, hi_ci = ents[q_lo]["auc_ci"], ents[q_hi]["auc_ci"]
+                if lo_ci[0] > hi_ci[1] + slack:
+                    bad.append(
+                        f"{curve}: AUC not non-decreasing in q — "
+                        f"q={q_lo} CI {lo_ci} above q={q_hi} CI {hi_ci}")
+            if i and not (ents[qs[i - 1]]["mi_bound"]
+                          < ents[qs[i]]["mi_bound"]):
+                bad.append(f"{curve}: amplified bound not increasing in "
+                           f"q at q={qs[i]}")
+        # q = 1 is the synchronous engine: it must recover the base
+        # A-curve entry (same spec, no arrival model)
+        a_tag = curve.rpartition("/A=")[2]
+        full = snap.get(f"mia/mlp/base/A={a_tag}")
+        if full and 1.0 in ents:
+            got, want = ents[1.0]["auc"], full["auc"]
+            if abs(got - want) > 0.02:
+                bad.append(f"{curve}: q=1 AUC {got:.3f} does not recover "
+                           f"the synchronous A={a_tag} entry {want:.3f}")
     # collusion: AUC non-decreasing in a_c; a_c = A recovers A=1
     coll = {int(k.rpartition("=")[2]): v for k, v in snap.items()
             if "/collusion/" in k}

@@ -7,7 +7,7 @@ scan-friendly.  Client gradients are produced by a user-supplied
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, NamedTuple, Optional
+from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -23,6 +23,7 @@ class ErisState(NamedTuple):
     dsc: dsc_lib.DSCState  # reference vectors (zeros when DSC disabled)
     t: jax.Array           # round counter
     key: jax.Array
+    buf: Any = None        # pl.BufferState under async buffered aggregation
 
 
 @dataclasses.dataclass(frozen=True)
@@ -34,6 +35,12 @@ class ErisConfig:
     mask_scheme: str = "strided"
     fresh_masks: bool = False       # re-draw random masks each round (m^t)
     use_dsc: bool = False
+    # ---- FedBuff-style buffered async aggregation (pl.BufferedAggregate)
+    async_buffer: bool = False
+    buffer_cadence: int = 1
+    staleness_alpha: float = 1.0
+    delay_max: int = 0
+    client_dropout: float = 0.0
 
     def gamma_value(self, n: int) -> float:
         if self.gamma is not None:
@@ -43,10 +50,11 @@ class ErisConfig:
         return dsc_lib.gamma_star(self.compressor.omega(n))
 
 
-def init(key: jax.Array, x0: jax.Array, K: int) -> ErisState:
+def init(key: jax.Array, x0: jax.Array, K: int,
+         async_buffer: bool = False) -> ErisState:
     n = x0.shape[0]
     return ErisState(x0, dsc_lib.init_state(K, n), jnp.zeros((), jnp.int32),
-                     key)
+                     key, pl.init_buffer(n) if async_buffer else None)
 
 
 def _round_keys(k_mask: jax.Array, k_comp: jax.Array) -> pl.RoundKeys:
@@ -83,6 +91,17 @@ def stages(cfg: ErisConfig, n: int, keep_views: bool = False
         aggregate = pl.DSCAggregate(gamma=gamma)
     else:
         aggregate = pl.AggregateStage()
+    if cfg.async_buffer:
+        if cfg.use_dsc:
+            raise ValueError(
+                "async_buffer does not compose with use_dsc: the Eq. 4 "
+                "shift state tracks per-round aggregator receipts, which "
+                "a cadence-delayed buffered apply breaks")
+        aggregate = pl.BufferedAggregate(
+            inner=aggregate, cadence=cfg.buffer_cadence,
+            arrival=pl.ArrivalModel(delay_max=cfg.delay_max,
+                                    dropout=cfg.client_dropout,
+                                    alpha=cfg.staleness_alpha))
     return compress, aggregate
 
 
@@ -103,17 +122,22 @@ def round_step(state: ErisState, cfg: ErisConfig,
 
     # --- compression (line 4) + FSA aggregation (lines 5-13): the stage
     # list, executed exactly as RoundPipeline.run_round does
-    rstate = pl.RoundState(x=state.x, dsc=state.dsc, ef=None, server=None)
+    rstate = pl.RoundState(x=state.x, dsc=state.dsc, ef=None, server=None,
+                           buf=state.buf)
     v = grads
     for stage in compress:
         v, rstate = stage.apply(keys, rstate, v)
     agg = aggregate.apply(keys, rstate, v, weights)
     x_new = state.x - cfg.lr * agg.update
 
-    assign = (aggregate.assignment(keys, n)
-              if isinstance(aggregate, pl.FSASharded)
+    mask_stage = (aggregate.inner
+                  if isinstance(aggregate, pl.BufferedAggregate)
+                  else aggregate)
+    assign = (mask_stage.assignment(keys, n)
+              if isinstance(mask_stage, pl.FSASharded)
               else masks_lib.make_assignment(n, cfg.A, cfg.mask_scheme))
-    new_state = ErisState(x_new, agg.state.dsc, state.t + 1, key)
+    new_state = ErisState(x_new, agg.state.dsc, state.t + 1, key,
+                          agg.state.buf)
     aux = {"assign": assign, "transmitted": v, "shard_views": agg.views}
     return new_state, aux
 
@@ -122,7 +146,8 @@ def run(key: jax.Array, x0: jax.Array, cfg: ErisConfig, grad_fn,
         client_batches_per_round, T: int, weights=None):
     """Run T rounds with static per-round client batches
     (client_batches_per_round has leading dims (T, K, ...))."""
-    state = init(key, x0, client_batches_per_round.shape[1])
+    state = init(key, x0, client_batches_per_round.shape[1],
+                 async_buffer=cfg.async_buffer)
 
     def body(st, batches):
         st, _ = round_step(st, cfg, grad_fn, batches, weights)

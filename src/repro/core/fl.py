@@ -61,6 +61,14 @@ class FLConfig:
     keep_views: bool = False      # materialize (A, K, n) aggregator views
                                   # (eris: routes through literal FSASharded
                                   # — the privacy-audit path)
+    # ---- population-scale async runtime (fedbuff / eris_async methods)
+    population: int = 0           # >0: batches carry the whole population
+                                  # on their leading axis; K becomes the
+                                  # per-round cohort size drawn from it
+    buffer_cadence: int = 1       # server applies the buffer every C rounds
+    staleness_alpha: float = 1.0  # arrival weight 1/(1+tau)^alpha
+    delay_max: int = 0            # straggler staleness tau ~ U{0..delay_max}
+    client_dropout: float = 0.0   # arrival dropout (never contributes)
     seed: int = 0
 
 

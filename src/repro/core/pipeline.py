@@ -44,12 +44,27 @@ from repro.core.compressors import Compressor, Identity, RandP
 
 
 # ================================================================== state
+class BufferState(NamedTuple):
+    """FedBuff-style aggregator buffer carried across rounds: the
+    staleness-weighted update accumulator, its cumulative weight, and the
+    absolute round counter driving the server-apply cadence."""
+    u: jax.Array             # weighted update accumulator (n,)
+    w: jax.Array             # cumulative arrival weight ()
+    t: jax.Array             # rounds folded since start (int32, ())
+
+
+def init_buffer(n: int) -> BufferState:
+    return BufferState(jnp.zeros(n), jnp.zeros(()),
+                       jnp.zeros((), jnp.int32))
+
+
 class RoundState(NamedTuple):
     """Everything a round carries forward (a scan carry)."""
     x: jax.Array             # global model (n,)
     dsc: dsc_lib.DSCState    # DSC reference vectors (zeros when unused)
     ef: ef_lib.EFState       # error-feedback residuals (zeros when unused)
     server: Any              # server optimizer state
+    buf: Any = None          # BufferState under buffered async aggregation
 
 
 class RoundKeys(NamedTuple):
@@ -84,6 +99,80 @@ def participation_weights(key: jax.Array, K: int,
     part = jax.random.bernoulli(key, fraction, (K,))
     part = part.at[jax.random.randint(key, (), 0, K)].set(True)
     return part.astype(jnp.float32)
+
+
+# ======================================================= async primitives
+# Key salts: BufferedAggregate folds its role key with ARRIVAL_SALT and
+# CohortSample with COHORT_SALT, so the arrival/cohort draws are
+# decorrelated from every existing consumer of the same role key (the
+# eris engine aliases fail/part to comp; FailureInjectedFSA splits fail
+# directly) without changing any synchronous trajectory.
+ARRIVAL_SALT = 0xA51C
+COHORT_SALT = 0xC0C0
+
+
+@dataclasses.dataclass(frozen=True)
+class ArrivalModel:
+    """Deterministic-keyed straggler/dropout arrivals (the FedBuff-style
+    async client model): each cohort member arrives with staleness
+    ``tau ~ U{0..delay_max}`` and survives dropout w.p. ``1 - dropout``;
+    its update is weighted ``1/(1+tau)^alpha`` (Nguyen et al.'s FedBuff
+    staleness discount) and a dropped client contributes NOTHING."""
+
+    delay_max: int = 0
+    dropout: float = 0.0
+    alpha: float = 1.0
+
+    @property
+    def trivial(self) -> bool:
+        """Statically no-op: zero staleness, zero dropout.  The trivial
+        model draws no randomness and weights every arrival exactly 1.0,
+        so buffered aggregation degenerates to the synchronous path
+        bit-exactly (asserted in tests/test_fedbuff.py)."""
+        return self.delay_max == 0 and self.dropout == 0.0
+
+    def staleness_weight(self, tau: jax.Array) -> jax.Array:
+        return (1.0 + tau.astype(jnp.float32)) ** (-self.alpha)
+
+    def draw(self, key: jax.Array, K: int
+             ) -> tuple[jax.Array, jax.Array, jax.Array]:
+        """(tau, alive, weight) for a K-client cohort."""
+        kd, ka = jax.random.split(key)
+        tau = jax.random.randint(kd, (K,), 0, self.delay_max + 1)
+        alive = jax.random.bernoulli(ka, 1.0 - self.dropout, (K,))
+        omega = self.staleness_weight(tau) * alive.astype(jnp.float32)
+        return tau, alive, omega
+
+
+@dataclasses.dataclass(frozen=True)
+class CohortSample:
+    """Per-round cohort draw over a population: a keyed
+    without-replacement sample of ``cohort`` client ids out of
+    ``population``.  The draw is a pure function of the round's role key,
+    so it is reproducible and identical across engines, and it traces —
+    the scan engine compiles the whole population's cohort selection into
+    the single fused T-round program."""
+
+    population: int
+    cohort: int
+    key_role: str = "part"
+
+    def __post_init__(self):
+        if not 0 < self.cohort <= self.population:
+            raise ValueError(
+                f"cohort size {self.cohort} must be in 1..population "
+                f"({self.population})")
+
+    def draw(self, keys: RoundKeys) -> jax.Array:
+        key = jax.random.fold_in(getattr(keys, self.key_role), COHORT_SALT)
+        return jax.random.permutation(key, self.population)[:self.cohort]
+
+    def gather(self, keys: RoundKeys, batches):
+        """Select the cohort's rows from population-leading batch arrays
+        (leading dim = population -> leading dim = cohort)."""
+        idx = self.draw(keys)
+        return idx, jax.tree.map(lambda b: jnp.take(b, idx, axis=0),
+                                 batches)
 
 
 # ======================================================== kernel plumbing
@@ -445,6 +534,92 @@ class FailureInjectedFSA(AggregateStage):
         return AggregateResult(u, state._replace(dsc=dsc))
 
 
+@dataclasses.dataclass(frozen=True)
+class BufferedAggregate(AggregateStage):
+    """FedBuff-style buffered asynchronous aggregation around ANY inner
+    aggregate stage: arrivals (drawn from ``arrival``) fold their
+    staleness-weighted updates into a cross-round :class:`BufferState`;
+    the server consumes the buffer only every ``cadence`` rounds and the
+    update is zero in between.
+
+    Per round the inner stage aggregates the arrived cohort with weights
+    ``base_k * omega_k`` (``omega_k = alive_k / (1+tau_k)^alpha``), the
+    buffer accumulates ``W_r * contrib`` with the round's arrival mass
+    ``W_r = sum(base*omega)/sum(base)``, and an apply round emits
+    ``buf.u / buf.w`` then resets.  With the TRIVIAL arrival model and
+    ``cadence=1`` every step is algebraically `0 + 1.0*u`, `u / 1.0` —
+    IEEE-exact identities — so the async path reproduces the synchronous
+    inner stage bit-for-bit (the degenerate-case parity gate).
+
+    The inner stage must consume weights (``use_weights=True``) so
+    staleness discounts reach the mean; dropped clients are additionally
+    hard-zeroed out of ``v`` (and the adversary views) so they can never
+    contribute — a dropped client transmitted nothing."""
+
+    inner: AggregateStage = AggregateStage()
+    arrival: ArrivalModel = ArrivalModel()
+    cadence: int = 1
+    key_role: str = "fail"
+
+    def __post_init__(self):
+        if self.cadence < 1:
+            raise ValueError(f"cadence must be >= 1, got {self.cadence}")
+        if not self.inner.use_weights:
+            raise ValueError(
+                "BufferedAggregate needs an inner aggregate with "
+                "use_weights=True; otherwise staleness/dropout weights "
+                "would be silently ignored")
+
+    def init_buffer(self, n: int) -> BufferState:
+        return init_buffer(n)
+
+    def apply(self, keys, state, v, weights):
+        if state.buf is None:
+            raise ValueError("BufferedAggregate needs RoundState.buf — "
+                             "initialize via RoundPipeline.init_state "
+                             "(or pipeline.init_buffer)")
+        K = v.shape[0]
+        if self.arrival.trivial:
+            # statically synchronous: no draws, unit round weight — the
+            # fold below is then bit-exact identity around the inner stage
+            res = self.inner.apply(keys, state, v, weights)
+            contrib, inner_state, views = res.update, res.state, res.views
+            w_round = jnp.ones(())
+        else:
+            k_arr = jax.random.fold_in(self._key(keys), ARRIVAL_SALT)
+            _, alive, omega = self.arrival.draw(k_arr, K)
+            base = weights if (weights is not None and self.use_weights) \
+                else jnp.ones((K,))
+            w_eff = base * omega
+            w_sum = w_eff.sum()
+            # dropped clients transmitted nothing: hard-zero their rows
+            # (and views) so no inner stage can leak or aggregate them
+            v = v * alive[:, None].astype(v.dtype)
+            safe_w = jnp.where(w_sum > 0, w_eff, jnp.ones((K,)))
+            res = self.inner.apply(keys, state, v, safe_w)
+            w_round = jnp.where(w_sum > 0, w_sum / base.sum(), 0.0)
+            contrib = jnp.where(w_sum > 0, res.update, 0.0)
+            inner_state, views = res.state, res.views
+            if views is not None:
+                # (A, K, n) aggregator views or (K, n) per-client views:
+                # mask the cohort axis either way
+                a = alive.astype(views.dtype)
+                views = views * (a[None, :, None] if views.ndim == 3
+                                 else a[:, None])
+        buf = state.buf
+        u_acc = buf.u + w_round * contrib
+        w_acc = buf.w + w_round
+        t_new = buf.t + 1
+        do_apply = (t_new % self.cadence) == 0
+        update = jnp.where(do_apply,
+                           u_acc / jnp.maximum(w_acc, 1e-12), 0.0)
+        buf_new = BufferState(u=jnp.where(do_apply, 0.0, u_acc),
+                              w=jnp.where(do_apply, 0.0, w_acc),
+                              t=t_new)
+        return AggregateResult(update, inner_state._replace(buf=buf_new),
+                               views)
+
+
 # ================================================================= server
 @dataclasses.dataclass(frozen=True)
 class ServerStage:
@@ -478,16 +653,24 @@ class RoundPipeline:
     aggregate: AggregateStage = AggregateStage()
     server: ServerStage = ServerStage()
     view: str = "none"           # none | transmitted
+    cohort: Optional[CohortSample] = None   # population-scale cohort draw
 
     def init_state(self, x0: jax.Array, K: int) -> RoundState:
         n = x0.shape[0]
+        buf = (self.aggregate.init_buffer(n)
+               if isinstance(self.aggregate, BufferedAggregate) else None)
         return RoundState(x0, dsc_lib.init_state(K, n),
-                          ef_lib.init_state(K, n), self.server.init(x0))
+                          ef_lib.init_state(K, n), self.server.init(x0),
+                          buf)
 
     def run_round(self, grad_fn: Callable, keys: RoundKeys,
                   state: RoundState, batches, weights=None
                   ) -> tuple[RoundState, Optional[jax.Array]]:
-        """One round.  Returns (new_state, adversary_views)."""
+        """One round.  Returns (new_state, adversary_views).  With a
+        ``cohort``, ``batches`` carries the WHOLE population on its
+        leading axis and only the drawn cohort's rows are stepped."""
+        if self.cohort is not None:
+            _, batches = self.cohort.gather(keys, batches)
         grads = self.client(grad_fn, state.x, batches)
         v = grads
         for stage in self.compress:

@@ -15,21 +15,31 @@ Reading this file IS the paper's Table-1 comparison:
   eris         [DSC | EF | -] [+int8]   FSA (DSC-compensated /   fedavg |
                                         failure-injected)        fedadam |
                                                                  fedyogi
+  fedbuff      [int8]                   buffered async mean      -lr*u
+  eris_async   [int8]                   buffered async FSA       (as eris)
+
+``fedbuff`` / ``eris_async`` wrap the synchronous aggregate in the
+FedBuff-style :class:`BufferedAggregate` (staleness-weighted arrivals
+fold into a cross-round buffer, server applies on ``buffer_cadence``)
+and, when ``FLConfig.population`` is set, draw a keyed K-client cohort
+from the population each round.
 
 Builders take (cfg: FLConfig, n: int) duck-typed — anything with the
 FLConfig fields works — and return a frozen RoundPipeline.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Callable
 
 from repro.core import baselines as bl
 from repro.core import dsc as dsc_lib
 from repro.core.compressors import Int8RoundTrip
-from repro.core.pipeline import (AggregateStage, ClientStep, DSCAggregate,
-                                 DSCCompress, EFCompress, FailureInjectedFSA,
-                                 FSASharded, Int8Wire, LDPNoise,
-                                 PruneWithhold, RoundPipeline,
+from repro.core.pipeline import (AggregateStage, ArrivalModel,
+                                 BufferedAggregate, ClientStep, CohortSample,
+                                 DSCAggregate, DSCCompress, EFCompress,
+                                 FailureInjectedFSA, FSASharded, Int8Wire,
+                                 LDPNoise, PruneWithhold, RoundPipeline,
                                  SecureAggAggregate, ServerStage,
                                  ShatterAggregate)
 
@@ -151,6 +161,53 @@ def _build_eris(cfg, n):
                          view="transmitted")
 
 
+# ------------------------------------------------ async (population-scale)
+def _as_async(pipeline: RoundPipeline, cfg) -> RoundPipeline:
+    """Wrap a synchronous pipeline's aggregate in the FedBuff-style
+    buffered stage and (when ``population`` is set) a keyed per-round
+    cohort draw.  With the trivial arrival model and ``cadence=1`` the
+    wrapped pipeline is bit-identical to the synchronous one."""
+    if getattr(cfg, "use_dsc", False) or getattr(cfg, "use_ef", False):
+        raise ValueError(
+            "buffered async aggregation does not compose with per-client "
+            "shift/error-feedback state: DSC's s_agg (Eq. 4) tracks what "
+            "aggregators receive EVERY round, which a cadence-delayed "
+            "buffered apply breaks (run use_dsc/use_ef synchronously, or "
+            "int8_wire for a stateless wire format)")
+    cohort = None
+    if getattr(cfg, "population", 0):
+        if cfg.population < cfg.K:
+            raise ValueError(f"population ({cfg.population}) must be >= "
+                             f"cohort size K ({cfg.K})")
+        cohort = CohortSample(population=cfg.population, cohort=cfg.K)
+    arrival = ArrivalModel(delay_max=cfg.delay_max,
+                           dropout=cfg.client_dropout,
+                           alpha=cfg.staleness_alpha)
+    aggregate = BufferedAggregate(inner=pipeline.aggregate, arrival=arrival,
+                                  cadence=cfg.buffer_cadence,
+                                  key_role="fail")
+    return dataclasses.replace(pipeline, aggregate=aggregate, cohort=cohort)
+
+
+def _build_fedbuff(cfg, n):
+    """FedAvg client/server around the buffered async aggregate (+ the
+    int8 wire stage when configured) — the FedBuff baseline."""
+    compress: tuple = ()
+    if getattr(cfg, "int8_wire", False):
+        compress += (Int8Wire(key_role="wire"),)
+    base = RoundPipeline(compress=compress,
+                         aggregate=AggregateStage(use_weights=True),
+                         server=_fedavg_server(cfg), view="transmitted")
+    return _as_async(base, cfg)
+
+
+def _build_eris_async(cfg, n):
+    """ERIS's FSA aggregation (keyed masks, adversary views, failure
+    injection — whatever the config selects) buffered FedBuff-style with
+    cohort sampling: the population-scale serverless composition."""
+    return _as_async(_build_eris(cfg, n), cfg)
+
+
 METHODS: dict[str, Callable] = {
     "fedavg": _build_fedavg,
     "min_leakage": _build_min_leakage,
@@ -160,6 +217,8 @@ METHODS: dict[str, Callable] = {
     "shatter": _build_shatter,
     "secure_agg": _build_secure_agg,
     "eris": _build_eris,
+    "fedbuff": _build_fedbuff,
+    "eris_async": _build_eris_async,
 }
 
 

@@ -1,2 +1,4 @@
 from repro.data.synthetic import (federated_classification,  # noqa: F401
-                                  lm_token_batches, dirichlet_partition)
+                                  lm_token_batches, dirichlet_partition,
+                                  balanced_dirichlet_indices,
+                                  federated_population)

@@ -31,6 +31,54 @@ def dirichlet_partition(key, labels: jax.Array, K: int, alpha: float,
     return jnp.argmax(u[:, None] < cum[labels], axis=1)
 
 
+def balanced_dirichlet_indices(key, labels, K: int, alpha: float,
+                               n_classes: int):
+    """Exact-coverage Dirichlet(alpha) partition: a (K, n_samples // K)
+    int array of sample indices whose concatenation is a permutation of
+    ``arange(n_samples)`` — every sample lands on exactly one client,
+    every client gets exactly its quota.  Label skew follows
+    :func:`dirichlet_partition`; over/under-full clients are rebalanced
+    deterministically (surplus clients donate their highest-index
+    samples to deficit clients in id order), which dilutes but preserves
+    the alpha-controlled concentration (tests/test_cohorts.py asserts
+    both the exactly-once property and the concentration trend)."""
+    import numpy as np
+    n_samples = int(labels.shape[0])
+    if n_samples % K:
+        raise ValueError(f"population partition needs n_samples "
+                         f"({n_samples}) divisible by K ({K})")
+    quota = n_samples // K
+    owner = np.asarray(jax.device_get(
+        dirichlet_partition(key, labels, K, alpha, n_classes)))
+    lists = [list(np.where(owner == k)[0]) for k in range(K)]
+    surplus: list = []
+    for k in range(K):
+        while len(lists[k]) > quota:
+            surplus.append(lists[k].pop())
+    for k in range(K):
+        while len(lists[k]) < quota:
+            lists[k].append(surplus.pop())
+    return jnp.asarray(np.stack([np.sort(np.asarray(l, dtype=np.int64))
+                                 for l in lists]))
+
+
+def federated_population(key, population: int, samples_per_client: int,
+                         dim: int = 16, n_classes: int = 4,
+                         alpha: float = 0.5, noise: float = 0.5):
+    """Population-scale non-IID federation: (x, y) arrays of shape
+    ``(population, S, dim)`` / ``(population, S)`` built from ONE global
+    dataset split exactly once across the whole population via
+    :func:`balanced_dirichlet_indices` — the data feed for the cohort-
+    sampling async runtime (``FLConfig.population``), where each round
+    gathers a drawn cohort's rows from the leading axis."""
+    kd, kp = jax.random.split(key)
+    x, y = make_classification(kd, population * samples_per_client, dim,
+                               n_classes, noise)
+    idx = balanced_dirichlet_indices(kp, y, population, alpha, n_classes)
+    take = idx[:, :samples_per_client]
+    return x[take], y[take]
+
+
 def federated_classification(key, K: int, samples_per_client: int,
                              dim: int = 16, n_classes: int = 4,
                              alpha: float | None = None,

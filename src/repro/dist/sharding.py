@@ -186,6 +186,18 @@ def dsc_store_spec(tp_leaf: TPSpec, caxis) -> P:
     return P(*parts)
 
 
+def buffer_spec_tree(cfg, mesh: Mesh, fsa: bool = True) -> dict:
+    """PartitionSpec tree of the FedBuff-style async aggregation buffer
+    (``repro.core.pipeline.BufferState`` on the mesh): the staleness-
+    weighted accumulator ``u`` mirrors the parameters' layout — each
+    aggregator buffers its OWN disjoint segment under FSA (the composite
+    store placement), the TP broadcast layout under the FedAvg baseline —
+    and the cumulative weight / round counter are replicated scalars
+    (every position folds the identical arrival mass)."""
+    u = store_specs(cfg, mesh) if fsa else tp_param_in_specs(cfg, mesh)
+    return {"u": u, "w": P(), "t": P()}
+
+
 def shift_state_dtype(name: str):
     """Residency dtype of the DSC shift state (s_clients / s_agg) — the
     one knob ``TrainSettings.shift_dtype`` threads through the store

@@ -57,7 +57,8 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.compressors import RandP
-from repro.core.pipeline import DSCCompress
+from repro.core.pipeline import (ARRIVAL_SALT, ArrivalModel, CohortSample,
+                                 DSCCompress, split_round_keys)
 from repro.dist import sharding as sh
 from repro.launch import shapes as shp
 from repro.models import transformer as tr
@@ -85,6 +86,22 @@ class TrainSettings:
                                      # aggregator, the REAL observed wire
                                      # payload (dequantized int8 segments /
                                      # grad_dtype rows) as round output
+    # ---- FedBuff-style buffered async aggregation (core.pipeline's
+    # BufferedAggregate/ArrivalModel semantics on the mesh): arrivals fold
+    # staleness-weighted updates into a per-segment buffer riding the
+    # dsc-style state tree; params/optimizer apply every buffer_cadence
+    # rounds.  Trivial arrivals + cadence 1 == the synchronous step
+    # bit-exactly.
+    async_buffer: bool = False
+    buffer_cadence: int = 1
+    staleness_alpha: float = 1.0
+    delay_max: int = 0
+    client_dropout: float = 0.0
+
+    def arrival_model(self) -> ArrivalModel:
+        return ArrivalModel(delay_max=self.delay_max,
+                            dropout=self.client_dropout,
+                            alpha=self.staleness_alpha)
 
 
 def dsc_stage(settings: TrainSettings) -> DSCCompress:
@@ -92,6 +109,16 @@ def dsc_stage(settings: TrainSettings) -> DSCCompress:
     distributed runtime (one DSC implementation, zero drift)."""
     return DSCCompress(compressor=RandP(p=settings.dsc_p),
                        gamma=settings.dsc_gamma)
+
+
+def cohort_batch(batch, key: jax.Array, population: int, n_client: int):
+    """Population-scale cohort selection for the distributed runtime: the
+    SAME keyed :class:`CohortSample` draw the simulator/scan engines run
+    inside their rounds, applied to population-leading batch arrays so
+    the step's client-axis shard is the drawn cohort.  Returns
+    ``(cohort_ids, gathered_batch)``."""
+    cs = CohortSample(population=population, cohort=n_client)
+    return cs.gather(split_round_keys(key), batch)
 
 
 def dsc_spec_tree(cfg: ModelConfig, mesh: Mesh, settings: TrainSettings):
@@ -106,15 +133,23 @@ def dsc_spec_tree(cfg: ModelConfig, mesh: Mesh, settings: TrainSettings):
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
     tp_spec_tree = sh.tp_specs(cfg, int(sizes.get("model", 1)))
     if not settings.use_dsc:
-        return jax.tree.map(lambda s: P(), tp_spec_tree)
-    ca = sh.client_axes(mesh)
-    caxis = ca if len(ca) > 1 else ca[0]
-    return {
-        "s_clients": jax.tree.map(
-            lambda s: sh.dsc_store_spec(s, caxis), tp_spec_tree),
-        "s_agg": (sh.store_specs(cfg, mesh) if settings.fsa
-                  else sh.tp_param_in_specs(cfg, mesh)),
-    }
+        specs = jax.tree.map(lambda s: P(), tp_spec_tree)
+    else:
+        ca = sh.client_axes(mesh)
+        caxis = ca if len(ca) > 1 else ca[0]
+        specs = {
+            "s_clients": jax.tree.map(
+                lambda s: sh.dsc_store_spec(s, caxis), tp_spec_tree),
+            "s_agg": (sh.store_specs(cfg, mesh) if settings.fsa
+                      else sh.tp_param_in_specs(cfg, mesh)),
+        }
+    if settings.async_buffer:
+        # the FedBuff buffer rides the same state tree: the accumulator
+        # lives in the aggregators' segment layout (each position buffers
+        # its own disjoint shard); weight/round counters are replicated
+        return {"dsc": specs,
+                "buffer": sh.buffer_spec_tree(cfg, mesh, fsa=settings.fsa)}
+    return specs
 
 
 def _client_size(mesh: Mesh) -> int:
@@ -144,7 +179,7 @@ def _quant_block_b(n_blocks: int) -> int:
 
 def _int8_wire_exchange(v: jax.Array, dim: int, seed: jax.Array,
                         caxis, n_client: int,
-                        need_round_trip: bool):
+                        need_round_trip: bool, omega=None):
     """The int8 reduce-scatter stage for one leaf.
 
     Splits ``v`` into its n_client FSA segments, quantizes each segment
@@ -182,7 +217,12 @@ def _int8_wire_exchange(v: jax.Array, dim: int, seed: jax.Array,
     q_rx = jax.lax.all_to_all(q, caxis, 0, 0, tiled=True)
     s_rx = jax.lax.all_to_all(scale, caxis, 0, 0, tiled=True)
     rx_rows = deq(q_rx, s_rx)                         # (n_client, m) views
-    my = rx_rows.mean(0)                              # aggregator-side sum
+    if omega is None:
+        my = rx_rows.mean(0)                          # aggregator-side sum
+    else:
+        # staleness/dropout-weighted arrivals (async buffer): each row is
+        # one client's segment, discounted by its arrival weight
+        my = jnp.einsum("k,km->m", omega, rx_rows) / n_client
     shard_shape = list(v.shape)
     shard_shape[dim] //= n_client
     return my.reshape(shard_shape), v_hat, rx_rows
@@ -238,6 +278,15 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh, opt: Optimizer,
     # fully-manual region — the model axis is manual like every other.
     if cfg.attn_batch_shard:
         cfg = dataclasses.replace(cfg, attn_batch_shard=False)
+    if settings.async_buffer and settings.use_dsc:
+        raise ValueError(
+            "async_buffer does not compose with use_dsc: the Eq. 4 shift "
+            "state tracks per-round aggregator receipts, which a cadence-"
+            "delayed buffered apply breaks (int8_wire is the stateless "
+            "wire format that does compose)")
+    if settings.async_buffer and settings.buffer_cadence < 1:
+        raise ValueError(f"buffer_cadence must be >= 1, got "
+                         f"{settings.buffer_cadence}")
     ca = sh.client_axes(mesh)
     caxis = ca if len(ca) > 1 else ca[0]
     n_client = _client_size(mesh)
@@ -264,6 +313,18 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh, opt: Optimizer,
         # coordinate (axis_index lowers to an unsupported PartitionId
         # under manual SPMD, so both ride in as sharded inputs instead).
         aidx = aidx_arr[0]
+        buf_ref = None
+        if settings.async_buffer:
+            buf_ref, dsc_ref = dsc_ref["buffer"], dsc_ref["dsc"]
+        # async arrivals: the SAME ArrivalModel draw the simulator's
+        # BufferedAggregate runs, keyed on the replicated round key (no
+        # aidx fold — every mesh position must agree on who arrived)
+        arrival = settings.arrival_model()
+        alive = omega = w_round = None
+        if settings.async_buffer and not arrival.trivial:
+            _, alive, omega = arrival.draw(
+                jax.random.fold_in(key, ARRIVAL_SALT), n_client)
+            w_round = omega.mean()
         if use_tp:
             tp_rt = tr.TPRuntime("model", model_size, midx_arr[0], tp_plan)
             loss_val, grads = jax.value_and_grad(loss_fn)(params, batch,
@@ -294,6 +355,13 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh, opt: Optimizer,
         def wire_seed(i):
             k = jax.random.fold_in(jax.random.fold_in(key, 0x3177 + i), aidx)
             return jax.random.bits(k, dtype=jnp.uint32)
+
+        def tap(rx):
+            # adversary view of this leaf's received rows: a dropped
+            # client transmitted nothing, so its captured row is zeroed
+            if alive is not None:
+                rx = rx * alive[:, None].astype(rx.dtype)
+            return rx[None]
 
         out_leaves, refs_new, views = [], [], {}
         for i, (g, s_stk, dim) in enumerate(zip(leaves, refs, dims)):
@@ -339,12 +407,18 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh, opt: Optimizer,
             if int8:
                 agg, _, rx = _int8_wire_exchange(
                     g, dim, wire_seed(i), caxis, n_client,
-                    need_round_trip=False)
+                    need_round_trip=False, omega=omega)
                 out_leaves.append(agg)
                 if capture:
-                    views[str(i)] = rx[None]
+                    views[str(i)] = tap(rx)
                 continue
             # un-quantized path: reduce-scatter in grad_dtype
+            if omega is not None and not (capture and dim >= 0):
+                # arrival-weighted FSA without the view tap: discount the
+                # own contribution BEFORE the reduce (each client-axis
+                # position is one client; the collective sums the
+                # weighted rows)
+                g = g * omega[aidx].astype(g.dtype)
             g = g.astype(settings.grad_dtype)
             if settings.fsa and dim >= 0:
                 if capture:
@@ -354,10 +428,13 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh, opt: Optimizer,
                     # aggregator-side — same result, exposed payload
                     rows = sh.split_shards(g, dim, n_client)
                     rx = jax.lax.all_to_all(rows, caxis, 0, 0, tiled=True)
-                    views[str(i)] = rx[None].astype(jnp.float32)
+                    views[str(i)] = tap(rx).astype(jnp.float32)
                     shard_shape = list(g.shape)
                     shard_shape[dim] //= n_client
-                    out_leaves.append(rx.mean(0).reshape(shard_shape))
+                    agg_row = (rx.mean(0) if omega is None else
+                               jnp.einsum("k,km->m", omega.astype(rx.dtype),
+                                          rx) / n_client)
+                    out_leaves.append(agg_row.reshape(shard_shape))
                     continue
                 g = jax.lax.psum_scatter(g, caxis, scatter_dimension=dim,
                                          tiled=True)
@@ -381,6 +458,31 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh, opt: Optimizer,
             dsc_ref = {"s_clients": jax.tree.unflatten(treedef, refs_new),
                        "s_agg": s_agg}
 
+        # --- FedBuff buffer fold + cadence gate (async runtime) ----------
+        do_apply = None
+        if settings.async_buffer:
+            # fold this round's arrival-weighted aggregate into the
+            # buffer; the effective update is the buffer mean on apply
+            # rounds and exactly zero in between.  Trivial arrivals +
+            # cadence 1 make every step here an IEEE-exact identity
+            # (0 + 1.0*u, u / 1.0), so the synchronous trajectory is
+            # reproduced bit-for-bit.
+            w_r = jnp.ones(()) if w_round is None else w_round
+            u_acc = jax.tree.map(
+                lambda b, g: b + w_r * g.astype(b.dtype),
+                buf_ref["u"], grads)
+            w_acc = buf_ref["w"] + w_r
+            t_new = buf_ref["t"] + 1
+            do_apply = (t_new % settings.buffer_cadence) == 0
+            grads = jax.tree.map(
+                lambda u: jnp.where(do_apply,
+                                    u / jnp.maximum(w_acc, 1e-12), 0.0),
+                u_acc)
+            buf_ref = {"u": jax.tree.map(
+                           lambda u: jnp.where(do_apply, 0.0, u), u_acc),
+                       "w": jnp.where(do_apply, 0.0, w_acc),
+                       "t": t_new}
+
         # --- shard-local optimizer on this aggregator's segment ----------
         def my_shard(p, dim):
             if not settings.fsa or dim < 0:
@@ -393,8 +495,18 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh, opt: Optimizer,
                         if settings.fsa else params)
         grads = jax.tree.map(lambda g, p: g.astype(p.dtype), grads,
                              params_shard)
-        delta, opt_state = opt.update(grads, opt_state, params_shard)
-        params_shard = jax.tree.map(jnp.add, params_shard, delta)
+        delta, opt_state_new = opt.update(grads, opt_state, params_shard)
+        params_new = jax.tree.map(jnp.add, params_shard, delta)
+        if settings.async_buffer and settings.buffer_cadence > 1:
+            # the server consumes the buffer only on cadence rounds:
+            # params and optimizer state hold still in between
+            params_new = jax.tree.map(
+                lambda a, b: jnp.where(do_apply, a, b),
+                params_new, params_shard)
+            opt_state_new = jax.tree.map(
+                lambda a, b: jnp.where(do_apply, a, b),
+                opt_state_new, opt_state)
+        params_shard, opt_state = params_new, opt_state_new
 
         sq = [jnp.sum(jnp.square(g.astype(jnp.float32)))
               for g in jax.tree.leaves(grads)]
@@ -411,9 +523,11 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh, opt: Optimizer,
         gnorm = jax.lax.psum(gn2, caxis) ** 0.5 \
             if settings.fsa else jnp.sqrt(gn2)
         metrics = {"loss": loss_val.astype(jnp.float32), "grad_norm": gnorm}
+        state_out = ({"dsc": dsc_ref, "buffer": buf_ref}
+                     if settings.async_buffer else dsc_ref)
         if capture:
-            return params_shard, opt_state, dsc_ref, metrics, views
-        return params_shard, opt_state, dsc_ref, metrics
+            return params_shard, opt_state, state_out, metrics, views
+        return params_shard, opt_state, state_out, metrics
 
     # ------------------------- shard_map specs ---------------------------
     params_abs = jax.eval_shape(
@@ -503,6 +617,14 @@ def abstract_train_state(cfg: ModelConfig, mesh: Mesh, opt: Optimizer,
     else:
         dsc_global = jax.tree.map(
             lambda p: jax.ShapeDtypeStruct((), jnp.float32), params)
+    if settings.async_buffer:
+        dsc_global = {"dsc": dsc_global, "buffer": {
+            "u": jax.tree.map(
+                lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32),
+                params),
+            "w": jax.ShapeDtypeStruct((), jnp.float32),
+            "t": jax.ShapeDtypeStruct((), jnp.int32),
+        }}
     return params, opt_state_global, dsc_global
 
 
@@ -515,16 +637,26 @@ def init_dsc_state(cfg: ModelConfig, mesh: Mesh,
     params_abs = jax.eval_shape(
         functools.partial(tr.init_params, cfg=cfg), jax.random.PRNGKey(0))
     if not settings.use_dsc:
-        return jax.tree.map(lambda p: jnp.zeros((), jnp.float32),
+        refs = jax.tree.map(lambda p: jnp.zeros((), jnp.float32),
                             params_abs)
-    n_client = _client_size(mesh)
-    sdt = sh.shift_state_dtype(settings.shift_dtype)
-    refs = {
-        "s_clients": jax.tree.map(
-            lambda p: jnp.zeros((n_client, *p.shape), sdt), params_abs),
-        "s_agg": jax.tree.map(
-            lambda p: jnp.zeros(p.shape, sdt), params_abs),
-    }
+        if not settings.async_buffer:
+            return refs
+    else:
+        n_client = _client_size(mesh)
+        sdt = sh.shift_state_dtype(settings.shift_dtype)
+        refs = {
+            "s_clients": jax.tree.map(
+                lambda p: jnp.zeros((n_client, *p.shape), sdt), params_abs),
+            "s_agg": jax.tree.map(
+                lambda p: jnp.zeros(p.shape, sdt), params_abs),
+        }
+    if settings.async_buffer:
+        refs = {"dsc": refs, "buffer": {
+            "u": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params_abs),
+            "w": jnp.zeros(()),
+            "t": jnp.zeros((), jnp.int32),
+        }}
     shardings = jax.tree.map(
         lambda s: NamedSharding(mesh, s),
         dsc_spec_tree(cfg, mesh, settings),

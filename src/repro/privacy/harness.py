@@ -39,6 +39,7 @@ class AuditSpec:
     int8_wire: bool = False    # int8 wire round trip in the payload
     p: float = 1.0             # DSC RandP retention (Fig. 2 right)
     a_c: int = 1               # colluding coalition size (Cor. D.2)
+    q: float = 1.0             # per-round client participation prob.
     lr: float = 0.4
     seed: int = 0
     mask_scheme: str = "strided"
@@ -48,12 +49,18 @@ class AuditSpec:
 def fl_config(spec: AuditSpec) -> FLConfig:
     """The eris run whose views the audit attacks: literal FSA with
     materialized aggregator views, composing DSC and/or the int8 wire
-    exactly as the production wire does."""
+    exactly as the production wire does.  ``q < 1`` switches to the
+    buffered async engine (``eris_async``) with an i.i.d. Bernoulli(q)
+    arrival model — the client participates in each round independently
+    with probability q, and an aggregator's view of a skipped round is
+    identically zero (privacy amplification by subsampling)."""
     comp = RandP(p=spec.p) if (spec.use_dsc and spec.p < 1.0) else Identity()
-    return FLConfig(method="eris", K=spec.K, A=spec.A, rounds=spec.rounds,
+    method = "eris" if spec.q >= 1.0 else "eris_async"
+    extra = {} if spec.q >= 1.0 else {"client_dropout": 1.0 - spec.q}
+    return FLConfig(method=method, K=spec.K, A=spec.A, rounds=spec.rounds,
                     lr=spec.lr, seed=spec.seed, use_dsc=spec.use_dsc,
                     int8_wire=spec.int8_wire, compressor=comp,
-                    mask_scheme=spec.mask_scheme, keep_views=True)
+                    mask_scheme=spec.mask_scheme, keep_views=True, **extra)
 
 
 def capture_run(spec: AuditSpec, params0, loss_fn, client_batches):
@@ -154,7 +161,9 @@ def _audit_captured(spec: AuditSpec, run, x_traj, views, grad_fn,
         jax.random.fold_in(jax.random.PRNGKey(spec.seed), key_salt),
         grad_fn, x_traj, v, obs, members, non,
         n_bootstrap=spec.n_bootstrap)
-    res["mi_bound"] = privacy.mi_bound(
+    # amplification by subsampling: each round leaks with prob. q, so
+    # the linear-in-T Thm 3.3 budget scales by the participation rate
+    res["mi_bound"] = spec.q * privacy.mi_bound(
         run.n, spec.rounds, spec.p if spec.use_dsc else 1.0, spec.A,
         a_c=spec.a_c)
     return res
@@ -170,6 +179,19 @@ def mia_mlp(spec: AuditSpec, dim: int = 8, classes: int = 3) -> dict:
         run.unravel(xf), (c[:-1][None], c[-1][None].astype(jnp.int32))))
     return _audit_captured(spec, run, x_traj, views, grad_fn, members,
                            non, 0xA0D1)
+
+
+def mia_mlp_sampling(spec: AuditSpec, q_grid, dim: int = 8,
+                     classes: int = 3) -> dict:
+    """Sampling-amplified leakage curve: the MIA audit at fixed A as a
+    function of the per-round participation probability q (q = 1 is the
+    synchronous engine; q < 1 the buffered async engine, whose arrival
+    model zeroes a skipped client's wire rows — the adversary view of a
+    skipped round carries nothing).  Returns {q: mia_mlp metrics}, each
+    with the q-amplified Thm 3.3 bound."""
+    return {float(q): mia_mlp(dataclasses.replace(spec, q=float(q)),
+                              dim=dim, classes=classes)
+            for q in q_grid}
 
 
 def mia_mlp_collusion_sweep(spec: AuditSpec, dim: int = 8,

@@ -1,0 +1,278 @@
+"""Buffered-aggregate (FedBuff-style) property battery.
+
+The async runtime's correctness contract, locked down as properties:
+bit-exact degeneracy to the synchronous engines (trivial arrivals +
+cadence 1), the closed-form staleness discount, the T-round buffer fold
+against an unrolled NumPy reference, dropout contributing exactly
+nothing, and the registry-level composition rules (DSC/EF refuse the
+async wrapper, cohort knobs validate).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import pipeline as pl
+from repro.core.fl import FLConfig, FLRun
+from repro.core.rounds import build_round
+
+KEY = jax.random.PRNGKey(0)
+
+
+def quad_problem(K: int = 4, n: int = 48):
+    ka, kb = jax.random.split(KEY)
+    a = 1.0 + jax.random.uniform(ka, (K, n))
+    b = jax.random.normal(kb, (K, n))
+
+    def loss_fn(params, batch):
+        r = batch["a"] * params["w"] - batch["b"]
+        return 0.5 * jnp.mean(r * r)
+
+    return {"w": jnp.zeros(n)}, loss_fn, {"a": a, "b": b}
+
+
+# ------------------------------------------------- closed-form weights
+@settings(max_examples=10, deadline=None)
+@given(alpha=st.floats(0.0, 3.0), delay_max=st.integers(0, 6),
+       dropout=st.floats(0.0, 0.9), seed=st.integers(0, 2 ** 16))
+def test_staleness_weights_match_closed_form(alpha, delay_max, dropout,
+                                             seed):
+    """omega_k = alive_k / (1 + tau_k)^alpha, tau in {0..delay_max}."""
+    am = pl.ArrivalModel(delay_max=delay_max, dropout=dropout, alpha=alpha)
+    tau, alive, omega = am.draw(jax.random.PRNGKey(seed), 32)
+    tau, alive, omega = (np.asarray(z) for z in (tau, alive, omega))
+    assert tau.min() >= 0 and tau.max() <= delay_max
+    np.testing.assert_allclose(
+        omega, alive * (1.0 + tau) ** (-alpha), rtol=1e-6)
+    # trivial exactly when no staleness AND no dropout
+    assert am.trivial == (delay_max == 0 and dropout == 0.0)
+
+
+# ------------------------------------------ bit-exact degenerate cases
+def _trajectory(cfg, T=5):
+    params0, loss_fn, batches = quad_problem(K=cfg.K)
+    run = FLRun(cfg, params0, loss_fn)
+    stacked = jax.tree.map(lambda x: jnp.stack([x] * T), batches)
+    xs = run.run_scanned(stacked)
+    return np.asarray(xs)
+
+
+def test_fedbuff_degenerates_to_fedavg_bit_exact():
+    """Trivial arrivals + cadence 1: the buffer fold is `0 + 1.0*u` and
+    `u / 1.0` — IEEE-exact identities — so fedbuff IS fedavg, bitwise."""
+    sync = _trajectory(FLConfig(method="fedavg", K=4, lr=0.05, seed=7))
+    async_ = _trajectory(FLConfig(method="fedbuff", K=4, lr=0.05, seed=7))
+    assert np.array_equal(sync, async_)
+
+
+def test_eris_async_degenerates_to_eris_bit_exact():
+    sync = _trajectory(FLConfig(method="eris", K=4, A=2, lr=0.05, seed=7))
+    async_ = _trajectory(FLConfig(method="eris_async", K=4, A=2, lr=0.05,
+                                  seed=7))
+    assert np.array_equal(sync, async_)
+
+
+def test_int8_wire_composes_with_fedbuff_bit_exact():
+    """The int8 wire is stateless, so it rides through the buffered
+    wrapper unchanged — degenerate fedbuff+int8 == the synchronous
+    int8 pipeline (eris with A=1-style mean aggregation; plain fedavg
+    does not consume ``int8_wire``)."""
+    sync = _trajectory(FLConfig(method="eris", K=4, lr=0.05,
+                                int8_wire=True, seed=9))
+    async_ = _trajectory(FLConfig(method="fedbuff", K=4, lr=0.05,
+                                  int8_wire=True, seed=9))
+    assert np.array_equal(sync, async_)
+
+
+# ------------------------------------------- unrolled NumPy reference
+def _numpy_fold(stage, keys_list, vs, weights_list):
+    """The BufferedAggregate contract, unrolled in NumPy float64."""
+    n = vs[0].shape[1]
+    u, w, t = np.zeros(n), 0.0, 0
+    outs = []
+    for keys, v, weights in zip(keys_list, vs, weights_list):
+        K = v.shape[0]
+        v = np.asarray(v, np.float64)
+        if stage.arrival.trivial:
+            base = (np.asarray(weights, np.float64) if weights is not None
+                    else np.full(K, 1.0 / K))
+            contrib = (base / base.sum()) @ v
+            w_round = 1.0
+        else:
+            k_arr = jax.random.fold_in(getattr(keys, stage.key_role),
+                                       pl.ARRIVAL_SALT)
+            _, alive, omega = stage.arrival.draw(k_arr, K)
+            alive = np.asarray(alive)
+            omega = np.asarray(omega, np.float64)
+            base = (np.asarray(weights, np.float64) if weights is not None
+                    else np.ones(K))
+            w_eff = base * omega
+            v = v * alive[:, None]
+            if w_eff.sum() > 0:
+                contrib = (w_eff / w_eff.sum()) @ v
+                w_round = w_eff.sum() / base.sum()
+            else:
+                contrib, w_round = np.zeros(n), 0.0
+        u = u + w_round * contrib
+        w = w + w_round
+        t += 1
+        if t % stage.cadence == 0:
+            outs.append(u / max(w, 1e-12))
+            u, w = np.zeros(n), 0.0
+        else:
+            outs.append(np.zeros(n))
+    return outs
+
+
+@settings(max_examples=8, deadline=None)
+@given(cadence=st.sampled_from([1, 2, 3]),
+       delay_max=st.integers(0, 4),
+       dropout=st.sampled_from([0.0, 0.4]),
+       alpha=st.floats(0.3, 2.0),
+       weighted=st.booleans(),
+       seed=st.integers(0, 2 ** 16))
+def test_buffer_fold_matches_unrolled_numpy(cadence, delay_max, dropout,
+                                            alpha, weighted, seed):
+    """T rounds through BufferedAggregate.apply == the unrolled NumPy
+    reference: same arrival draws (shared key discipline), same
+    staleness-weighted buffer mass, same cadence-gated emission."""
+    K, n, T = 5, 12, 6
+    stage = pl.BufferedAggregate(
+        inner=pl.AggregateStage(use_weights=True),
+        arrival=pl.ArrivalModel(delay_max=delay_max, dropout=dropout,
+                                alpha=alpha),
+        cadence=cadence)
+    state = pl.RoundPipeline(aggregate=stage).init_state(jnp.zeros(n), K)
+    key = jax.random.PRNGKey(seed)
+    keys_list, vs, ws = [], [], []
+    for r in range(T):
+        kr = jax.random.fold_in(key, r)
+        keys_list.append(pl.split_round_keys(kr))
+        vs.append(jax.random.normal(jax.random.fold_in(kr, 1), (K, n)))
+        ws.append(1.0 + jax.random.uniform(jax.random.fold_in(kr, 2),
+                                           (K,)) if weighted else None)
+    want = _numpy_fold(stage, keys_list, vs, ws)
+    got = []
+    for keys, v, w in zip(keys_list, vs, ws):
+        res = stage.apply(keys, state, v, w)
+        state = res.state
+        got.append(np.asarray(res.update))
+    np.testing.assert_allclose(np.stack(got), np.stack(want),
+                               rtol=1e-5, atol=1e-6)
+    # the buffer reset exactly on apply rounds
+    if T % cadence == 0:
+        assert float(state.buf.w) == 0.0
+        np.testing.assert_array_equal(np.asarray(state.buf.u), 0.0)
+    assert int(state.buf.t) == T
+
+
+def test_cadence_gates_server_movement():
+    """Between apply rounds the emitted update is exactly zero: the
+    model moves only every `cadence` rounds."""
+    cfg = FLConfig(method="fedbuff", K=4, lr=0.05, buffer_cadence=3,
+                   seed=1)
+    params0, loss_fn, batches = quad_problem()
+    run = FLRun(cfg, params0, loss_fn)
+    prev = np.asarray(run.x)
+    moved = []
+    for _ in range(6):
+        run.step(batches)
+        cur = np.asarray(run.x)
+        moved.append(not np.array_equal(cur, prev))
+        prev = cur
+    assert moved == [False, False, True, False, False, True]
+
+
+def test_dropout_never_contributes():
+    """dropout=1.0: every arrival dies, w_round == 0, the buffer stays
+    empty, and the model NEVER moves — a dropped client (and a fully
+    dropped cohort) contributes nothing, not a zero-mean something."""
+    cfg = FLConfig(method="fedbuff", K=4, lr=0.05, client_dropout=1.0,
+                   seed=2)
+    params0, loss_fn, batches = quad_problem()
+    run = FLRun(cfg, params0, loss_fn)
+    x0 = np.asarray(run.x)
+    for _ in range(4):
+        run.step(batches)
+    assert np.array_equal(np.asarray(run.x), x0)
+
+    # direct stage check: the buffer mass stays identically zero
+    stage = pl.BufferedAggregate(arrival=pl.ArrivalModel(dropout=1.0))
+    state = pl.RoundPipeline(aggregate=stage).init_state(jnp.zeros(8), 3)
+    keys = pl.split_round_keys(KEY)
+    res = stage.apply(keys, state, jnp.ones((3, 8)), None)
+    assert float(res.state.buf.w) == 0.0
+    np.testing.assert_array_equal(np.asarray(res.update), 0.0)
+
+
+def test_partial_dropout_masks_dead_rows():
+    """A dropped client's transmitted row is hard-zeroed before the
+    inner aggregate: resurrecting it in v must not change the result."""
+    K, n = 6, 10
+    stage = pl.BufferedAggregate(
+        arrival=pl.ArrivalModel(dropout=0.5), cadence=1)
+    keys = pl.split_round_keys(jax.random.fold_in(KEY, 3))
+    k_arr = jax.random.fold_in(getattr(keys, stage.key_role),
+                               pl.ARRIVAL_SALT)
+    _, alive, _ = stage.arrival.draw(k_arr, K)
+    alive = np.asarray(alive)
+    assert 0 < alive.sum() < K          # seed chosen to mix dead/alive
+    v = jax.random.normal(jax.random.fold_in(KEY, 4), (K, n))
+    state = pl.RoundPipeline(aggregate=stage).init_state(jnp.zeros(n), K)
+    poisoned = v.at[~alive].set(1e6)    # dead rows carry garbage
+    a = stage.apply(keys, state, v, None)
+    b = stage.apply(keys, state, poisoned, None)
+    np.testing.assert_array_equal(np.asarray(a.update),
+                                  np.asarray(b.update))
+
+
+# ----------------------------------------------- composition contracts
+def test_async_refuses_dsc_and_ef():
+    """Cadence-delayed apply breaks the Eq. 4 shift-state bookkeeping
+    (s_agg tracks per-round aggregator receipts), so the registry
+    refuses to compose DSC or EF inside the async wrapper."""
+    for kw in (dict(use_dsc=True), dict(use_ef=True)):
+        try:
+            build_round(FLConfig(method="eris_async", K=4, **kw), 16)
+        except ValueError as e:
+            assert "async" in str(e).lower() or "DSC" in str(e) \
+                or "EF" in str(e)
+        else:
+            raise AssertionError(kw)
+
+
+def test_buffered_aggregate_validates():
+    try:
+        pl.BufferedAggregate(cadence=0)
+    except ValueError:
+        pass
+    else:
+        raise AssertionError("cadence=0 must be rejected")
+    try:
+        pl.BufferedAggregate(inner=pl.AggregateStage(use_weights=False))
+    except ValueError:
+        pass
+    else:
+        raise AssertionError("weightless inner stage must be rejected")
+    # missing buffer state fails loudly, not silently synchronous
+    stage = pl.BufferedAggregate()
+    state = pl.RoundPipeline().init_state(jnp.zeros(4), 2)
+    try:
+        stage.apply(pl.split_round_keys(KEY), state, jnp.ones((2, 4)),
+                    None)
+    except ValueError as e:
+        assert "buf" in str(e)
+    else:
+        raise AssertionError("missing RoundState.buf must be rejected")
+
+
+def test_population_requires_cohort_fits():
+    try:
+        build_round(FLConfig(method="fedbuff", K=8, population=4), 16)
+    except ValueError:
+        pass
+    else:
+        raise AssertionError("population < K must be rejected")

@@ -98,6 +98,48 @@ def test_step_and_scan_drivers_match(method, A, use_dsc, int8_wire,
                                rtol=1e-5, atol=1e-5)
 
 
+@given(method=st.sampled_from(["fedbuff", "eris_async"]),
+       A=st.sampled_from([1, 2]),
+       cadence=st.sampled_from([1, 2, 3]),
+       population=st.sampled_from([0, 12]),
+       delay_max=st.integers(0, 3),
+       dropout=st.sampled_from([0.0, 0.5]),
+       alpha=st.floats(0.0, 2.0),
+       int8_wire=st.booleans())
+@settings(max_examples=12, deadline=None)
+def test_async_step_and_scan_drivers_match(method, A, cadence, population,
+                                           delay_max, dropout, alpha,
+                                           int8_wire):
+    """ISSUE 7 tentpole contract: the async runtime rides the SAME two
+    drivers.  The buffer/arrival state threaded through the scan carry
+    must reproduce the stepped trajectory for EVERY knob draw — staleness
+    discount, cadence-gated apply, dropout, the int8 wire, and keyed
+    cohort sampling over a 12-client population included."""
+    cfg = FLConfig(method=method, K=4, A=A, lr=0.05, seed=5,
+                   population=population, buffer_cadence=cadence,
+                   staleness_alpha=alpha, delay_max=delay_max,
+                   client_dropout=dropout, int8_wire=int8_wire)
+    # population-scale: batches carry ALL clients; the cohort is drawn
+    params0, loss_fn, batches = quad_problem(K=population or cfg.K)
+    T = 6
+
+    run_a = FLRun(cfg, params0, loss_fn)
+    traj = []
+    for _ in range(T):
+        run_a.step(batches)
+        traj.append(np.asarray(run_a.x))
+
+    run_b = FLRun(cfg, params0, loss_fn)
+    stacked = jax.tree.map(lambda x: jnp.stack([x] * T), batches)
+    xs = run_b.run_scanned(stacked)
+
+    assert not np.any(np.isnan(traj[-1]))
+    np.testing.assert_allclose(np.asarray(xs), np.stack(traj),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(run_b.x), traj[-1],
+                               rtol=1e-5, atol=1e-5)
+
+
 def test_eris_round_step_matches_pipeline_stages():
     """The eris engine's stage list is the registry's: with static masks
     and DSC both compose DSCCompress + the shift-compensated mean, so the

@@ -141,6 +141,48 @@ def test_colluding_views_recover_full_attack_strength():
         assert ci_leq(tuple(ci[i]), tuple(ci[i + 1])), (i, ci)
 
 
+# ------------------------------------- sampling amplification (async)
+def test_mia_sampling_amplification_quick():
+    """AUC vs participation probability q (fixed A, async engine):
+    q = 1 bit-recovers the synchronous audit, q < 1 masks the skipped
+    rounds' wire rows to exactly zero, the amplified Thm 3.3 bound
+    scales linearly in q, and the leakage stays monotone non-decreasing
+    in q within interval tolerance."""
+    kw = dict(A=4, rounds=10, n_canaries=8, n_bootstrap=32, lr=0.5,
+              seed=2)
+    res = harness.mia_mlp_sampling(harness.AuditSpec(**kw),
+                                   (0.25, 1.0))
+    sync = harness.mia_mlp(harness.AuditSpec(**kw))
+    # q = 1 IS the synchronous engine (no arrival model in the pipeline)
+    assert res[1.0]["auc"] == sync["auc"]
+    assert res[1.0]["mi_bound"] == sync["mi_bound"]
+    # the amplified bound is linear in the participation probability
+    np.testing.assert_allclose(res[0.25]["mi_bound"],
+                               0.25 * res[1.0]["mi_bound"], rtol=1e-9)
+    # subsampling must not make the attack stronger (interval-compared)
+    assert ci_leq(res[0.25]["auc_ci"], res[1.0]["auc_ci"]), res
+
+
+def test_sampling_views_zero_on_skipped_rounds():
+    """The async arrival model zeroes EVERY wire row of a dropped
+    client-round: the adversary view of a skipped round carries nothing,
+    and with q = 0.25 over 12 rounds some rounds are actually skipped
+    (keyed draw, deterministic)."""
+    spec = harness.AuditSpec(A=2, rounds=12, K=4, n_canaries=4,
+                             n_bootstrap=0, q=0.25, seed=3)
+    assert harness.fl_config(spec).method == "eris_async"
+    params0, loss_fn, batches, _, _ = harness.mlp_canary_problem(spec)
+    _, _, views = harness.capture_run(spec, params0, loss_fn, batches)
+    mass = np.abs(np.asarray(views)).sum(axis=(1, 3))    # (T, K)
+    alive = mass > 0
+    assert not alive.all() and alive.any()
+    # a round is skipped per client, not per coordinate: the client's
+    # rows are zero across ALL aggregator shards at once
+    per_agg = np.abs(np.asarray(views)).sum(axis=3)      # (T, A, K)
+    assert ((per_agg > 0).all(axis=1) == alive).all()
+    assert ((per_agg > 0).any(axis=1) == alive).all()
+
+
 # ------------------------------------------------ attacking the wire
 def test_dlg_against_int8_wire_not_better_than_f32():
     """DLG against the dequantized int8 payload must not reconstruct
