@@ -25,6 +25,9 @@ MODULES = [
                     "collective bytes + roofline across PRs"),
     ("privacy_snapshot", "committed BENCH_privacy.json: MIA AUC (CIs) + "
                          "DLG MSE vs A / wire / collusion, Thm 3.3 gate"),
+    ("serve_snapshot", "committed BENCH_serve.json: ServeEngine tokens/s "
+                       "+ p50/p99 latency vs concurrency, batching-"
+                       "invariance + block-budget gates"),
 ]
 
 

@@ -1,0 +1,178 @@
+"""Serving perf snapshot: commit the continuous-batching trajectory.
+
+Runs the real :class:`repro.serve.ServeEngine` (paged KV cache + Pallas
+decode attention, CPU interpret mode) over a deterministic request set
+at a sweep of concurrency levels and distills the result into a
+committed ``BENCH_serve.json`` at the repo root — tokens/s and p50/p99
+request latency vs concurrency — so the serving trajectory is recorded
+ACROSS PRs instead of living only in CI artifact retention.
+
+Gates (``--check``, the nightly job):
+
+* HARD — decode output at every concurrency is token-identical to the
+  concurrency-1 run (the engine's batching-invariance contract);
+* HARD — ``peak_blocks`` never exceeds the block budget;
+* HARD — the fresh entries carry the committed schema and the committed
+  ``token_checksum`` (a lowering/numerics change that moves greedy
+  decode shows up as a checksum drift — regen + commit when expected);
+* INFORMATIONAL — throughput/latency numbers (wall-clock varies per
+  machine; they are recorded, uploaded, and eyeballed, never gated).
+
+``--hist PATH`` additionally writes the per-request latency histogram
+(one row per concurrency) for the nightly artifact upload.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import time
+from pathlib import Path
+
+SNAPSHOT = Path(__file__).resolve().parent.parent / "BENCH_serve.json"
+
+CONCURRENCIES = (1, 4, 8, 16)
+N_REQUESTS = 16
+MAX_NEW_TOKENS = 12
+
+
+def _problem():
+    import jax
+    import numpy as np
+    from repro.configs import get_config
+    from repro.models import transformer as tr
+
+    cfg = dataclasses.replace(get_config("qwen2-0.5b").smoke(),
+                              n_layers=2, dtype="float32")
+    params = tr.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab,
+                            size=int(rng.integers(4, 12))).tolist()
+               for _ in range(N_REQUESTS)]
+    return cfg, params, prompts
+
+
+def _settings(concurrency: int):
+    from repro.serve import ServeSettings
+    return ServeSettings(max_concurrency=concurrency, block_size=8,
+                         num_blocks=96, max_model_len=64,
+                         prefill_bucket=16, max_new_tokens=MAX_NEW_TOKENS,
+                         cache_dtype="float32")
+
+
+def _checksum(token_lists) -> str:
+    blob = json.dumps(token_lists, separators=(",", ":")).encode()
+    return hashlib.sha256(blob).hexdigest()[:16]
+
+
+def collect(concurrencies=CONCURRENCIES) -> tuple[dict, dict]:
+    """Run the sweep.  Returns (snapshot entries, latency histograms)."""
+    from repro.serve import ServeEngine
+
+    cfg, params, prompts = _problem()
+    entries, hists, reference = {}, {}, None
+    for c in concurrencies:
+        eng = ServeEngine(cfg, params, _settings(c))
+        t0 = time.perf_counter()
+        outs = eng.run(prompts)
+        wall = time.perf_counter() - t0
+        tokens = [o.tokens for o in outs]
+        if reference is None:
+            reference = tokens
+        elif tokens != reference:
+            bad = [i for i, (a, b) in enumerate(zip(tokens, reference))
+                   if a != b]
+            raise AssertionError(
+                f"concurrency={c} diverged from the concurrency-1 decode "
+                f"on request(s) {bad} — batching invariance broken")
+        st = eng.stats()
+        if st["peak_blocks"] > st["block_capacity"]:
+            raise AssertionError(
+                f"concurrency={c}: peak_blocks {st['peak_blocks']} "
+                f"exceeds budget {st['block_capacity']}")
+        lat = sorted(o.latency_s for o in outs)
+        n = len(lat)
+        entries[f"qwen2-smoke/c{c}"] = {
+            "concurrency": c,
+            "n_requests": n,
+            "new_tokens": sum(len(t) for t in tokens),
+            "decode_steps": st["steps"],
+            "peak_blocks": st["peak_blocks"],
+            "block_capacity": st["block_capacity"],
+            "preemptions": sum(o.preemptions for o in outs),
+            "tokens_per_s": round(sum(len(t) for t in tokens) / wall, 2),
+            "p50_ms": round(lat[n // 2] * 1e3, 2),
+            "p99_ms": round(lat[min(n - 1, (99 * n) // 100)] * 1e3, 2),
+            "token_checksum": _checksum(tokens),
+        }
+        hists[str(c)] = {"latency_s": [round(x, 4) for x in lat],
+                         "ttft_s": [round(o.ttft_s, 4) for o in outs]}
+    return entries, hists
+
+
+def check_drift(committed: dict, fresh: dict) -> list[str]:
+    """Schema + checksum gate against the committed snapshot (throughput
+    fields are informational and never compared)."""
+    fails = []
+    missing = set(committed) - set(fresh)
+    if missing:
+        fails.append(f"committed entries not regenerated: {sorted(missing)}")
+    for key in sorted(set(committed) & set(fresh)):
+        old, new = committed[key], fresh[key]
+        if set(old) != set(new):
+            fails.append(f"{key}: schema drift "
+                         f"{sorted(set(old) ^ set(new))}")
+            continue
+        if old["token_checksum"] != new["token_checksum"]:
+            fails.append(f"{key}: token_checksum "
+                         f"{old['token_checksum']} -> "
+                         f"{new['token_checksum']} — greedy decode moved; "
+                         f"regen + commit BENCH_serve.json if intended")
+    return fails
+
+
+def run(quick: bool = True):
+    """benchmarks/run.py protocol: one row per concurrency level."""
+    entries, _ = collect(CONCURRENCIES[:2] if quick else CONCURRENCIES)
+    return [{
+        "name": f"serve_snapshot/{key}",
+        "us_per_call": 1e6 / max(ent["tokens_per_s"], 1e-9),
+        "derived": (f"c={ent['concurrency']} tok/s={ent['tokens_per_s']} "
+                    f"p50={ent['p50_ms']}ms p99={ent['p99_ms']}ms "
+                    f"blocks={ent['peak_blocks']}/{ent['block_capacity']}"),
+    } for key, ent in entries.items()]
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=str(SNAPSHOT))
+    ap.add_argument("--regen", action="store_true",
+                    help="rewrite the snapshot from a fresh sweep")
+    ap.add_argument("--check", action="store_true",
+                    help="fail (exit 1) on batching-invariance / block "
+                         "budget violations or schema/checksum drift vs "
+                         "the committed snapshot")
+    ap.add_argument("--hist", default=None, metavar="PATH",
+                    help="write per-request latency histograms (JSON)")
+    args = ap.parse_args()
+    path = Path(args.out)
+    committed = json.loads(path.read_text()) if path.exists() else {}
+    fresh, hists = collect()
+    if args.hist:
+        Path(args.hist).parent.mkdir(parents=True, exist_ok=True)
+        Path(args.hist).write_text(json.dumps(hists, indent=1) + "\n")
+        print(f"wrote latency histograms to {args.hist}")
+    if args.regen or not committed:
+        path.write_text(json.dumps(fresh, indent=1, sort_keys=True) + "\n")
+        print(f"wrote {len(fresh)} entries to {path}")
+    if args.check:
+        fails = check_drift(committed, fresh) if committed else []
+        for msg in fails:
+            print(f"SERVE DRIFT: {msg}")
+        if fails:
+            raise SystemExit(1)
+        print(f"serve gate OK: {len(fresh)} entries, batching-invariant, "
+              f"blocks within budget"
+              + (f", {len(set(committed) & set(fresh))} checksums match"
+                 if committed else " (no committed baseline)"))

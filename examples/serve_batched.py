@@ -1,21 +1,27 @@
-"""Batched serving: prefill a batch of requests, then decode tokens
-autoregressively — the serve_step path the decode dry-run shapes lower.
+"""Continuous-batching serving with ``ServeEngine``: requests of mixed
+length share a paged KV cache and a single fixed-shape decode jit —
+admitted as slots free up, evicted the step they finish.
 
-Runs a reduced-family model on CPU with greedy sampling and verifies the
-decoded continuation matches teacher-forced forward logits.
+Runs a reduced-family model on CPU, serves a batch of prompts (greedy
+plus a couple of sampled requests), and verifies the engine's batched
+output is token-identical to serving one request at a time.
 
     PYTHONPATH=src python examples/serve_batched.py --arch qwen2-0.5b \
-        [--batch 4] [--prompt-len 16] [--gen 24]
+        [--requests 8] [--gen 16] [--concurrency 4]
+
+To serve a ``launch/train.py --save`` artifact instead of fresh params:
+
+    PYTHONPATH=src python -m repro.launch.train --smoke --save ckpt/
+    PYTHONPATH=src python examples/serve_batched.py --ckpt ckpt/
 """
 import argparse
-import time
 
 import jax
-import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_config
-from repro.data import lm_token_batches
 from repro.models import transformer as tr
+from repro.serve import SamplingParams, ServeEngine, ServeSettings
 
 KEY = jax.random.PRNGKey(0)
 
@@ -23,55 +29,60 @@ KEY = jax.random.PRNGKey(0)
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-0.5b")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--gen", type=int, default=24)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--concurrency", type=int, default=4)
+    ap.add_argument("--ckpt", default=None,
+                    help="serve a launch/train.py --save artifact")
     args = ap.parse_args()
 
     cfg = get_config(args.arch).smoke()
-    params = tr.init_params(KEY, cfg)
-    prompts = lm_token_batches(jax.random.fold_in(KEY, 1), 1, args.batch,
-                               args.prompt_len, cfg.vocab)[0]
-    max_len = args.prompt_len + args.gen
-    print(f"arch={cfg.name} family={cfg.family} batch={args.batch} "
-          f"prompt={args.prompt_len} gen={args.gen}")
+    settings = ServeSettings(max_concurrency=args.concurrency,
+                             block_size=16, num_blocks=128,
+                             max_model_len=64 + args.gen,
+                             max_new_tokens=args.gen,
+                             cache_dtype="float32")
+    if args.ckpt:
+        engine = ServeEngine.from_checkpoint(args.ckpt, cfg, settings)
+    else:
+        engine = ServeEngine(cfg, tr.init_params(KEY, cfg), settings)
+    print(f"arch={cfg.name} family={cfg.family} "
+          f"requests={args.requests} concurrency={args.concurrency}")
 
-    # ---- prefill: full forward in 'prefill' mode builds the caches ----
-    t0 = time.time()
-    logits, caches, _ = tr.forward(params, cfg, prompts, mode="prefill",
-                                   remat=False)
-    # resize kv caches to max_len (recurrent states are fixed-size)
-    if "kv" in (caches or {}):
-        pad = max_len - args.prompt_len
-        caches["kv"] = {k: jnp.pad(v, ((0, 0), (0, 0), (0, pad),
-                                       (0, 0), (0, 0)))
-                        for k, v in caches["kv"].items()}
-    next_tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
-    print(f"prefill: {time.time()-t0:.2f}s")
+    rng = np.random.default_rng(0)
+    for i in range(args.requests):
+        prompt = rng.integers(0, cfg.vocab,
+                              size=int(rng.integers(4, 24))).tolist()
+        samp = (SamplingParams() if i % 3 else
+                SamplingParams(temperature=0.8, top_k=20, top_p=0.95))
+        engine.submit(prompt, sampling=samp, seed=i)
 
-    # ---- decode loop: one serve_step per generated token ----
-    step = jax.jit(lambda c, t, p: tr.decode_step(params, cfg, c, t, p))
-    out_tokens = [next_tok]
-    t0 = time.time()
-    cache = caches
-    for i in range(args.gen - 1):
-        pos = jnp.int32(args.prompt_len + i)
-        logits, cache = step(cache, out_tokens[-1], pos)
-        out_tokens.append(jnp.argmax(logits[:, -1:], -1).astype(jnp.int32))
-    gen = jnp.concatenate(out_tokens, axis=1)
-    dt = time.time() - t0
-    print(f"decode: {args.gen-1} steps in {dt:.2f}s "
-          f"({(args.gen-1)*args.batch/dt:.1f} tok/s batched)")
+    outs = []
+    while engine.waiting or engine._active():
+        outs.extend(engine.step())
+    outs.sort(key=lambda o: o.rid)
+    st = engine.stats()
+    print(f"decode: {st['steps']} engine steps, {st['tokens_out']} tokens "
+          f"({st['tokens_per_s']:.1f} tok/s), peak blocks "
+          f"{st['peak_blocks']}/{st['block_capacity']}")
 
-    # ---- consistency: teacher-forced forward must agree (greedy path) ----
-    full_seq = jnp.concatenate([prompts, gen], axis=1)
-    full_logits, _, _ = tr.forward(params, cfg, full_seq)
-    tf_next = jnp.argmax(full_logits[:, args.prompt_len - 1:-1], -1)
-    agree = float((tf_next == gen).mean())
-    print(f"greedy decode vs teacher-forced agreement: {agree:.1%}")
-    for b in range(min(2, args.batch)):
-        print(f"  request {b}: prompt={list(map(int, prompts[b][:8]))}... "
-              f"-> generated={list(map(int, gen[b][:10]))}...")
+    # ---- batching invariance: each request alone gives the same stream
+    import dataclasses
+    solo_settings = dataclasses.replace(settings, max_concurrency=1)
+    agree = 0
+    for o in outs:
+        solo = (ServeEngine.from_checkpoint(args.ckpt, cfg, solo_settings)
+                if args.ckpt else
+                ServeEngine(engine.cfg, engine.params, solo_settings))
+        samp = (SamplingParams() if o.rid % 3 else
+                SamplingParams(temperature=0.8, top_k=20, top_p=0.95))
+        solo.submit(o.prompt, sampling=samp, seed=o.rid)
+        agree += solo.run()[0].tokens == o.tokens
+    print(f"batched vs solo token identity: {agree}/{len(outs)}")
+    for o in outs[:2]:
+        print(f"  request {o.rid}: prompt={o.prompt[:8]}... "
+              f"-> generated={o.tokens[:10]}... "
+              f"({o.finish_reason}, ttft {o.ttft_s*1e3:.0f}ms)")
 
 
 if __name__ == "__main__":

@@ -1,1 +1,3 @@
-from repro.checkpoint.msgpack_ckpt import save, restore  # noqa: F401
+from repro.checkpoint.msgpack_ckpt import (save, restore,  # noqa: F401
+                                           save_sharded, restore_sharded,
+                                           restore_any)

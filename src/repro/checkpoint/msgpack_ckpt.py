@@ -1,13 +1,34 @@
-"""Minimal msgpack checkpointing for pytrees of arrays.
+"""msgpack checkpointing for pytrees of arrays — single-file and
+sharded multi-host.
 
-Stores dtype/shape + raw bytes per leaf with the flattened tree path as
-key; restores onto a target structure (shape/dtype checked).  Enough for
-the FL simulator and the examples; a real deployment would swap in
-Orbax/tensorstore behind the same two calls.
+Single-file (:func:`save` / :func:`restore`): dtype/shape + raw bytes
+per leaf with the flattened tree path as key.  Enough for the FL
+simulator and the examples.
+
+Sharded (:func:`save_sharded` / :func:`restore_sharded`): the
+distributed runtime's format and the train->serve handoff.  ``save``
+writes a DIRECTORY:
+
+    manifest.msgpack        global dtype/shape per leaf (process 0)
+    shard-{proc}.msgpack    this process's addressable shards, each as
+                            (start offsets, local bytes)
+
+Every process saves only what it holds (deduplicated by shard index —
+replicated leaves are written once per content, by the lowest
+replica), so no host ever materializes a global array.  ``restore``
+reads manifest + all shard files, assembles each leaf, and — given
+``shardings`` — ``jax.device_put``s it straight into the requested
+layout.  That device_put IS the store->use reshard: ``launch/train.py``
+saves parameters in the FSA store layout (model axis @ TP dim x client
+axes @ scatter dim) and ``ServeEngine`` restores them under the serve
+mesh's ``use`` shardings, whatever mesh shape either side ran on
+(parity across mesh shapes is gated in tests/test_ckpt.py).  A real
+deployment would swap in Orbax/tensorstore behind the same calls.
 """
 from __future__ import annotations
 
 from pathlib import Path
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -43,3 +64,100 @@ def restore(path: str | Path, target):
                              f"{arr.shape} vs {np.shape(leaf)}")
         out.append(jnp.asarray(arr))
     return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ====================================================== sharded checkpoints
+_MANIFEST = "manifest.msgpack"
+
+
+def _shards_of(leaf):
+    """(start_offsets, numpy block) per addressable shard this process
+    should write — one writer per distinct shard index (replica 0)."""
+    if not isinstance(leaf, jax.Array):
+        arr = np.asarray(leaf)
+        return [([0] * arr.ndim, arr)]
+    out = []
+    for s in leaf.addressable_shards:
+        if s.replica_id != 0:
+            continue  # another device holds the identical copy
+        starts = [int(idx.start or 0) for idx in s.index]
+        out.append((starts, np.asarray(s.data)))
+    return out
+
+
+def save_sharded(path: str | Path, tree) -> None:
+    """Write ``tree`` as a checkpoint directory (see module docstring).
+
+    Safe under ``jax.jit``-produced sharded arrays: each process writes
+    only its addressable, replica-0 shards.  Single-process runs produce
+    ``manifest.msgpack`` + ``shard-0.msgpack``.
+    """
+    path = Path(path)
+    path.mkdir(parents=True, exist_ok=True)
+    proc = jax.process_index()
+    manifest, shards = {}, {}
+    for p, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _key(p)
+        arr_dtype = np.dtype(jnp.asarray(leaf).dtype
+                             if isinstance(leaf, jax.Array)
+                             else np.asarray(leaf).dtype)
+        manifest[key] = {"dtype": arr_dtype.name,
+                         "shape": list(np.shape(leaf))}
+        recs = []
+        for starts, block in _shards_of(leaf):
+            recs.append({"start": starts,
+                         "shape": list(block.shape),
+                         "data": np.ascontiguousarray(block).tobytes()})
+        shards[key] = recs
+    (path / f"shard-{proc}.msgpack").write_bytes(msgpack.packb(shards))
+    if proc == 0:
+        (path / _MANIFEST).write_bytes(msgpack.packb(manifest))
+
+
+def restore_sharded(path: str | Path, target, shardings=None):
+    """Assemble a checkpoint directory onto ``target``'s structure.
+
+    ``shardings``: optional pytree (same structure) of
+    ``jax.sharding.Sharding`` — each assembled leaf is ``device_put``
+    under it, which performs the store->use (or any cross-mesh) reshard.
+    Without it, leaves come back as ordinary committed-to-default arrays.
+    """
+    path = Path(path)
+    manifest = msgpack.unpackb((path / _MANIFEST).read_bytes())
+    merged: dict[str, Any] = {}
+    for f in sorted(path.glob("shard-*.msgpack")):
+        for key, recs in msgpack.unpackb(f.read_bytes()).items():
+            merged.setdefault(key, []).extend(recs)
+    paths, treedef = jax.tree_util.tree_flatten_with_path(target)
+    sh_leaves = (jax.tree_util.tree_leaves(
+        shardings, is_leaf=lambda x: x is None)
+        if shardings is not None else [None] * len(paths))
+    out = []
+    for (p, leaf), sh in zip(paths, sh_leaves):
+        key = _key(p)
+        meta = manifest[key]
+        if tuple(meta["shape"]) != tuple(np.shape(leaf)):
+            raise ValueError(f"shape mismatch at {key}: "
+                             f"{tuple(meta['shape'])} vs {np.shape(leaf)}")
+        full = np.zeros(meta["shape"], dtype=meta["dtype"])
+        for rec in merged.get(key, ()):
+            sl = tuple(slice(st, st + sz)
+                       for st, sz in zip(rec["start"], rec["shape"]))
+            full[sl] = np.frombuffer(
+                rec["data"], dtype=meta["dtype"]).reshape(rec["shape"])
+        out.append(jax.device_put(full, sh) if sh is not None
+                   else jnp.asarray(full))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def restore_any(path: str | Path, target, shardings=None):
+    """Dispatch on the checkpoint's format: a directory restores the
+    sharded layout, a single file the legacy one (``shardings`` then
+    applies as a plain post-restore device_put)."""
+    path = Path(path)
+    if path.is_dir():
+        return restore_sharded(path, target, shardings=shardings)
+    tree = restore(path, target)
+    if shardings is not None:
+        tree = jax.tree_util.tree_map(jax.device_put, tree, shardings)
+    return tree

@@ -32,6 +32,7 @@ from repro.core import rounds as rounds_lib
 from repro.core.compressors import Compressor, Identity
 from repro.core.pipeline import (RoundState, participation_weights,
                                  split_round_keys)
+from repro.core.settings import AsyncSettings, resolve_async
 
 
 @dataclasses.dataclass(frozen=True)
@@ -61,7 +62,11 @@ class FLConfig:
     keep_views: bool = False      # materialize (A, K, n) aggregator views
                                   # (eris: routes through literal FSASharded
                                   # — the privacy-audit path)
-    # ---- population-scale async runtime (fedbuff / eris_async methods)
+    # ---- population-scale async runtime (fedbuff / eris_async methods).
+    # The flat fields below are the deprecated spelling of
+    # core.settings.AsyncSettings; prefer attaching one via ``async_``.
+    # Setting a knob in BOTH places to different values raises with the
+    # conflicting field named (core.settings.resolve_async).
     population: int = 0           # >0: batches carry the whole population
                                   # on their leading axis; K becomes the
                                   # per-round cohort size drawn from it
@@ -69,7 +74,12 @@ class FLConfig:
     staleness_alpha: float = 1.0  # arrival weight 1/(1+tau)^alpha
     delay_max: int = 0            # straggler staleness tau ~ U{0..delay_max}
     client_dropout: float = 0.0   # arrival dropout (never contributes)
+    async_: Optional[AsyncSettings] = None
     seed: int = 0
+
+    def async_settings(self) -> AsyncSettings:
+        """The resolved async-runtime knobs (shared with TrainSettings)."""
+        return resolve_async("FLConfig", self.async_, self)
 
 
 class FLRun:

@@ -35,13 +35,12 @@ from typing import Callable
 from repro.core import baselines as bl
 from repro.core import dsc as dsc_lib
 from repro.core.compressors import Int8RoundTrip
-from repro.core.pipeline import (AggregateStage, ArrivalModel,
-                                 BufferedAggregate, ClientStep, CohortSample,
-                                 DSCAggregate, DSCCompress, EFCompress,
-                                 FailureInjectedFSA, FSASharded, Int8Wire,
-                                 LDPNoise, PruneWithhold, RoundPipeline,
-                                 SecureAggAggregate, ServerStage,
-                                 ShatterAggregate)
+from repro.core.pipeline import (AggregateStage, BufferedAggregate,
+                                 ClientStep, DSCAggregate, DSCCompress,
+                                 EFCompress, FailureInjectedFSA, FSASharded,
+                                 Int8Wire, LDPNoise, PruneWithhold,
+                                 RoundPipeline, SecureAggAggregate,
+                                 ServerStage, ShatterAggregate)
 
 
 def _gamma(cfg, n: int) -> float:
@@ -166,7 +165,14 @@ def _as_async(pipeline: RoundPipeline, cfg) -> RoundPipeline:
     """Wrap a synchronous pipeline's aggregate in the FedBuff-style
     buffered stage and (when ``population`` is set) a keyed per-round
     cohort draw.  With the trivial arrival model and ``cadence=1`` the
-    wrapped pipeline is bit-identical to the synchronous one."""
+    wrapped pipeline is bit-identical to the synchronous one.
+
+    The async knobs resolve through :class:`repro.core.settings
+    .AsyncSettings` — the ONE dataclass FLConfig and TrainSettings both
+    consume — so validation (and its field-naming errors) lives in one
+    place.  Duck-typed cfgs without ``async_settings()`` fall back to
+    reading the flat fields directly."""
+    from repro.core.settings import AsyncSettings
     if getattr(cfg, "use_dsc", False) or getattr(cfg, "use_ef", False):
         raise ValueError(
             "buffered async aggregation does not compose with per-client "
@@ -174,19 +180,16 @@ def _as_async(pipeline: RoundPipeline, cfg) -> RoundPipeline:
             "aggregators receive EVERY round, which a cadence-delayed "
             "buffered apply breaks (run use_dsc/use_ef synchronously, or "
             "int8_wire for a stateless wire format)")
-    cohort = None
-    if getattr(cfg, "population", 0):
-        if cfg.population < cfg.K:
-            raise ValueError(f"population ({cfg.population}) must be >= "
-                             f"cohort size K ({cfg.K})")
-        cohort = CohortSample(population=cfg.population, cohort=cfg.K)
-    arrival = ArrivalModel(delay_max=cfg.delay_max,
-                           dropout=cfg.client_dropout,
-                           alpha=cfg.staleness_alpha)
-    aggregate = BufferedAggregate(inner=pipeline.aggregate, arrival=arrival,
-                                  cadence=cfg.buffer_cadence,
+    if hasattr(cfg, "async_settings"):
+        a = cfg.async_settings()
+    else:
+        a = AsyncSettings.from_knobs(cfg)
+    aggregate = BufferedAggregate(inner=pipeline.aggregate,
+                                  arrival=a.arrival_model(),
+                                  cadence=a.buffer_cadence,
                                   key_role="fail")
-    return dataclasses.replace(pipeline, aggregate=aggregate, cohort=cohort)
+    return dataclasses.replace(pipeline, aggregate=aggregate,
+                               cohort=a.cohort(cfg.K))
 
 
 def _build_fedbuff(cfg, n):

@@ -411,3 +411,26 @@ def opt_state_shardings(cfg, mesh: Mesh, opt, params_abs: Any) -> Any:
         state_abs, P())
     return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
                         is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------- serving
+def paged_pool_shardings(cfg, mesh: Mesh) -> Any:
+    """NamedShardings for the serving engine's paged KV pools
+    ((L, N, KV, bs, hd) per layer): kv-heads shard over 'model' when
+    they divide it — the same store/use machinery decision rule as
+    ``_use_spec`` — else the pools replicate.  The block dim N stays
+    unsharded: any request's table may point anywhere in the pool."""
+    model = _model_size(mesh)
+    if model > 1 and cfg.n_kv_heads % model == 0:
+        spec = P(None, None, "model", None, None)
+    else:
+        spec = P()
+    sh = NamedSharding(mesh, spec)
+    return {"k": sh, "v": sh}
+
+
+def serve_batch_shardings(mesh: Mesh) -> NamedSharding:
+    """Sharding for the engine's per-step slot-batched inputs (tokens,
+    context lens, block tables, sampling vectors): leading slot dim over
+    the client axes — the serving twin of ``batch_shardings``."""
+    return NamedSharding(mesh, P(_caxis(mesh)))

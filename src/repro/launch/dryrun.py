@@ -61,7 +61,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
                                            int8_wire=int8_wire)
         lowered = train_lib.lower_train_step(cfg, mesh, shape_name, settings)
     else:
-        lowered = serve_lib.lower_serve_step(cfg, mesh, shape_name)
+        lowered = serve_lib.lower_step(cfg, mesh, shape_name)
     t_lower = time.time() - t0
 
     t0 = time.time()

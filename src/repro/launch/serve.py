@@ -1,13 +1,24 @@
-"""Distributed serve steps: prefill (full forward) + decode (one token).
+"""Serving entry points: ``ServeSettings`` + ``ServeEngine`` + lowering.
 
-Decode shapes lower ``serve_step`` — ONE new token against a KV cache of
-``seq_len`` — per the assignment.  Params are in the *use* layout
-(tensor-parallel, replicated over client axes); caches shard the batch dim
-over client axes and kv-heads/state over 'model'.
+This is the serving twin of ``launch/train.py``: one settings object
+(:class:`repro.serve.ServeSettings`) drives both the online engine
+(:class:`repro.serve.ServeEngine` — continuous batching over the paged
+KV cache) and the static lowering path used by dryruns and HLO audits
+(:func:`lower_step`, which compiles the prefill / single-token decode
+step for a named production shape).
+
+Params are in the *use* layout (tensor-parallel, replicated over client
+axes); caches shard the batch dim over client axes and kv-heads/state
+over 'model'.
+
+The pre-redesign free functions (``make_prefill_step`` /
+``make_decode_step`` / ``lower_serve_step``) remain as deprecated shims
+for one release; new code goes through ``lower_step`` or the engine.
 """
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import Optional
 
 import jax
@@ -17,18 +28,17 @@ from repro.dist import sharding as sh
 from repro.launch import shapes as shp
 from repro.models import transformer as tr
 from repro.models.config import ModelConfig
+from repro.serve import (BlockAllocator, BlockBudgetExceeded,  # noqa: F401
+                         Request, RequestOutput, SamplingParams,
+                         ServeEngine, ServeSettings, beam_search)
 
 
-def make_decode_step(cfg: ModelConfig, mesh: Mesh,
-                     window: Optional[int] = None):
-    def serve_step(params, cache, token, pos):
-        logits, new_cache = tr.decode_step(params, cfg, cache, token, pos,
-                                           window=window)
-        return logits, new_cache
-    return serve_step
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(
+        functools.partial(tr.init_params, cfg=cfg), jax.random.PRNGKey(0))
 
 
-def make_prefill_step(cfg: ModelConfig, mesh: Mesh):
+def _prefill_fn(cfg: ModelConfig):
     def prefill_step(params, batch):
         logits, caches, _ = tr.forward(params, cfg, batch["tokens"],
                                        batch.get("frontend_embeds"),
@@ -38,26 +48,37 @@ def make_prefill_step(cfg: ModelConfig, mesh: Mesh):
     return prefill_step
 
 
-def abstract_params(cfg: ModelConfig):
-    return jax.eval_shape(
-        functools.partial(tr.init_params, cfg=cfg), jax.random.PRNGKey(0))
+def _decode_fn(cfg: ModelConfig, window: Optional[int]):
+    def serve_step(params, cache, token, pos):
+        logits, new_cache = tr.decode_step(params, cfg, cache, token, pos,
+                                           window=window)
+        return logits, new_cache
+    return serve_step
 
 
-def lower_serve_step(cfg: ModelConfig, mesh: Mesh, shape_name: str):
-    """jit(...).lower() of the prefill or decode step for (cfg, shape)."""
+def lower_step(cfg: ModelConfig, mesh: Mesh, shape_name: str,
+               settings: ServeSettings = ServeSettings()):
+    """jit(...).lower() of the prefill or decode step for (cfg, shape).
+
+    The unified lowering surface: the same :class:`ServeSettings` that
+    configures a :class:`ServeEngine` selects the decode attention
+    window here (``settings.window`` overrides the shape default), so a
+    dryrun audits exactly what the engine would run.
+    """
     shape = shp.SHAPES[shape_name]
     params = abstract_params(cfg)
     use = sh.param_shardings(cfg, mesh, "use")
     rep = NamedSharding(mesh, P())
     if shape.kind == "prefill":
-        step = make_prefill_step(cfg, mesh)
+        step = _prefill_fn(cfg)
         batch = shp.input_specs(cfg, shape_name)
         batch_sh = sh.batch_shardings(cfg, mesh, batch)
         jitted = jax.jit(step, in_shardings=(use, batch_sh))
         with mesh:
             return jitted.lower(params, batch)
-    window = shp.decode_window(cfg, shape)
-    step = make_decode_step(cfg, mesh, window)
+    window = (settings.window if settings.window is not None
+              else shp.decode_window(cfg, shape))
+    step = _decode_fn(cfg, window)
     specs = shp.input_specs(cfg, shape_name)
     cache_sh = sh.cache_shardings(cfg, mesh, specs["cache"])
     tok_sh = sh.batch_shardings(cfg, mesh, specs["token"])
@@ -68,3 +89,25 @@ def lower_serve_step(cfg: ModelConfig, mesh: Mesh, shape_name: str):
     with mesh:
         return jitted.lower(params, specs["cache"], specs["token"],
                             specs["pos"])
+
+
+# ------------------------------------------------- deprecated shims (one PR)
+def _deprecated(old: str, new: str) -> None:
+    warnings.warn(f"repro.launch.serve.{old} is deprecated; use {new}",
+                  DeprecationWarning, stacklevel=3)
+
+
+def make_prefill_step(cfg: ModelConfig, mesh: Mesh):
+    _deprecated("make_prefill_step", "lower_step / ServeEngine")
+    return _prefill_fn(cfg)
+
+
+def make_decode_step(cfg: ModelConfig, mesh: Mesh,
+                     window: Optional[int] = None):
+    _deprecated("make_decode_step", "lower_step / ServeEngine")
+    return _decode_fn(cfg, window)
+
+
+def lower_serve_step(cfg: ModelConfig, mesh: Mesh, shape_name: str):
+    _deprecated("lower_serve_step", "lower_step")
+    return lower_step(cfg, mesh, shape_name)

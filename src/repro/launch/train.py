@@ -59,6 +59,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.core.compressors import RandP
 from repro.core.pipeline import (ARRIVAL_SALT, ArrivalModel, CohortSample,
                                  DSCCompress, split_round_keys)
+from repro.core.settings import AsyncSettings, resolve_async
 from repro.dist import sharding as sh
 from repro.launch import shapes as shp
 from repro.models import transformer as tr
@@ -92,16 +93,23 @@ class TrainSettings:
     # dsc-style state tree; params/optimizer apply every buffer_cadence
     # rounds.  Trivial arrivals + cadence 1 == the synchronous step
     # bit-exactly.
+    # The flat fields are the deprecated spelling of
+    # core.settings.AsyncSettings (shared with FLConfig); prefer
+    # attaching one via ``async_``.  A knob set in BOTH places to
+    # different values raises with the conflicting field named.
     async_buffer: bool = False
     buffer_cadence: int = 1
     staleness_alpha: float = 1.0
     delay_max: int = 0
     client_dropout: float = 0.0
+    async_: Optional[AsyncSettings] = None
+
+    def async_settings(self) -> AsyncSettings:
+        """The resolved async-runtime knobs (shared with FLConfig)."""
+        return resolve_async("TrainSettings", self.async_, self)
 
     def arrival_model(self) -> ArrivalModel:
-        return ArrivalModel(delay_max=self.delay_max,
-                            dropout=self.client_dropout,
-                            alpha=self.staleness_alpha)
+        return self.async_settings().arrival_model()
 
 
 def dsc_stage(settings: TrainSettings) -> DSCCompress:
@@ -284,9 +292,9 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh, opt: Optimizer,
             "state tracks per-round aggregator receipts, which a cadence-"
             "delayed buffered apply breaks (int8_wire is the stateless "
             "wire format that does compose)")
-    if settings.async_buffer and settings.buffer_cadence < 1:
-        raise ValueError(f"buffer_cadence must be >= 1, got "
-                         f"{settings.buffer_cadence}")
+    # one validation surface for the async knobs (shared with FLConfig):
+    # raises naming the offending/conflicting field
+    async_cfg = settings.async_settings()
     ca = sh.client_axes(mesh)
     caxis = ca if len(ca) > 1 else ca[0]
     n_client = _client_size(mesh)
@@ -319,7 +327,7 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh, opt: Optimizer,
         # async arrivals: the SAME ArrivalModel draw the simulator's
         # BufferedAggregate runs, keyed on the replicated round key (no
         # aidx fold — every mesh position must agree on who arrived)
-        arrival = settings.arrival_model()
+        arrival = async_cfg.arrival_model()
         alive = omega = w_round = None
         if settings.async_buffer and not arrival.trivial:
             _, alive, omega = arrival.draw(
@@ -473,7 +481,7 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh, opt: Optimizer,
                 buf_ref["u"], grads)
             w_acc = buf_ref["w"] + w_r
             t_new = buf_ref["t"] + 1
-            do_apply = (t_new % settings.buffer_cadence) == 0
+            do_apply = (t_new % async_cfg.buffer_cadence) == 0
             grads = jax.tree.map(
                 lambda u: jnp.where(do_apply,
                                     u / jnp.maximum(w_acc, 1e-12), 0.0),
@@ -497,7 +505,7 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh, opt: Optimizer,
                              params_shard)
         delta, opt_state_new = opt.update(grads, opt_state, params_shard)
         params_new = jax.tree.map(jnp.add, params_shard, delta)
-        if settings.async_buffer and settings.buffer_cadence > 1:
+        if settings.async_buffer and async_cfg.buffer_cadence > 1:
             # the server consumes the buffer only on cadence rounds:
             # params and optimizer state hold still in between
             params_new = jax.tree.map(
@@ -714,6 +722,10 @@ def main():  # pragma: no cover - thin CLI over the factories
     ap.add_argument("--int8-wire", action="store_true")
     ap.add_argument("--data-axis", type=int, default=None)
     ap.add_argument("--model-axis", type=int, default=1)
+    ap.add_argument("--save", default=None, metavar="DIR",
+                    help="write the final params as a sharded checkpoint "
+                         "directory (the ServeEngine.from_checkpoint "
+                         "handoff format)")
     args = ap.parse_args()
     cfg = get_config(args.arch)
     if args.smoke:
@@ -738,6 +750,10 @@ def main():  # pragma: no cover - thin CLI over the factories
                 params, opt_state, dsc_ref, batch, jax.random.PRNGKey(i))
             print(f"step {i:3d} loss={float(m['loss']):.4f} "
                   f"({time.time()-t0:.1f}s)", flush=True)
+        if args.save:
+            from repro.checkpoint import msgpack_ckpt as ck
+            ck.save_sharded(args.save, params)
+            print(f"saved sharded checkpoint -> {args.save}", flush=True)
 
 
 if __name__ == "__main__":

@@ -52,17 +52,17 @@ class ModelConfig:
     attn_batch_shard: bool = False  # context-parallel attention: shard the
                                     # (local) batch over 'model' instead of
                                     # splitting heads (for heads % tp != 0)
-    flash_attention: bool = False   # blocked online-softmax train/prefill
+    flash_attention: bool = True    # blocked online-softmax train/prefill
                                     # attention (custom-VJP Pallas kernel;
                                     # falls back to chunked when the shape
-                                    # doesn't tile)
+                                    # doesn't tile — ``supports()``)
     remat_policy: str = "full"      # full | none | dots | dots_batch |
                                     # offload_dots — what jax.checkpoint
                                     # saves across the layer-scan body
     bf16_residency: bool = False    # keep scores/logits resident in the
                                     # compute dtype; f32 only inside matmul
                                     # accumulation epilogues
-    overlap_collectives: bool = False  # decompose model-axis psums into
+    overlap_collectives: bool = True  # decompose model-axis psums into
                                     # double-buffered ppermute chunk rings
                                     # (overlappable with compute)
     dense_embed_grad: bool = True   # one-hot matmul backward for the

@@ -632,3 +632,112 @@ def decode_step(params, cfg: ModelConfig, cache, token, pos,
     x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
     head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
     return x @ head, new_caches
+
+
+# ========================================================== paged decode
+# The serving engine's cache is a global pool of fixed-size blocks
+# (repro/serve/cache.py); each request owns a block table.  The decode
+# step below is the batched per-request-position twin of ``decode_step``:
+# every row carries its OWN absolute position (continuous batching mixes
+# requests at different depths), K/V write through the block table, and
+# attention gathers through it (the Pallas kernel in
+# ``kernels/paged_attention`` or its jnp reference).
+
+def paged_families() -> tuple:
+    """Families the paged decode path serves (pure-KV caches; the
+    recurrent ssm/hybrid states are per-request dense, not pageable)."""
+    return ("dense", "moe", "audio", "vlm")
+
+
+def init_paged_pools(cfg: ModelConfig, num_blocks: int, block_size: int,
+                     dtype=jnp.bfloat16) -> dict:
+    """Per-layer stacked K/V block pools: (L, N, KV, bs, hd)."""
+    if cfg.family not in paged_families():
+        raise ValueError(
+            f"paged KV cache supports families {paged_families()}, not "
+            f"{cfg.family!r} (recurrent state is per-request, not paged)")
+    shape = (cfg.n_layers, num_blocks, cfg.n_kv_heads, block_size, cfg.hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def _attn_paged(cfg: ModelConfig, lp, x, positions, k_pool, v_pool,
+                block_tables, ctx_lens, window, use_kernel):
+    """One layer's attention against the paged pools.  x: (B, 1, D);
+    positions/ctx_lens: (B, 1)/(B,) — the new token's absolute position.
+    Returns (x_out, k_pool, v_pool) with the new K/V scattered in."""
+    from repro.kernels import paged_attention as pa
+    B = x.shape[0]
+    bs = k_pool.shape[2]
+    h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+    q = h @ lp["wq"]
+    k = h @ lp["wk"]
+    v = h @ lp["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + lp["bq"], k + lp["bk"], v + lp["bv"]
+    q = q.reshape(B, 1, cfg.n_heads, cfg.hd)
+    k = k.reshape(B, 1, cfg.n_kv_heads, cfg.hd)
+    v = v.reshape(B, 1, cfg.n_kv_heads, cfg.hd)
+    if cfg.qk_norm:
+        q = L.rms_norm(q, lp["q_norm"], cfg.norm_eps)
+        k = L.rms_norm(k, lp["k_norm"], cfg.norm_eps)
+    q = L.rope(q, positions, cfg.rope_theta)
+    k = L.rope(k, positions, cfg.rope_theta)
+    # scatter the new K/V through the block table: logical position
+    # ctx_lens[b] lives at (block_tables[b, ctx//bs], ctx%bs)
+    pages = block_tables[jnp.arange(B), ctx_lens // bs]
+    offs = ctx_lens % bs
+    k_pool = k_pool.at[pages, :, offs].set(
+        k[:, 0].astype(k_pool.dtype))
+    v_pool = v_pool.at[pages, :, offs].set(
+        v[:, 0].astype(v_pool.dtype))
+    fn = (pa.paged_attention
+          if use_kernel and pa.supports(cfg.n_heads, cfg.n_kv_heads, cfg.hd)
+          else pa.paged_attention_ref)
+    out = fn(q[:, 0], k_pool, v_pool, block_tables, ctx_lens + 1,
+             window=window, interpret=_flash_interpret())
+    y = out.reshape(B, 1, cfg.n_heads * cfg.hd) @ lp["wo"]
+    return x + y, k_pool, v_pool
+
+
+def paged_decode_step(params, cfg: ModelConfig, pools, block_tables,
+                      context_lens, tokens,
+                      window: Optional[int] = None,
+                      use_kernel: bool = True):
+    """One decode step for a batch of requests at DIFFERENT positions.
+
+    tokens: (B, 1) int32 — each row's newest token
+    context_lens: (B,) int32 — tokens already cached per row (the new
+        token's absolute position); inactive rows pass 0 with a
+        scratch-block table and produce garbage logits that the engine
+        masks out
+    pools: ``init_paged_pools`` tree; block_tables: (B, P) int32
+
+    Returns (logits (B, 1, V), new_pools).
+    """
+    x = params["embed"][tokens]
+    B = x.shape[0]
+    positions = jnp.broadcast_to(context_lens[:, None], (B, 1))
+
+    def body(carry, scanned):
+        h = carry
+        lp, layer_pools = scanned
+        h, kp, vp = _attn_paged(cfg, lp, h, positions,
+                                layer_pools["k"], layer_pools["v"],
+                                block_tables, context_lens, window,
+                                use_kernel)
+        if cfg.family == "moe":
+            hh = L.rms_norm(h, lp["ln2"], cfg.norm_eps)
+            y, _ = moe_lib.moe_ffn(hh, lp["router"], lp["w_gate"],
+                                   lp["w_up"], lp["w_down"],
+                                   top_k=cfg.top_k,
+                                   capacity_factor=cfg.capacity_factor,
+                                   group=cfg.moe_group_size)
+            h = h + y
+        else:
+            h = _ffn(cfg, lp, h)
+        return h, {"k": kp, "v": vp}
+
+    x, new_pools = jax.lax.scan(body, x, (params["blocks"], pools))
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return x @ head, new_pools

@@ -262,10 +262,14 @@ def tiny_lm_config(arch: str = "qwen2-0.5b"):
     import dataclasses as dc
     from repro.configs import get_config
     cfg = get_config(arch).smoke()
+    # flash_attention pinned off: the committed BENCH_privacy.json MIA /
+    # DLG curves were captured on the chunked-attention gradient path,
+    # and the audit doesn't exercise the kernel anyway
     return dc.replace(cfg, name=cfg.name + "-audit", n_layers=1,
                       d_model=64, n_heads=2, n_kv_heads=2, head_dim=32,
                       d_ff=128, vocab=256, qkv_bias=False, qk_norm=False,
-                      attn_chunk=16)
+                      attn_chunk=16, flash_attention=False,
+                      overlap_collectives=False)
 
 
 def lm_canary_problem(cfg, spec: AuditSpec, seq: int = 16):

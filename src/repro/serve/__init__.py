@@ -1,0 +1,13 @@
+"""Serving subsystem: continuous batching over a paged KV cache.
+
+``ServeEngine`` (engine.py) is the request loop — admission, batched
+decode, eviction — over the block-pool cache (cache.py), with
+temperature/top-k/top-p/greedy sampling and beam decode (sampling.py).
+The public surface re-exports through ``repro.launch.serve`` next to
+``TrainSettings``' home in ``repro.launch.train``.
+"""
+from repro.serve.cache import (BlockAllocator, BlockBudgetExceeded,  # noqa
+                               pages_for, write_prefill)
+from repro.serve.engine import (Request, RequestOutput, ServeEngine,  # noqa
+                                ServeSettings)
+from repro.serve.sampling import SamplingParams, beam_search, sample  # noqa

@@ -1,0 +1,110 @@
+"""Paged KV cache: a global pool of fixed-size blocks + per-request
+block tables.
+
+The pools themselves are device arrays created by
+``models.transformer.init_paged_pools`` — (L, N, KV, bs, hd) per layer.
+This module owns the HOST side: the free-list :class:`BlockAllocator`
+(block 0 is reserved as the scratch block — inactive engine slots'
+tables point at it, so their masked decode writes land somewhere
+harmless), and the jit-friendly prefill scatter that moves a dense
+prefill cache into a request's blocks.
+
+Invariants (property-tested in tests/test_paged_cache.py):
+  * allocated blocks are unique, nonzero, and within the pool
+  * used + free == num_blocks - 1 (the scratch block is neither)
+  * ``used`` never exceeds the budget; ``peak_used`` records the max
+  * free(alloc(n)) round-trips to the same free count
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax.numpy as jnp
+
+SCRATCH_BLOCK = 0
+
+
+class BlockBudgetExceeded(RuntimeError):
+    """Raised by ``alloc(..., strict=True)`` when the pool is exhausted."""
+
+
+def pages_for(n_tokens: int, block_size: int) -> int:
+    """Blocks needed to hold n_tokens (at least one once tokens exist)."""
+    return -(-n_tokens // block_size)
+
+
+@dataclasses.dataclass
+class BlockAllocator:
+    """Free-list allocator over pool blocks [1, num_blocks) — block 0 is
+    the reserved scratch block and is never handed out."""
+    num_blocks: int
+    block_size: int
+
+    def __post_init__(self):
+        if self.num_blocks < 2:
+            raise ValueError(f"num_blocks must be >= 2 (block 0 is the "
+                             f"scratch block), got {self.num_blocks}")
+        if self.block_size < 1:
+            raise ValueError(f"block_size must be >= 1, "
+                             f"got {self.block_size}")
+        self._free: List[int] = list(range(self.num_blocks - 1, 0, -1))
+        self._used: set = set()
+        self.peak_used: int = 0
+
+    @property
+    def capacity(self) -> int:
+        return self.num_blocks - 1
+
+    @property
+    def used(self) -> int:
+        return len(self._used)
+
+    @property
+    def available(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int = 1, strict: bool = False) -> Optional[List[int]]:
+        """n fresh blocks, or None when the pool can't supply them
+        (``strict=True`` raises :class:`BlockBudgetExceeded` instead).
+        All-or-nothing: a partial grab is never left allocated."""
+        if n > len(self._free):
+            if strict:
+                raise BlockBudgetExceeded(
+                    f"need {n} blocks, {len(self._free)} free "
+                    f"(capacity {self.capacity}, used {self.used})")
+            return None
+        blocks = [self._free.pop() for _ in range(n)]
+        self._used.update(blocks)
+        self.peak_used = max(self.peak_used, len(self._used))
+        return blocks
+
+    def free(self, blocks: List[int]) -> None:
+        for b in blocks:
+            if b not in self._used:
+                raise ValueError(f"double free / foreign block {b}")
+            self._used.remove(b)
+            self._free.append(b)
+
+
+def write_prefill(pools: dict, k, v, pages, block_size: int) -> dict:
+    """Scatter one request's dense prefill K/V into its blocks.
+
+    k, v: (L, S, KV, hd) — the squeezed batch-1 prefill cache; pages:
+    (ceil(S_bucket/bs),) int32 pool blocks (pad entries with the scratch
+    block).  Positions past the request's true length land either beyond
+    its context (masked by attention, overwritten as it grows) or in the
+    scratch block — both harmless, so no length mask is needed.
+    """
+    S = k.shape[1]
+    idx = jnp.arange(S)
+    page_arr = pages[idx // block_size]
+    off_arr = idx % block_size
+    # pool (L, N, KV, bs, hd) indexed [:, pages, :, offs] puts the
+    # advanced dims in front: values arrive as (S, L, KV, hd)
+    return {
+        "k": pools["k"].at[:, page_arr, :, off_arr].set(
+            k.transpose(1, 0, 2, 3).astype(pools["k"].dtype)),
+        "v": pools["v"].at[:, page_arr, :, off_arr].set(
+            v.transpose(1, 0, 2, 3).astype(pools["v"].dtype)),
+    }

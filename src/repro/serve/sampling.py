@@ -1,0 +1,160 @@
+"""Token selection: temperature/top-k/top-p sampling, greedy, beam.
+
+``sample`` is row-wise and fully traced — temperature/top_k/top_p ride
+in as per-row ARRAYS, so one jitted decode step serves every request's
+sampling config simultaneously (no per-config recompiles), and each row
+draws from its own PRNG key: a request's token stream depends only on
+its own (key, logits) history, never on which batch or slot it shares —
+the property behind the engine's batched-vs-unbatched token identity.
+
+``beam_search`` is the offline twin on the dense ring cache
+(``transformer.decode_step``): fixed-width beams carried through a
+``lax.scan``, per-step cache reordering by parent beam, optional EOS
+with length-penalized scores.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as tr
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """temperature == 0 selects greedy; top_k == 0 / top_p == 1 disable
+    the respective filters."""
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+
+    def __post_init__(self):
+        if self.temperature < 0:
+            raise ValueError(f"SamplingParams.temperature must be >= 0, "
+                             f"got {self.temperature}")
+        if self.top_k < 0:
+            raise ValueError(f"SamplingParams.top_k must be >= 0, "
+                             f"got {self.top_k}")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError(f"SamplingParams.top_p must be in (0, 1], "
+                             f"got {self.top_p}")
+
+
+def sample(keys: jax.Array, logits: jax.Array, temperature: jax.Array,
+           top_k: jax.Array, top_p: jax.Array) -> jax.Array:
+    """Per-row token selection.  keys: (B, 2) uint32; logits: (B, V);
+    temperature/top_k/top_p: (B,) — all traced.  Filter order matches
+    the usual serving stack: temperature scale -> top-k -> top-p ->
+    categorical; temperature 0 short-circuits to argmax."""
+    B, V = logits.shape
+    greedy = jnp.argmax(logits, axis=-1)
+    scaled = logits.astype(jnp.float32) / jnp.maximum(temperature,
+                                                      1e-6)[:, None]
+    order = jnp.argsort(-scaled, axis=-1)
+    sorted_logits = jnp.take_along_axis(scaled, order, axis=-1)
+    # top-k: keep sorted positions < k (k == 0 disables)
+    k_eff = jnp.where(top_k > 0, jnp.clip(top_k, 1, V), V)
+    keep = jnp.arange(V)[None, :] < k_eff[:, None]
+    # top-p: keep the smallest prefix of the sorted distribution whose
+    # mass reaches p (the first token always survives: cum - prob == 0)
+    probs = jax.nn.softmax(jnp.where(keep, sorted_logits, NEG_INF), -1)
+    cum = jnp.cumsum(probs, axis=-1)
+    keep &= (cum - probs) < top_p[:, None]
+    masked_sorted = jnp.where(keep, sorted_logits, NEG_INF)
+    inv = jnp.argsort(order, axis=-1)
+    filtered = jnp.take_along_axis(masked_sorted, inv, axis=-1)
+    drawn = jax.vmap(jax.random.categorical)(keys, filtered)
+    return jnp.where(temperature <= 0, greedy, drawn).astype(jnp.int32)
+
+
+def sample_one(key: jax.Array, logits: jax.Array,
+               params: SamplingParams) -> jax.Array:
+    """Single-row convenience over :func:`sample`."""
+    return sample(key[None], logits[None],
+                  jnp.array([params.temperature], jnp.float32),
+                  jnp.array([params.top_k], jnp.int32),
+                  jnp.array([params.top_p], jnp.float32))[0]
+
+
+# ============================================================ beam decode
+def beam_search(params, cfg, prompt: jax.Array, *, n_beams: int = 4,
+                max_new_tokens: int = 16, window: Optional[int] = None,
+                eos_id: Optional[int] = None, length_penalty: float = 1.0,
+                cache_dtype=jnp.float32):
+    """Fixed-width beam decode of one prompt on the dense decode cache.
+
+    prompt: (S,) int32.  Returns (tokens (max_new_tokens,), score) of
+    the best beam — score is summed log-prob / len**length_penalty over
+    generated tokens (finished beams stop accumulating at EOS).
+    """
+    prompt = jnp.asarray(prompt, jnp.int32)
+    S = prompt.shape[0]
+    total = S + max_new_tokens
+    logits, caches, _ = tr.forward(params, cfg, prompt[None],
+                                   mode="prefill", window=window)
+
+    def beams(c):
+        return jnp.repeat(c, n_beams, axis=1)
+
+    if cfg.family == "ssm":
+        cache = jax.tree.map(beams, caches)
+    else:
+        base = tr.init_cache(cfg, n_beams, total, window=window,
+                             dtype=cache_dtype)
+        # relocate the dense prefill cache into the decode (ring) layout:
+        # absolute position j lives at slot j % size; with a window only
+        # the last `size` positions survive (older ones are never valid)
+        size = base["kv"]["k"].shape[2]
+        lo = max(0, S - size)
+        slots = jnp.arange(lo, S) % size
+        kv = {n: base["kv"][n].at[:, :, slots].set(
+                  beams(caches["kv"][n][:, :, lo:]).astype(cache_dtype))
+              for n in ("k", "v")}
+        cache = {"kv": kv}
+        if cfg.family == "hybrid":
+            cache["ssm"] = beams(caches["ssm"]).astype(
+                base["ssm"].dtype)
+    logp0 = jax.nn.log_softmax(logits[0, S - 1].astype(jnp.float32))
+    first = jax.lax.top_k(logp0, n_beams)
+    V = logp0.shape[0]
+
+    def step(carry, pos):
+        cache, toks, scores, alive, seqs = carry
+        logits, cache = tr.decode_step(params, cfg, cache, toks[:, None],
+                                       pos, window=window)
+        logp = jax.nn.log_softmax(logits[:, 0].astype(jnp.float32))
+        # finished beams extend only with EOS at zero cost — they keep
+        # their score and compete unchanged
+        if eos_id is not None:
+            frozen = jnp.full((n_beams, V), NEG_INF
+                              ).at[:, eos_id].set(0.0)
+            logp = jnp.where(alive[:, None], logp, frozen)
+        cand = scores[:, None] + logp                 # (beams, V)
+        top_s, top_i = jax.lax.top_k(cand.reshape(-1), n_beams)
+        parent = top_i // V
+        tok = (top_i % V).astype(jnp.int32)
+        cache = jax.tree.map(lambda c: c[:, parent], cache)
+        seqs = seqs[parent].at[:, pos - S + 1].set(tok)
+        alive = alive[parent]
+        if eos_id is not None:
+            alive &= tok != eos_id
+        return (cache, tok, top_s, alive, seqs), ()
+
+    seqs0 = jnp.zeros((n_beams, max_new_tokens), jnp.int32)
+    seqs0 = seqs0.at[:, 0].set(first[1].astype(jnp.int32))
+    alive0 = jnp.ones((n_beams,), bool)
+    if eos_id is not None:
+        alive0 &= first[1] != eos_id
+    carry = (cache, first[1].astype(jnp.int32), first[0], alive0, seqs0)
+    if max_new_tokens > 1:
+        carry, _ = jax.lax.scan(step, carry,
+                                jnp.arange(S, S + max_new_tokens - 1))
+    _, _, scores, _, seqs = carry
+    norm = scores / (max_new_tokens ** length_penalty)
+    best = jnp.argmax(norm)
+    return seqs[best], norm[best]

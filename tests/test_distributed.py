@@ -279,6 +279,10 @@ def test_512_device_lowering_int8_wire(tmp_path):
     r = subprocess.run(
         [sys.executable, "-m", "repro.launch.dryrun", "--arch", "qwen2-0.5b",
          "--shape", "train_1k", "--multi-pod", "--int8-wire",
+         # per-layer psum counts below assume monolithic model-axis
+         # all-reduces and the naive attention lowering — pin the
+         # (now default-on) kernel knobs off for this regression
+         "--opt", "flash_attention=false,overlap_collectives=false",
          "--out", str(tmp_path)],
         capture_output=True, text=True, timeout=900,
         env=SUBPROC_ENV)
@@ -322,7 +326,9 @@ def test_512_device_lowering_moe_expert_parallel(tmp_path):
     r = subprocess.run(
         [sys.executable, "-m", "repro.launch.dryrun", "--arch",
          "olmoe-1b-7b", "--shape", "train_1k", "--multi-pod",
-         "--int8-wire", "--out", str(tmp_path)],
+         "--int8-wire",
+         "--opt", "flash_attention=false,overlap_collectives=false",
+         "--out", str(tmp_path)],
         capture_output=True, text=True, timeout=1800,
         env=SUBPROC_ENV)
     assert r.returncode == 0, (r.stdout[-500:], r.stderr[-2000:])
@@ -365,8 +371,9 @@ def test_512_device_lowering_seq_parallel(tmp_path):
     shards 16-way, so base and seq run the same set of sharded regions;
     the vocab override (50257 -> 50176) makes the vocab divisible, which
     a seq plan requires."""
-    for opt, tag in [("vocab=50176", "base"),
-                     ("vocab=50176,seq_parallel=true", "seq")]:
+    pin = ",flash_attention=false,overlap_collectives=false"
+    for opt, tag in [("vocab=50176" + pin, "base"),
+                     ("vocab=50176,seq_parallel=true" + pin, "seq")]:
         r = subprocess.run(
             [sys.executable, "-m", "repro.launch.dryrun", "--arch",
              "eris-gptneo-1.3b", "--shape", "train_1k", "--multi-pod",

@@ -1,0 +1,117 @@
+"""Paged KV cache properties: the block allocator's invariants under
+random alloc/free interleavings (hypothesis) and the block-table
+scatter/gather roundtrip (``write_prefill`` -> table-indexed gather
+reproduces the dense prefill cache exactly)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.serve.cache import (SCRATCH_BLOCK, BlockAllocator,
+                               BlockBudgetExceeded, pages_for,
+                               write_prefill)
+
+
+# ------------------------------------------------------------- allocator
+@given(n_tokens=st.integers(0, 500), bs=st.integers(1, 64))
+@settings(max_examples=40, deadline=None)
+def test_pages_for_covers_exactly(n_tokens, bs):
+    p = pages_for(n_tokens, bs)
+    assert p * bs >= n_tokens            # covers every token
+    assert (p - 1) * bs < n_tokens or p == 0   # with no spare block
+
+
+@given(num_blocks=st.integers(2, 64), seed=st.integers(0, 2**16))
+@settings(max_examples=25, deadline=None)
+def test_allocator_invariants_random_walk(num_blocks, seed):
+    """Random alloc/free interleaving: uniqueness, conservation, budget,
+    peak tracking, all-or-nothing exhaustion."""
+    rng = np.random.default_rng(seed)
+    a = BlockAllocator(num_blocks, block_size=8)
+    held = []
+    peak_seen = 0
+    for _ in range(60):
+        if held and rng.random() < 0.4:
+            i = int(rng.integers(len(held)))
+            a.free(held.pop(i))
+            continue
+        want = int(rng.integers(1, max(2, num_blocks // 2)))
+        got = a.alloc(want)
+        if got is None:
+            assert want > a.available      # only exhaustion returns None
+            continue
+        assert len(got) == want
+        held.append(got)
+        flat = [b for grp in held for b in grp]
+        assert len(flat) == len(set(flat))             # unique
+        assert all(0 < b < num_blocks for b in flat)   # never scratch/oob
+        peak_seen = max(peak_seen, len(flat))
+        # conservation: every block is exactly one of {used, free, scratch}
+        assert a.used + a.available == a.capacity == num_blocks - 1
+        assert a.used <= a.capacity
+    assert a.peak_used == peak_seen
+    for grp in held:
+        a.free(grp)
+    assert a.available == a.capacity and a.used == 0
+
+
+def test_allocator_all_or_nothing_and_strict():
+    a = BlockAllocator(num_blocks=4, block_size=8)   # capacity 3
+    assert a.alloc(5) is None
+    assert a.available == 3                           # nothing leaked
+    with pytest.raises(BlockBudgetExceeded):
+        a.alloc(5, strict=True)
+    got = a.alloc(3)
+    assert sorted(got) == [1, 2, 3]
+    assert a.alloc(1) is None
+
+
+def test_allocator_double_free_rejected():
+    a = BlockAllocator(num_blocks=4, block_size=8)
+    blocks = a.alloc(2)
+    a.free(blocks)
+    with pytest.raises(ValueError):
+        a.free(blocks)
+    with pytest.raises(ValueError):
+        a.free([SCRATCH_BLOCK])           # scratch is never allocatable
+
+
+def test_allocator_validation():
+    with pytest.raises(ValueError):
+        BlockAllocator(num_blocks=1, block_size=8)
+    with pytest.raises(ValueError):
+        BlockAllocator(num_blocks=8, block_size=0)
+
+
+# ----------------------------------------------------- table roundtrip
+@given(S=st.integers(1, 40), bs=st.sampled_from([1, 4, 8, 16]),
+       L=st.integers(1, 3), KV=st.sampled_from([1, 2, 4]),
+       seed=st.integers(0, 2**16))
+@settings(max_examples=15, deadline=None)
+def test_write_prefill_block_table_roundtrip(S, bs, L, KV, seed):
+    """Scatter a dense (L, S, KV, hd) prefill cache into allocator-owned
+    blocks, then gather through the block table — bytes must round-trip
+    and untouched pool blocks must stay zero."""
+    hd = 8
+    key = jax.random.PRNGKey(seed)
+    k = jax.random.normal(key, (L, S, KV, hd), jnp.float32)
+    v = jax.random.normal(jax.random.fold_in(key, 1), (L, S, KV, hd))
+    num_blocks = pages_for(S, bs) + 3
+    a = BlockAllocator(num_blocks, bs)
+    pages = np.asarray(a.alloc(pages_for(S, bs)), np.int32)
+    pools = {"k": jnp.zeros((L, num_blocks, KV, bs, hd), jnp.float32),
+             "v": jnp.zeros((L, num_blocks, KV, bs, hd), jnp.float32)}
+    pools = write_prefill(pools, k, v, jnp.asarray(pages), bs)
+    # gather back through the table
+    idx = np.arange(S)
+    got_k = np.asarray(pools["k"])[:, pages[idx // bs], :, idx % bs]
+    got_v = np.asarray(pools["v"])[:, pages[idx // bs], :, idx % bs]
+    # advanced indexing fronts the (S,) dims: (S, L, KV, hd)
+    np.testing.assert_array_equal(got_k, np.asarray(k).transpose(1, 0, 2, 3))
+    np.testing.assert_array_equal(got_v, np.asarray(v).transpose(1, 0, 2, 3))
+    # blocks the table never referenced are untouched
+    unused = sorted(set(range(num_blocks)) - set(pages.tolist()))
+    assert not np.asarray(pools["k"])[:, unused].any()
+    assert not np.asarray(pools["v"])[:, unused].any()
