@@ -51,19 +51,21 @@ def _ring_weights(n: int) -> dict:
             "collective-permute": 1.0}
 
 
-def collective_seconds(coll: dict, devices: int,
-                       model_size: int = 1) -> tuple[float, dict]:
+def collective_seconds(coll: dict, devices: int, model_size: int = 1,
+                       pipe_size: int = 1) -> tuple[float, dict]:
     """Convert per-kind payload bytes into link-seconds.
 
     When the record carries the per-axis breakdown (``axes``), each
     axis's collectives are weighted with THAT axis's ring size — a
-    model-axis psum circulates over ``model_size`` neighbors, not the
-    whole mesh — otherwise everything is priced at the full device
-    count (the pre-TP behavior, an upper bound)."""
+    model-axis psum circulates over ``model_size`` neighbors and a
+    pipe-boundary ppermute over ``pipe_size`` stages, not the whole
+    mesh — otherwise everything is priced at the full device count
+    (the pre-TP behavior, an upper bound)."""
     axes = coll.get("axes")
-    if axes and model_size > 1:
+    if axes and (model_size > 1 or pipe_size > 1):
         ring = {"model": model_size,
-                "client": max(devices // model_size, 1),
+                "pipe": pipe_size,
+                "client": max(devices // (model_size * pipe_size), 1),
                 "all": devices}
         per_kind = {k: 0.0 for k in _ring_weights(devices)}
         for axis, by_kind in axes.items():
@@ -106,18 +108,26 @@ def analyze_record(rec: dict) -> dict:
     t_memory = rec["bytes_accessed_per_device"] / HBM_BW
     t_coll, per_kind = collective_seconds(
         rec["collective_bytes_per_device"], n,
-        model_size=rec.get("tp", {}).get("size", 1))
+        model_size=rec.get("tp", {}).get("size", 1),
+        pipe_size=rec.get("pp", {}).get("size", 1))
     # ppermute chunk rings run concurrently with the blockwise matmul
     # accumulation: up to one compute-term of cp time hides under compute
     t_overlap = min(per_kind.get("collective-permute", 0.0), t_compute)
+    # 1F1B pipeline bubble: (p-1) of the (m+p-1) wavefront ticks per
+    # stage run on padding, stretching the compute term by
+    # bubble/(1-bubble) of itself (0 for non-pipelined records)
+    bubble = rec.get("pp", {}).get("bubble_fraction", 0.0)
+    t_bubble = t_compute * bubble / (1.0 - bubble) if bubble < 1.0 else 0.0
     terms = {"compute": t_compute, "memory": t_memory,
-             "collective": t_coll - t_overlap, "overlapped": t_overlap}
-    dominant = max(("compute", "memory", "collective"),
+             "collective": t_coll - t_overlap, "overlapped": t_overlap,
+             "bubble": t_bubble}
+    dominant = max(("compute", "memory", "collective", "bubble"),
                    key=lambda k: terms[k])
     mf = model_flops(rec)
     useful = mf / (n * rec["flops_per_device"]) if rec["flops_per_device"] \
         else float("nan")
-    bound = max(terms[k] for k in ("compute", "memory", "collective"))
+    bound = max(terms["compute"] + terms["bubble"], terms["memory"],
+                terms["collective"])
     mfu_upper = (mf / n / PEAK_FLOPS_BF16) / bound if bound else float("nan")
     return {**{k: rec[k] for k in ("arch", "shape", "mesh", "devices",
                                    "kind", "tag")},
@@ -148,6 +158,7 @@ def run(quick: bool = True):
                         f"mem={a['terms_s']['memory']*1e3:.2f}ms "
                         f"coll={a['terms_s']['collective']*1e3:.2f}ms "
                         f"ovl={a['terms_s']['overlapped']*1e3:.2f}ms "
+                        f"bub={a['terms_s']['bubble']*1e3:.2f}ms "
                         f"useful={a['useful_ratio']:.2f} "
                         f"mfu_ub={a['mfu_upper_bound']:.3f}"),
         })
@@ -156,9 +167,9 @@ def run(quick: bool = True):
 
 def markdown_table(tag="") -> str:
     lines = ["| arch | shape | mesh | compute (ms) | memory (ms) | "
-             "collective (ms) | overlapped (ms) | dominant | useful "
-             "| MFU-UB |",
-             "|---|---|---|---|---|---|---|---|---|---|"]
+             "collective (ms) | overlapped (ms) | bubble (ms) | dominant "
+             "| useful | MFU-UB |",
+             "|---|---|---|---|---|---|---|---|---|---|---|"]
     for rec in load_records(tag=tag):
         a = analyze_record(rec)
         t = a["terms_s"]
@@ -166,7 +177,7 @@ def markdown_table(tag="") -> str:
             f"| {a['arch']} | {a['shape']} | {a['mesh']} "
             f"| {t['compute']*1e3:.2f} | {t['memory']*1e3:.2f} "
             f"| {t['collective']*1e3:.2f} | {t['overlapped']*1e3:.2f} "
-            f"| **{a['dominant']}** "
+            f"| {t['bubble']*1e3:.2f} | **{a['dominant']}** "
             f"| {a['useful_ratio']:.2f} | {a['mfu_upper_bound']:.3f} |")
     return "\n".join(lines)
 

@@ -12,6 +12,9 @@ Each entry keys ``{arch}/{shape}/{mesh}[/{tag}]`` and carries:
 
 * ``lower_s`` / ``compile_s`` — XLA cost of the (lower, compile) pair
 * ``tp``      — the shard plan the lowering engaged (size + region flags)
+* ``pp``      — the pipeline plan (stage count, microbatches, bubble
+  fraction) and ``param_bytes_per_device`` — resident parameter bytes at
+  the pipe x TP-local compute layout (the ≥26B acceptance bound)
 * ``wire_dtype`` — the FSA exchange's on-mesh dtype
 * ``axis_bytes`` / ``axis_counts`` — per-axis {kind: payload bytes /
   trip-weighted op count} from the HLO replica groups (model vs client)
@@ -70,6 +73,8 @@ def snapshot_from_records(records: list[dict]) -> dict:
             "lower_s": rec.get("lower_s"),
             "compile_s": rec.get("compile_s"),
             "tp": rec.get("tp", {}),
+            "pp": rec.get("pp", {"size": 1}),
+            "param_bytes_per_device": rec.get("param_bytes_per_device"),
             "wire_dtype": rec.get("wire_dtype", ""),
             "axis_bytes": {ax: {k: round(v) for k, v in kinds.items()}
                            for ax, kinds in coll.get("axes", {}).items()},

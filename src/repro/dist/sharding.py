@@ -42,8 +42,9 @@ QBLOCK = 256        # coords per int8-wire scale (kernels/quantize.QBLOCK)
 
 # ------------------------------------------------------------------ axes
 def client_axes(mesh: Mesh) -> tuple[str, ...]:
-    """Mesh axes enumerating FSA aggregators (everything but 'model')."""
-    return tuple(a for a in mesh.axis_names if a != "model")
+    """Mesh axes enumerating FSA aggregators (everything but the
+    intra-model 'model' and 'pipe' axes)."""
+    return tuple(a for a in mesh.axis_names if a not in ("model", "pipe"))
 
 
 def client_count(mesh: Mesh) -> int:
@@ -59,6 +60,11 @@ def _caxis(mesh: Mesh):
 def _model_size(mesh: Mesh) -> int:
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
     return int(sizes.get("model", 1))
+
+
+def _pipe_size(mesh: Mesh) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return int(sizes.get("pipe", 1))
 
 
 # ----------------------------------------------------------- scatter dims
@@ -103,6 +109,47 @@ def tp_merge_leaf(shards: jax.Array, spec: TPSpec) -> jax.Array:
     return jnp.concatenate(list(shards), axis=spec.dim)
 
 
+# --------------------------------------------------------- pipeline dims
+# The pipe axis slices the leading L-stacked layer dim of every block
+# leaf into contiguous stages (models/shard_plan.PipelinePlan); non-block
+# leaves (embed / lm_head / ln_f / proj_in) replicate over pipe — every
+# stage embeds its own microbatch injection and the last stage computes
+# the CE, so their grads are per-stage partials that psum over 'pipe'.
+def pipe_dims(cfg, pp: int) -> Any:
+    """Per-leaf pipe slice dim (0 for block leaves when the pipe axis is
+    real, else -1), a pytree of ints matching the param tree."""
+    from repro.models import transformer as tr
+    spec = tr.param_spec(cfg)
+    out: dict[str, Any] = {}
+    for name in spec:
+        if name == "blocks":
+            out["blocks"] = {bn: (0 if pp > 1 else -1)
+                             for bn in spec["blocks"]}
+        else:
+            out[name] = -1
+    return out
+
+
+def pipe_local_shape(shape: tuple[int, ...], pdim: int,
+                     pp: int) -> tuple[int, ...]:
+    """The per-pipe-stage shape of a (TP-local) leaf."""
+    if pdim < 0 or pp <= 1:
+        return tuple(shape)
+    shape = list(shape)
+    shape[pdim] //= pp
+    return tuple(shape)
+
+
+def pipe_grad_sync(grads: Any, pdims: Any, axis) -> Any:
+    """After ``value_and_grad`` of the pipeline loss: block-leaf grads
+    are stage-local (each stage owns its layer rows outright) and pass
+    through; pipe-replicated leaves carry per-stage partial sums — psum
+    them over the pipe axis."""
+    return jax.tree.map(
+        lambda g, pd: g if pd >= 0 else jax.lax.psum(g, axis),
+        grads, pdims)
+
+
 def tp_grad_sync(grads: Any, specs: Any, axis) -> Any:
     """Inside the manual region, after ``value_and_grad``: ``partial``
     leaves (replicated params consumed shard-locally) carry per-position
@@ -125,15 +172,19 @@ def scatter_dim_for(shape: tuple[int, ...], n_client: int) -> int:
 def fsa_scatter_dims(cfg, mesh: Mesh) -> Any:
     """Per-leaf scatter dim for the FSA reduce-scatter / shard-local
     optimizer (pytree of ints matching the param tree).  Computed on the
-    TP-LOCAL shape: inside the manual region every leaf is already the
-    model position's shard, and the client segmentation divides that."""
+    PIPE- and TP-LOCAL shape: inside the manual region every leaf is
+    already this position's stage/model shard, and the client
+    segmentation divides that."""
     n_client = client_count(mesh)
     tp = _model_size(mesh)
+    pp = _pipe_size(mesh)
     params = _abstract_params(cfg)
     specs = tp_specs(cfg, tp)
+    pdims = pipe_dims(cfg, pp)
     return jax.tree.map(
-        lambda p, s: scatter_dim_for(tp_local_shape(p.shape, s, tp),
-                                     n_client), params, specs)
+        lambda p, s, pd: scatter_dim_for(
+            pipe_local_shape(tp_local_shape(p.shape, s, tp), pd, pp),
+            n_client), params, specs, pdims)
 
 
 # -------------------------------------------------------------- shardings
@@ -149,16 +200,20 @@ def _as_tuple(axes) -> tuple:
     return axes if isinstance(axes, tuple) else (axes,)
 
 
-def composite_store_spec(tp_dim: int, fsa_dim: int, caxis) -> P:
+def composite_store_spec(tp_dim: int, fsa_dim: int, caxis,
+                         pipe_dim: int = -1) -> P:
     """'store' PartitionSpec of one leaf: ``model`` at the TP dim times
-    the client axes at the (TP-local) FSA scatter dim.  When both land on
-    the same dim the model axis is the major factor — each model position
-    owns a contiguous TP block, client-segmented within."""
-    if tp_dim < 0 and fsa_dim < 0:
+    the client axes at the (TP-local) FSA scatter dim, times ``pipe`` at
+    the stage slice dim (block leaves' L-stack).  When factors land on
+    the same dim the intra-model axes are major — pipe, then model, then
+    the client segmentation within."""
+    if tp_dim < 0 and fsa_dim < 0 and pipe_dim < 0:
         return P()
-    parts: list = [None] * (max(tp_dim, fsa_dim) + 1)
+    parts: list = [None] * (max(tp_dim, fsa_dim, pipe_dim) + 1)
+    if pipe_dim >= 0:
+        parts[pipe_dim] = ("pipe",)
     if tp_dim >= 0:
-        parts[tp_dim] = ("model",)
+        parts[tp_dim] = (tuple(parts[tp_dim] or ()) + ("model",))
     if fsa_dim >= 0:
         parts[fsa_dim] = (tuple(parts[fsa_dim] or ()) + _as_tuple(caxis))
     return P(*[p[0] if isinstance(p, tuple) and len(p) == 1 else p
@@ -166,23 +221,32 @@ def composite_store_spec(tp_dim: int, fsa_dim: int, caxis) -> P:
 
 
 def store_specs(cfg, mesh: Mesh) -> Any:
-    """Pytree of 'store'-layout PartitionSpecs (the composite model x
-    client placement) matching the parameter tree."""
+    """Pytree of 'store'-layout PartitionSpecs (the composite pipe x
+    model x client placement) matching the parameter tree."""
     caxis = _caxis(mesh)
     tp = _model_size(mesh)
+    pp = _pipe_size(mesh)
     dims = fsa_scatter_dims(cfg, mesh)
     specs = tp_specs(cfg, tp)
+    pdims = pipe_dims(cfg, pp)
     return jax.tree.map(
-        lambda d, s: composite_store_spec(s.dim, d, caxis), dims, specs)
+        lambda d, s, pd: composite_store_spec(s.dim, d, caxis, pd),
+        dims, specs, pdims)
 
 
-def dsc_store_spec(tp_leaf: TPSpec, caxis) -> P:
+def dsc_store_spec(tp_leaf: TPSpec, caxis, pipe_dim: int = -1) -> P:
     """Layout of one client-stacked DSC-reference leaf, global shape
     ``(n_client, *full_leaf_shape)``: client axes at the stacking dim 0,
-    ``model`` at the leaf's TP dim shifted by the stack."""
-    parts: list = [caxis] + [None] * max(tp_leaf.dim + 1, 0)
+    ``model`` at the leaf's TP dim (and ``pipe`` at the stage dim)
+    shifted by the stack."""
+    n = max(tp_leaf.dim + 1, pipe_dim + 1, 0)
+    parts: list = [caxis] + [None] * n
+    if pipe_dim >= 0:
+        parts[pipe_dim + 1] = "pipe"
     if tp_leaf.dim >= 0:
-        parts[tp_leaf.dim + 1] = "model"
+        prev = parts[tp_leaf.dim + 1]
+        parts[tp_leaf.dim + 1] = ("model" if prev is None
+                                  else (prev, "model"))
     return P(*parts)
 
 
@@ -214,11 +278,24 @@ def shift_state_dtype(name: str):
 
 def tp_param_in_specs(cfg, mesh: Mesh) -> Any:
     """shard_map in_specs for the parameter broadcast: sharded over
-    ``model`` at each leaf's TP dim, replicated over the client axes (the
-    boundary all-gather is the FSA broadcast, Algorithm 1 line 14)."""
+    ``model`` at each leaf's TP dim and ``pipe`` at the block leaves'
+    L-stack, replicated over the client axes (the boundary all-gather is
+    the FSA broadcast, Algorithm 1 line 14)."""
     tp = _model_size(mesh)
-    return jax.tree.map(lambda s: _spec_with(s.dim, "model"),
-                        tp_specs(cfg, tp))
+    pp = _pipe_size(mesh)
+
+    def one(s: TPSpec, pd: int) -> P:
+        hi = max(s.dim, pd)
+        if hi < 0:
+            return P()
+        parts: list = [None] * (hi + 1)
+        if pd >= 0:
+            parts[pd] = "pipe"
+        if s.dim >= 0:
+            parts[s.dim] = "model"
+        return P(*parts)
+
+    return jax.tree.map(one, tp_specs(cfg, tp), pipe_dims(cfg, pp))
 
 
 def _use_spec(shape: tuple[int, ...], model: int) -> P:
@@ -338,14 +415,17 @@ def wire_layout_for(shape: tuple[int, ...], n_client: int) -> WireLayout:
 
 def int8_wire_layouts(cfg, mesh: Mesh) -> Any:
     """Pytree of :class:`WireLayout` matching the parameter tree (wire
-    geometry of the TP-LOCAL leaf each mesh position exchanges)."""
+    geometry of the PIPE/TP-LOCAL leaf each mesh position exchanges)."""
     n_client = client_count(mesh)
     tp = _model_size(mesh)
+    pp = _pipe_size(mesh)
     params = _abstract_params(cfg)
     specs = tp_specs(cfg, tp)
+    pdims = pipe_dims(cfg, pp)
     return jax.tree.map(
-        lambda p, s: wire_layout_for(tp_local_shape(p.shape, s, tp),
-                                     n_client), params, specs)
+        lambda p, s, pd: wire_layout_for(
+            pipe_local_shape(tp_local_shape(p.shape, s, tp), pd, pp),
+            n_client), params, specs, pdims)
 
 
 def mesh_wire_bytes(cfg, mesh: Mesh, *, int8: bool,
@@ -360,19 +440,40 @@ def mesh_wire_bytes(cfg, mesh: Mesh, *, int8: bool,
     path."""
     n_client = client_count(mesh)
     tp = _model_size(mesh)
+    pp = _pipe_size(mesh)
     params = _abstract_params(cfg)
     specs = tp_specs(cfg, tp)
+    pdims = pipe_dims(cfg, pp)
     total = 0
-    for p, s, lay in zip(jax.tree.leaves(params),
-                         jax.tree.leaves(specs),
-                         jax.tree.leaves(int8_wire_layouts(
-                             cfg, mesh),
-                             is_leaf=lambda x: isinstance(x, WireLayout))):
-        elems = int(np.prod(tp_local_shape(p.shape, s, tp)))
+    for p, s, pd, lay in zip(
+            jax.tree.leaves(params), jax.tree.leaves(specs),
+            jax.tree.leaves(pdims),
+            jax.tree.leaves(int8_wire_layouts(cfg, mesh),
+                            is_leaf=lambda x: isinstance(x, WireLayout))):
+        elems = int(np.prod(pipe_local_shape(
+            tp_local_shape(p.shape, s, tp), pd, pp)))
         if int8 and lay.dim >= 0:
             total += n_client * lay.wire_bytes
         else:
             total += elems * grad_bytes
+    return total
+
+
+def param_bytes_per_device(cfg, mesh: Mesh) -> int:
+    """Resident parameter bytes per device in the COMPUTE layout (every
+    leaf at its pipe/TP-local shape, client-replicated) — the number the
+    ≥26B acceptance bound (total / (tp * pp) within the replicated-leaf
+    slack) is checked against in ``benchmarks/tp_snapshot``."""
+    tp = _model_size(mesh)
+    pp = _pipe_size(mesh)
+    params = _abstract_params(cfg)
+    specs = tp_specs(cfg, tp)
+    pdims = pipe_dims(cfg, pp)
+    total = 0
+    for p, s, pd in zip(jax.tree.leaves(params), jax.tree.leaves(specs),
+                        jax.tree.leaves(pdims)):
+        shape = pipe_local_shape(tp_local_shape(p.shape, s, tp), pd, pp)
+        total += int(np.prod(shape)) * jnp.dtype(p.dtype).itemsize
     return total
 
 

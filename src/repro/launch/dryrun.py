@@ -29,13 +29,15 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
             use_dsc: bool = False, fsa: bool = True,
             grad_dtype: str = "float16", int8_wire: bool = False,
             save_hlo: bool = False, out_dir: str = "experiments/dryrun",
-            tag: str = "", opt: str = "") -> dict:
+            tag: str = "", opt: str = "", pp: int = 1,
+            microbatches: int = 1) -> dict:
     import dataclasses
     from repro.configs import get_config
     from repro.launch.mesh import make_production_mesh
     from repro.launch.shapes import SHAPES
     from repro.launch import train as train_lib
     from repro.launch import serve as serve_lib
+    from repro.models import shard_plan as sp_lib
 
     cfg = get_config(arch)
     # XLA *CPU* aborts on bf16 all-reduce (AllReducePromotion pass bug).
@@ -51,14 +53,15 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
             kw[k] = {"true": True, "false": False}.get(
                 v.lower(), int(v) if v.isdigit() else v)
         cfg = dataclasses.replace(cfg, **kw)
-    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh = make_production_mesh(multi_pod=multi_pod, pipe=pp)
     shape = SHAPES[shape_name]
     n_dev = int(np.prod(mesh.devices.shape))
     t0 = time.time()
     if shape.kind == "train":
         settings = train_lib.TrainSettings(use_dsc=use_dsc, fsa=fsa,
                                            grad_dtype=grad_dtype,
-                                           int8_wire=int8_wire)
+                                           int8_wire=int8_wire,
+                                           microbatches=microbatches)
         lowered = train_lib.lower_train_step(cfg, mesh, shape_name, settings)
     else:
         lowered = serve_lib.lower_step(cfg, mesh, shape_name)
@@ -73,9 +76,12 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
     if isinstance(cost, list):          # older jax: one dict per partition
         cost = cost[0] if cost else {}
     hlo = compiled.as_text()
-    model_size = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    model_size = sizes.get("model", 1)
+    pipe_size = sizes.get("pipe", 1)
     from repro.launch import hlo_analysis
-    deep = hlo_analysis.analyze(hlo, model_axis_size=int(model_size))
+    deep = hlo_analysis.analyze(hlo, model_axis_size=int(model_size),
+                                pipe_axis_size=int(pipe_size))
 
     from repro.models.transformer import (active_param_count, param_count,
                                           tp_plan)
@@ -83,9 +89,11 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
     from repro.dist import sharding as sh_lib
     n_tp_sharded = sum(s.dim >= 0 for s in jax.tree_util.tree_leaves(
         sh_lib.tp_specs(cfg, int(model_size))))
+    pipe_plan = sp_lib.build_pipeline_plan(cfg, int(pipe_size),
+                                           microbatches)
     record = {
         "arch": arch, "shape": shape_name,
-        "mesh": "2x16x16" if multi_pod else "16x16",
+        "mesh": "x".join(str(d) for d in mesh.devices.shape),
         "devices": n_dev, "kind": shape.kind,
         "fsa": fsa, "use_dsc": use_dsc, "grad_dtype": grad_dtype,
         "int8_wire": int8_wire,
@@ -93,8 +101,14 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
         "tp": {"size": int(model_size), "attn": plan.attn,
                "ffn": plan.ffn, "vocab": plan.vocab, "moe": plan.moe,
                "mixer": plan.mixer, "seq": plan.seq,
+               "ctx": plan.ctx, "seq_ce": plan.seq_ce,
                "sharded_leaves": int(n_tp_sharded)} if shape.kind == "train"
         else {"size": int(model_size)},
+        "pp": {"size": int(pipe_size),
+               "microbatches": int(microbatches),
+               "layers_per_stage": pipe_plan.layers_per_stage,
+               "bubble_fraction": pipe_plan.bubble_fraction},
+        "param_bytes_per_device": sh_lib.param_bytes_per_device(cfg, mesh),
         "tag": tag,
         "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
         "params": param_count(cfg),
@@ -115,7 +129,8 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
     }
     out = Path(out_dir)
     out.mkdir(parents=True, exist_ok=True)
-    suffix = ("_mp" if multi_pod else "") + (f"_{tag}" if tag else "")
+    suffix = ("_mp" if multi_pod else "") \
+        + (f"_pp{pp}" if pp > 1 else "") + (f"_{tag}" if tag else "")
     fname = out / f"{arch.replace('.', '_')}__{shape_name}{suffix}.json"
     fname.write_text(json.dumps(record, indent=1))
     if save_hlo:
@@ -139,13 +154,17 @@ def main():
     ap.add_argument("--opt", default="",
                     help="ModelConfig overrides, e.g. "
                          "seq_parallel=true,vocab=50176")
+    ap.add_argument("--pp", type=int, default=1,
+                    help="pipe axis size (carved out of the data dim)")
+    ap.add_argument("--microbatches", type=int, default=1,
+                    help="1F1B microbatch count (train shapes)")
     ap.add_argument("--out", default="experiments/dryrun")
     args = ap.parse_args()
     rec = run_one(args.arch, args.shape, args.multi_pod, args.dsc,
                   fsa=not args.no_fsa, grad_dtype=args.grad_dtype,
                   int8_wire=args.int8_wire,
                   save_hlo=args.save_hlo, out_dir=args.out, tag=args.tag,
-                  opt=args.opt)
+                  opt=args.opt, pp=args.pp, microbatches=args.microbatches)
     mem_gib = rec["memory"]["peak_bytes"] / 2**30
     print(f"OK {rec['arch']} {rec['shape']} mesh={rec['mesh']} "
           f"compile={rec['compile_s']}s peak={mem_gib:.2f}GiB/dev "

@@ -36,6 +36,7 @@ COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
 _GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
 _IOTA_RE = re.compile(
     r"replica_groups=\[(\d+),(\d+)\]<=\[([0-9,]+)\](?:T\(([0-9,]+)\))?")
+_PAIRS_RE = re.compile(r"source_target_pairs=\{((?:\{\d+,\d+\},?)+)\}")
 
 
 def _first_group(line: str):
@@ -58,20 +59,66 @@ def _first_group(line: str):
     return None
 
 
-def _classify_axis(group, model_size: int) -> str:
+def _classify_axis(group, model_size: int, pipe_size: int = 1) -> str:
     """Mesh-axis label of one collective from its replica-group shape.
 
     The ``model`` axis is the minor-most mesh axis, so model-axis
-    collectives run over ``model_size`` CONSECUTIVE device ids; client-
-    axis collectives stride over the model dimension (stride ==
-    model_size).  Anything else (or no groups = every device) is 'all'.
+    collectives run over ``model_size`` CONSECUTIVE device ids; the
+    ``pipe`` axis (when real) sits one stride up (stride ==
+    model_size, group length == pipe_size); client-axis collectives
+    stride over everything below them (stride == model_size *
+    pipe_size).  Anything else (or no groups = every device) is 'all'.
     """
     if not group:
         return "all"
     stride = group[1] - group[0] if len(group) > 1 else 1
     if model_size > 1 and len(group) == model_size and stride == 1:
         return "model"
-    if stride == model_size or model_size == 1:
+    if (pipe_size > 1 and len(group) == pipe_size
+            and stride == model_size):
+        return "pipe"
+    if stride == model_size * pipe_size or model_size * pipe_size == 1:
+        return "client"
+    return "all"
+
+
+def _permute_stride(line: str):
+    """Modal |target - source| id delta of a collective-permute's
+    source-target cycle, or None when unparseable.  A ring over a mesh
+    axis hops size(minor axes) ids n-1 times in one direction (delta
+    +/-stride, sign by ring direction) and wraps once (delta of the
+    opposite sign, magnitude stride*(n-1)), so the most common ABSOLUTE
+    delta is the axis stride either way — a positive-only mode would
+    misfile every reverse-direction ring (backward K/V rotation, the
+    second half of a bidirectional chunk ring) under its wraparound."""
+    m = _PAIRS_RE.search(line)
+    if not m:
+        return None
+    deltas: dict[int, int] = {}
+    for ms, mt in re.findall(r"\{(\d+),(\d+)\}", m.group(1)):
+        d = abs(int(mt) - int(ms))
+        if d > 0:
+            deltas[d] = deltas.get(d, 0) + 1
+    if not deltas:
+        return None
+    return max(deltas, key=lambda d: (deltas[d], -d))
+
+
+def _classify_permute(stride, model_size: int, pipe_size: int = 1) -> str:
+    """Mesh-axis label of one collective-permute from its cycle stride:
+    ppermutes carry no replica_groups, so the ``_classify_axis`` path
+    filed them all under 'all' (mispricing ring traffic at the full
+    device count).  Stride 1 = the minor-most ``model`` ring (TP
+    ring-all-reduce hops, context-parallel K/V rotation); stride ==
+    model_size = the ``pipe`` boundary send; stride == model_size *
+    pipe_size = a client-axis ring."""
+    if stride is None:
+        return "all"
+    if model_size > 1 and stride == 1:
+        return "model"
+    if pipe_size > 1 and stride == model_size:
+        return "pipe"
+    if stride == model_size * pipe_size:
         return "client"
     return "all"
 
@@ -247,7 +294,8 @@ class HloModule:
                 total += m * 2.0 * out_elems * k
         return total
 
-    def collective_bytes(self, model_axis_size: int = 1) -> dict:
+    def collective_bytes(self, model_axis_size: int = 1,
+                         pipe_axis_size: int = 1) -> dict:
         """Payload bytes per collective kind, trip-count weighted.  The
         payload is max(operand bytes, result bytes) — i.e. the full
         logical tensor crossing the interconnect.
@@ -260,9 +308,11 @@ class HloModule:
         ``all-to-all``; the reduce-scatter stage's dtype is therefore read
         from reduce-scatter ops when present and all-to-all ops otherwise.
 
-        With ``model_axis_size`` the per-op replica groups additionally
-        classify every collective onto its mesh axis — ``axes`` maps
-        {model | client | all} -> {kind -> payload bytes},
+        With ``model_axis_size`` (and ``pipe_axis_size`` when the mesh
+        has a real pipe axis) the per-op replica groups — or, for
+        collective-permutes, the source-target cycle stride — classify
+        every collective onto its mesh axis — ``axes`` maps
+        {model | pipe | client | all} -> {kind -> payload bytes},
         ``axis_counts`` the trip-weighted op counts, and ``axis_dtypes``
         the per-axis dtype split — separating the tensor-parallel
         traffic (Megatron psums, seq-parallel psum_scatter/all_gather
@@ -288,8 +338,15 @@ class HloModule:
                 operand_b = self._operand_bytes(op["rest"])
                 out[kind] += m * max(result_b, operand_b)
                 counts[kind] += int(m)
-                axis = _classify_axis(_first_group(op["line"]),
-                                      model_axis_size)
+                if kind == "collective-permute":
+                    # ppermutes carry source_target_pairs, not
+                    # replica_groups: classify from the cycle stride
+                    axis = _classify_permute(_permute_stride(op["line"]),
+                                             model_axis_size,
+                                             pipe_axis_size)
+                else:
+                    axis = _classify_axis(_first_group(op["line"]),
+                                          model_axis_size, pipe_axis_size)
                 ax = axes.setdefault(axis, {})
                 ax[kind] = ax.get(kind, 0.0) + m * max(result_b, operand_b)
                 axc = axis_counts.setdefault(axis, {})
@@ -458,8 +515,10 @@ class HloModule:
         return total
 
 
-def analyze(hlo_text: str, model_axis_size: int = 1) -> dict:
+def analyze(hlo_text: str, model_axis_size: int = 1,
+            pipe_axis_size: int = 1) -> dict:
     mod = HloModule(hlo_text)
     return {"flops": mod.flops(),
-            "collective_bytes": mod.collective_bytes(model_axis_size),
+            "collective_bytes": mod.collective_bytes(model_axis_size,
+                                                     pipe_axis_size),
             "traffic_bytes": mod.traffic_bytes()}

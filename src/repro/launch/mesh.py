@@ -8,34 +8,54 @@ from __future__ import annotations
 import jax
 
 
-def make_production_mesh(*, multi_pod: bool = False):
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+def make_production_mesh(*, multi_pod: bool = False, pipe: int = 1):
+    """The 512-device (2 pods) / 256-device production mesh.  ``pipe``
+    carves pipeline stages out of the DATA dimension (16 % pipe == 0)
+    so 'model' stays minor-most: TP rings ride the fastest stride-1
+    links, pipe boundary ppermutes one stride up, and the client axes
+    keep the slowest (cross-pod) hops."""
+    if pipe < 1 or 16 % pipe != 0:
+        raise ValueError(f"pipe={pipe} must divide the 16-wide data dim")
+    if pipe == 1:
+        shape = (2, 16, 16) if multi_pod else (16, 16)
+        axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+        return jax.make_mesh(shape, axes)
+    shape = ((2, 16 // pipe, pipe, 16) if multi_pod
+             else (16 // pipe, pipe, 16))
+    axes = (("pod", "data", "pipe", "model") if multi_pod
+            else ("data", "pipe", "model"))
     return jax.make_mesh(shape, axes)
 
 
-def make_host_mesh(data: int | None = None, model: int = 1):
-    """Small (data, model) mesh over whatever devices exist (tests /
-    examples).  Validates the factorization up front — ``jax.make_mesh``
-    would otherwise silently build a mesh over a subset (or fail deep in
-    device assignment) when the axis sizes don't divide the host devices.
-    """
+def make_host_mesh(data: int | None = None, model: int = 1,
+                   pipe: int = 1):
+    """Small (data[, pipe], model) mesh over whatever devices exist
+    (tests / examples).  Validates the factorization up front —
+    ``jax.make_mesh`` would otherwise silently build a mesh over a
+    subset (or fail deep in device assignment) when the axis sizes don't
+    divide the host devices."""
     n = len(jax.devices())
-    if model < 1 or n % model != 0:
+    if pipe < 1:
+        raise ValueError(f"pipe axis size {pipe} must be >= 1")
+    inner = model * pipe
+    if model < 1 or inner < 1 or n % inner != 0:
         raise ValueError(
-            f"model axis size {model} must divide the {n} available "
-            f"device(s) (n % model == {n % model if model else 'undef'}); "
-            f"pick --model-axis from the divisors of {n}, or raise the "
-            f"device count via XLA_FLAGS=--xla_force_host_platform_"
+            f"model axis size {model} x pipe {pipe} must divide the {n} "
+            f"available device(s) (n % (model*pipe) == "
+            f"{n % inner if inner else 'undef'}); "
+            f"pick --model-axis/--pp from the divisors of {n}, or raise "
+            f"the device count via XLA_FLAGS=--xla_force_host_platform_"
             f"device_count=<n>")
     if data is None:
-        data = n // model
-    if data < 1 or data * model != n:
+        data = n // inner
+    if data < 1 or data * inner != n:
         raise ValueError(
-            f"mesh ({data} data x {model} model) needs {data * model} "
-            f"devices but {n} are available; leave data=None to infer "
-            f"data = n // model = {n // model}")
-    return jax.make_mesh((data, model), ("data", "model"))
+            f"mesh ({data} data x {pipe} pipe x {model} model) needs "
+            f"{data * inner} devices but {n} are available; leave "
+            f"data=None to infer data = n // (model*pipe) = {n // inner}")
+    if pipe == 1:
+        return jax.make_mesh((data, model), ("data", "model"))
+    return jax.make_mesh((data, pipe, model), ("data", "pipe", "model"))
 
 
 # hardware constants for the roofline model (TPU v5e)

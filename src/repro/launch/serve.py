@@ -10,15 +10,10 @@ step for a named production shape).
 Params are in the *use* layout (tensor-parallel, replicated over client
 axes); caches shard the batch dim over client axes and kv-heads/state
 over 'model'.
-
-The pre-redesign free functions (``make_prefill_step`` /
-``make_decode_step`` / ``lower_serve_step``) remain as deprecated shims
-for one release; new code goes through ``lower_step`` or the engine.
 """
 from __future__ import annotations
 
 import functools
-import warnings
 from typing import Optional
 
 import jax
@@ -89,25 +84,3 @@ def lower_step(cfg: ModelConfig, mesh: Mesh, shape_name: str,
     with mesh:
         return jitted.lower(params, specs["cache"], specs["token"],
                             specs["pos"])
-
-
-# ------------------------------------------------- deprecated shims (one PR)
-def _deprecated(old: str, new: str) -> None:
-    warnings.warn(f"repro.launch.serve.{old} is deprecated; use {new}",
-                  DeprecationWarning, stacklevel=3)
-
-
-def make_prefill_step(cfg: ModelConfig, mesh: Mesh):
-    _deprecated("make_prefill_step", "lower_step / ServeEngine")
-    return _prefill_fn(cfg)
-
-
-def make_decode_step(cfg: ModelConfig, mesh: Mesh,
-                     window: Optional[int] = None):
-    _deprecated("make_decode_step", "lower_step / ServeEngine")
-    return _decode_fn(cfg, window)
-
-
-def lower_serve_step(cfg: ModelConfig, mesh: Mesh, shape_name: str):
-    _deprecated("lower_serve_step", "lower_step")
-    return lower_step(cfg, mesh, shape_name)

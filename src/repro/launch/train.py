@@ -62,6 +62,7 @@ from repro.core.pipeline import (ARRIVAL_SALT, ArrivalModel, CohortSample,
 from repro.core.settings import AsyncSettings, resolve_async
 from repro.dist import sharding as sh
 from repro.launch import shapes as shp
+from repro.models import shard_plan as sp
 from repro.models import transformer as tr
 from repro.models.config import ModelConfig
 from repro.optim import Optimizer, adam
@@ -81,6 +82,10 @@ class TrainSettings:
     shift_dtype: str = "float32"     # DSC shift-state residency (bf16
                                      # halves the resident s_k/s_agg bytes;
                                      # kernels widen to f32 on the fly)
+    microbatches: int = 1            # 1F1B microbatch count when the mesh
+                                     # has a real 'pipe' axis (the
+                                     # wavefront scan runs m + p - 1 ticks;
+                                     # bubble fraction (p-1)/(m+p-1))
     remat: bool = True
     fsa: bool = True                 # False => FedAvg all-reduce baseline
     capture_views: bool = False      # adversary-view tap: return, per
@@ -140,6 +145,7 @@ def dsc_spec_tree(cfg: ModelConfig, mesh: Mesh, settings: TrainSettings):
     tree."""
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
     tp_spec_tree = sh.tp_specs(cfg, int(sizes.get("model", 1)))
+    pdim_tree = sh.pipe_dims(cfg, int(sizes.get("pipe", 1)))
     if not settings.use_dsc:
         specs = jax.tree.map(lambda s: P(), tp_spec_tree)
     else:
@@ -147,7 +153,8 @@ def dsc_spec_tree(cfg: ModelConfig, mesh: Mesh, settings: TrainSettings):
         caxis = ca if len(ca) > 1 else ca[0]
         specs = {
             "s_clients": jax.tree.map(
-                lambda s: sh.dsc_store_spec(s, caxis), tp_spec_tree),
+                lambda s, pd: sh.dsc_store_spec(s, caxis, pd),
+                tp_spec_tree, pdim_tree),
             "s_agg": (sh.store_specs(cfg, mesh) if settings.fsa
                       else sh.tp_param_in_specs(cfg, mesh)),
         }
@@ -303,23 +310,42 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh, opt: Optimizer,
     tp_plan = tr.tp_plan(cfg, model_size)
     use_tp = tp_plan.active
     tp_spec_tree = sh.tp_specs(cfg, model_size)
+    pipe_size = int(sizes.get("pipe", 1))
+    pipe_plan = sp.build_pipeline_plan(cfg, pipe_size, settings.microbatches)
+    use_pipe = pipe_plan.active
+    if pipe_size > 1 and not use_pipe:
+        raise ValueError(
+            f"mesh has a pipe axis of size {pipe_size} but no pipeline "
+            f"plan applies to family={cfg.family!r} with "
+            f"n_layers={cfg.n_layers} (layers must split into equal "
+            f"contiguous stages) — drop the pipe axis or pick a "
+            f"divisible stage count")
+    if settings.capture_views and pipe_size > 1:
+        raise ValueError(
+            "capture_views does not compose with a pipe axis yet: the "
+            "adversary-view tap concatenates wire segments over 'model' "
+            "only, so stage-sliced block leaves would alias")
+    pipe_dim_tree = sh.pipe_dims(cfg, pipe_size)
     scatter_dims = sh.fsa_scatter_dims(cfg, mesh) if settings.fsa else None
     store = sh.param_shardings(cfg, mesh, "store" if settings.fsa else "use")
 
-    def loss_fn(params, batch, tp=None):
+    def loss_fn(params, batch, tp=None, pipe=None):
+        if pipe is not None:
+            return tr.pipeline_loss_fn(params, cfg, batch, tp=tp, pipe=pipe)
         return tr.loss_fn(params, cfg, batch, tp=tp)
 
     # ---------------- the manual (per-mesh-position) body -----------------
-    def fsa_body(aidx_arr, midx_arr, params, opt_state, dsc_ref, batch, key,
-                 *, model_split):
-        # params arrive as this model position's TP shards, replicated
-        # over the client axes (the all-gather / broadcast happened at the
-        # shard_map boundary); batch is this client group's shard, further
-        # split over the model axis only when model_split (the non-TP
-        # fallback).  aidx_arr/midx_arr are this position's slices of
-        # arange(n_client)/arange(model) — the aggregator id and model
-        # coordinate (axis_index lowers to an unsupported PartitionId
-        # under manual SPMD, so both ride in as sharded inputs instead).
+    def fsa_body(aidx_arr, midx_arr, pidx_arr, params, opt_state, dsc_ref,
+                 batch, key, *, model_split):
+        # params arrive as this position's pipe-stage x TP shards,
+        # replicated over the client axes (the all-gather / broadcast
+        # happened at the shard_map boundary); batch is this client
+        # group's shard, further split over the model axis only when
+        # model_split (the non-TP fallback).  aidx_arr/midx_arr/pidx_arr
+        # are this position's slices of arange(n_client)/arange(model)/
+        # arange(pipe) — the aggregator id and model/pipe coordinates
+        # (axis_index lowers to an unsupported PartitionId under manual
+        # SPMD, so all three ride in as sharded inputs instead).
         aidx = aidx_arr[0]
         buf_ref = None
         if settings.async_buffer:
@@ -333,13 +359,22 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh, opt: Optimizer,
             _, alive, omega = arrival.draw(
                 jax.random.fold_in(key, ARRIVAL_SALT), n_client)
             w_round = omega.mean()
-        if use_tp:
-            tp_rt = tr.TPRuntime("model", model_size, midx_arr[0], tp_plan)
-            loss_val, grads = jax.value_and_grad(loss_fn)(params, batch,
-                                                          tp_rt)
+        if use_tp or use_pipe:
+            tp_rt = (tr.TPRuntime("model", model_size, midx_arr[0], tp_plan)
+                     if use_tp else None)
+            pipe_rt = (sp.PipeRuntime("pipe", pipe_size, pidx_arr[0],
+                                      pipe_plan) if use_pipe else None)
+            loss_val, grads = jax.value_and_grad(loss_fn)(
+                params, batch, tp_rt, pipe_rt)
             # partial-kind leaves (replicated values consumed on local
             # shards, e.g. qk-norm scales) sum their grads over 'model'
-            grads = sh.tp_grad_sync(grads, tp_spec_tree, "model")
+            if use_tp:
+                grads = sh.tp_grad_sync(grads, tp_spec_tree, "model")
+            if use_pipe:
+                # pipe-replicated leaves (embed/head/ln_f) accumulated
+                # only where their stage touched them — sum over 'pipe';
+                # stage-sliced block leaves are already complete locally
+                grads = sh.pipe_grad_sync(grads, pipe_dim_tree, "pipe")
             loss_val = jax.lax.pmean(loss_val, caxis)
         else:
             loss_val, grads = jax.value_and_grad(loss_fn)(params, batch)
@@ -518,14 +553,23 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh, opt: Optimizer,
 
         sq = [jnp.sum(jnp.square(g.astype(jnp.float32)))
               for g in jax.tree.leaves(grads)]
-        if use_tp:
-            # TP-sharded leaves are disjoint over 'model'; replicated ones
-            # must not be double-counted by the model-axis sum
-            tps = [s.dim >= 0 for s in jax.tree.leaves(tp_spec_tree)]
-            gn2 = jax.lax.psum(sum(x for x, t in zip(sq, tps) if t)
-                               + jnp.zeros((), jnp.float32), "model") \
-                + sum((x for x, t in zip(sq, tps) if not t),
-                      jnp.zeros((), jnp.float32))
+        if use_tp or use_pipe:
+            # TP-sharded leaves are disjoint over 'model' and block leaves
+            # disjoint over 'pipe'; replicated ones must not be
+            # double-counted by either axis sum — bucket each leaf by the
+            # axes it is actually sharded over and psum per bucket
+            tps = [s.dim >= 0 and use_tp
+                   for s in jax.tree.leaves(tp_spec_tree)]
+            pps = [pd >= 0 and use_pipe
+                   for pd in jax.tree.leaves(pipe_dim_tree)]
+            zero = jnp.zeros((), jnp.float32)
+            buckets: dict = {}
+            for x, t, pl in zip(sq, tps, pps):
+                axes = (("model",) if t else ()) + (("pipe",) if pl else ())
+                buckets[axes] = buckets.get(axes, zero) + x
+            gn2 = zero
+            for axes, tot in buckets.items():
+                gn2 = gn2 + (jax.lax.psum(tot, axes) if axes else tot)
         else:
             gn2 = sum(sq)
         gnorm = jax.lax.psum(gn2, caxis) ** 0.5 \
@@ -575,11 +619,13 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh, opt: Optimizer,
             # divides all mesh positions, else replicated (see module
             # docstring)
             b0 = jax.tree.leaves(batch)[0].shape[0]
-            model_split = (not use_tp and model_size > 1
+            model_split = (not use_tp and not use_pipe and model_size > 1
                            and b0 % (n_client * model_size) == 0)
             batch_spec = P((*ca, "model")) if model_split else P(caxis)
+            pidx_spec = P("pipe") if "pipe" in mesh.axis_names else P()
             in_specs = (P(caxis),                                 # aidx
                         P("model"),                               # midx
+                        pidx_spec,                                # pidx
                         param_in_specs,                           # broadcast
                         opt_specs, dsc_specs,
                         jax.tree.map(lambda _: batch_spec, batch),
@@ -593,6 +639,7 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh, opt: Optimizer,
                 in_specs=in_specs, out_specs=out_specs)
             return fn(jnp.arange(n_client, dtype=jnp.int32),
                       jnp.arange(model_size, dtype=jnp.int32),
+                      jnp.arange(pipe_size, dtype=jnp.int32),
                       params_stored, opt_state, dsc_ref, batch, key)
         return step
 
@@ -722,6 +769,10 @@ def main():  # pragma: no cover - thin CLI over the factories
     ap.add_argument("--int8-wire", action="store_true")
     ap.add_argument("--data-axis", type=int, default=None)
     ap.add_argument("--model-axis", type=int, default=1)
+    ap.add_argument("--pp", type=int, default=1,
+                    help="pipe axis size (contiguous layer stages)")
+    ap.add_argument("--microbatches", type=int, default=1,
+                    help="1F1B microbatch count (must divide --batch)")
     ap.add_argument("--save", default=None, metavar="DIR",
                     help="write the final params as a sharded checkpoint "
                          "directory (the ServeEngine.from_checkpoint "
@@ -730,10 +781,12 @@ def main():  # pragma: no cover - thin CLI over the factories
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = cfg.smoke()
-    mesh = make_host_mesh(data=args.data_axis, model=args.model_axis)
+    mesh = make_host_mesh(data=args.data_axis, model=args.model_axis,
+                          pipe=args.pp)
     opt = adam(args.lr)
     settings = TrainSettings(use_dsc=args.dsc, grad_dtype="float32",
-                             int8_wire=args.int8_wire)
+                             int8_wire=args.int8_wire,
+                             microbatches=args.microbatches)
     step, shardings = make_train_step(cfg, mesh, opt, settings)
     key = jax.random.PRNGKey(0)
     with mesh:

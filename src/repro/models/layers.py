@@ -105,8 +105,11 @@ def tp_psum(x, axis):
     """psum forward AND backward — for reduction statistics whose output
     is consumed on every shard (e.g. the channel-sharded RMS-norm
     variance): every position's cotangent contributes to every
-    position's operand, so the backward must itself sum over the axis
-    (jax's default psum transpose is per-position identity)."""
+    position's operand, so the backward must itself sum over the axis.
+    (Under the manual region's check_rep=False a plain ``jax.lax.psum``
+    happens to transpose to psum as well, but spelling the pair out
+    keeps the semantics independent of that implementation detail —
+    see ``tp_pull`` for the identity-backward exit.)"""
     return jax.lax.psum(x, axis)
 
 
@@ -247,6 +250,110 @@ def tp_enter(x, axis, ring: int = 0):
 def tp_exit(x, axis, ring: int = 0):
     """tp_pull, or its ring-overlapped variant."""
     return tp_pull_ring(x, axis, ring) if ring else tp_pull(x, axis)
+
+
+# ------------------------------------------- context-parallel (ring) region
+# When Megatron head-sharding can't divide (odd heads, GQA kv < tp) the
+# attention region shards the SEQUENCE over the model axis instead.  The
+# region is entered by slicing this position's S/n chunk off the
+# replicated activations and exited by gathering the chunks back; inside,
+# K/V chunks rotate through a ppermute ring with online-softmax
+# accumulation (the block recurrence of ``kernels/flash_attention``, one
+# ring hop per block row).  The enter/exit conjugates are NOT
+# tp_seq_gather/tp_seq_scatter: those assume partial-sum cotangents,
+# whereas here the surrounding activations are replicated with
+# replicated-complete cotangents — enter's backward ASSEMBLES the
+# disjoint chunk cotangents (all-gather, no reduction) and exit's
+# backward takes this position's slice of the replicated cotangent.
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def ctx_enter(x, axis, n):
+    """Enter a ring region: slice my sequence chunk forward, assemble
+    the chunk cotangents (all-gather) backward.  x: (B, S, ...)."""
+    c = x.shape[1] // n
+    idx = _ring_index(axis, n)
+    return jax.lax.dynamic_slice_in_dim(x, idx * c, c, 1)
+
+
+def _ctx_enter_fwd(x, axis, n):
+    c = x.shape[1] // n
+    idx = _ring_index(axis, n)
+    return jax.lax.dynamic_slice_in_dim(x, idx * c, c, 1), None
+
+
+def _ctx_enter_bwd(axis, n, _, ct):
+    return (jax.lax.all_gather(ct, axis, axis=1, tiled=True),)
+
+
+ctx_enter.defvjp(_ctx_enter_fwd, _ctx_enter_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def ctx_exit(y, axis, n):
+    """Exit a ring region: gather the chunks forward, slice my chunk of
+    the (replicated) cotangent backward.  y: (B, S/n, ...)."""
+    return jax.lax.all_gather(y, axis, axis=1, tiled=True)
+
+
+def _ctx_exit_fwd(y, axis, n):
+    return jax.lax.all_gather(y, axis, axis=1, tiled=True), None
+
+
+def _ctx_exit_bwd(axis, n, _, ct):
+    c = ct.shape[1] // n
+    idx = _ring_index(axis, n)
+    return (jax.lax.dynamic_slice_in_dim(ct, idx * c, c, 1),)
+
+
+ctx_exit.defvjp(_ctx_exit_fwd, _ctx_exit_bwd)
+
+
+def ring_attention(q, k, v, axis, n, *, window: Optional[int] = None):
+    """Causal GQA attention over sequence chunks ring-rotated on ``axis``.
+
+    q: (B, C, H, hd) — this position's query chunk (C = S/n, global
+    offset ``ring_index * C``); k/v: (B, C, KV, hd) — this position's
+    key/value chunk.  Each of the n-1 ring steps ppermutes the held K/V
+    chunk one position forward and folds it into the flash-attention
+    online-softmax recurrence (m/l/acc rescaling exactly as in
+    ``kernels/flash_attention._fwd_kernel``, with one ring hop playing
+    the role of one K-block iteration).  Plain differentiable jnp: AD of
+    the unrolled ring transposes each ppermute back around the ring, so
+    the backward needs no hand-written collectives.
+    """
+    B, C, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    idx = _ring_index(axis, n)
+    qg = q.reshape(B, C, KV, G, hd)
+    scale = hd ** -0.5
+    qpos = idx * C + jnp.arange(C)
+    perm = [(i, (i + 1) % n) for i in range(n)]
+
+    m = jnp.full((B, KV, G, C), -1e30, jnp.float32)
+    l = jnp.zeros((B, KV, G, C), jnp.float32)
+    acc = jnp.zeros((B, KV, G, C, hd), jnp.float32)
+    kh, vh = k, v
+    for t in range(n):
+        cidx = (idx - t) % n              # chunk held after t hops
+        kpos = cidx * C + jnp.arange(C)
+        s = jnp.einsum("bqkgh,bskh->bkgqs", qg, kh).astype(jnp.float32)
+        s = s * scale
+        mask = kpos[None, :] <= qpos[:, None]
+        if window is not None:
+            mask &= kpos[None, :] > qpos[:, None] - window
+        s = jnp.where(mask[None, None, None], s, -1e30)
+        m_cur = jnp.maximum(m, s.max(-1))
+        alpha = jnp.exp(m - m_cur)
+        p = jnp.exp(s - m_cur[..., None])
+        l = l * alpha + p.sum(-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bkgqs,bskh->bkgqh", p, vh.astype(jnp.float32))
+        m = m_cur
+        if t + 1 < n:
+            kh = jax.lax.ppermute(kh, axis, perm)
+            vh = jax.lax.ppermute(vh, axis, perm)
+    out = acc / l[..., None]
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, C, H, hd).astype(q.dtype)
 
 
 def rms_norm(x, scale, eps=1e-6):

@@ -68,11 +68,14 @@ class TPPlan:
     moe: bool = False        # expert-parallel MoE dispatch/combine
     mixer: bool = False      # head/channel-sharded recurrent mixer
     seq: bool = False        # sequence-sharded inter-region activations
+    ctx: int = 1             # ring-attention factor of the model axis
+    seq_ce: bool = False     # sequence-scatter the final norm (ssm/hybrid)
 
     @property
     def active(self) -> bool:
         return self.size > 1 and (self.attn or self.ffn or self.vocab
-                                  or self.moe or self.mixer)
+                                  or self.moe or self.mixer
+                                  or self.ctx > 1)
 
 
 class TPRuntime(NamedTuple):
@@ -93,35 +96,56 @@ def _attn_divides(cfg, size: int) -> bool:
     return cfg.n_heads % size == 0 and cfg.n_kv_heads % size == 0
 
 
+def _ctx_factor(cfg, size: int, attn: bool) -> int:
+    """Ring-attention factor: when Megatron head-sharding can't divide
+    (odd head counts, GQA kv < tp) the attn region shards the SEQUENCE
+    over the whole model axis instead — K/V chunks rotate through a
+    ppermute ring with online-softmax accumulation.  Head counts are
+    irrelevant to the ring, so any size qualifies; the runtime still
+    falls back per-trace when S itself doesn't divide."""
+    if attn or size <= 1 or cfg.attn_batch_shard:
+        return 1
+    return size
+
+
 def _plan_dense(cfg, size: int) -> TPPlan:
     ffn = cfg.d_ff > 0 and cfg.d_ff % size == 0
     vocab = cfg.vocab % size == 0
+    attn = _attn_divides(cfg, size)
     # seq parallelism needs the CE on vocab-sharded logits (so the
     # unembed gather has column-parallel consumers) and a sharded FFN;
     # the VLM frontend concat would break the uniform sequence shards
     seq = (cfg.seq_parallel and ffn and vocab and cfg.frontend == "none")
-    return TPPlan(size, attn=_attn_divides(cfg, size), ffn=ffn,
-                  vocab=vocab, seq=seq)
+    return TPPlan(size, attn=attn, ffn=ffn, vocab=vocab, seq=seq,
+                  ctx=_ctx_factor(cfg, size, attn))
 
 
 def _plan_moe(cfg, size: int) -> TPPlan:
-    return TPPlan(size, attn=_attn_divides(cfg, size),
+    attn = _attn_divides(cfg, size)
+    return TPPlan(size, attn=attn,
                   vocab=cfg.vocab % size == 0,
-                  moe=cfg.n_experts > 0 and cfg.n_experts % size == 0)
+                  moe=cfg.n_experts > 0 and cfg.n_experts % size == 0,
+                  ctx=_ctx_factor(cfg, size, attn))
 
 
 def _plan_ssm(cfg, size: int) -> TPPlan:
     # mixer = mLSTM heads; ffn = the gated in-block projection (2*D wide)
+    vocab = cfg.vocab % size == 0
     return TPPlan(size, ffn=(2 * cfg.d_model) % size == 0,
-                  vocab=cfg.vocab % size == 0,
-                  mixer=cfg.n_heads % size == 0)
+                  vocab=vocab,
+                  mixer=cfg.n_heads % size == 0,
+                  seq_ce=cfg.seq_parallel and vocab)
 
 
 def _plan_hybrid(cfg, size: int) -> TPPlan:
-    return TPPlan(size, attn=_attn_divides(cfg, size),
+    attn = _attn_divides(cfg, size)
+    vocab = cfg.vocab % size == 0
+    return TPPlan(size, attn=attn,
                   ffn=cfg.d_ff > 0 and cfg.d_ff % size == 0,
-                  vocab=cfg.vocab % size == 0,
-                  mixer=cfg.d_model % size == 0)
+                  vocab=vocab,
+                  mixer=cfg.d_model % size == 0,
+                  ctx=_ctx_factor(cfg, size, attn),
+                  seq_ce=cfg.seq_parallel and vocab)
 
 
 _PLAN_BUILDERS = {"dense": _plan_dense, "audio": _plan_dense,
@@ -226,11 +250,13 @@ def _leaf_spec(plan: TPPlan, roles: dict, name: str) -> TPSpec:
     region, dim, kind = role
     if getattr(plan, region):
         return TPSpec(dim, kind)
-    if region == "attn" and plan.seq:
-        # replicated-attention fallback inside a seq plan: the region is
-        # entered with a gather whose backward psum_scatters, so each
-        # position's attention-weight grads cover only its sequence
-        # slice's cotangent — partial sums over the model axis
+    if region == "attn" and (plan.seq or plan.ctx > 1):
+        # seq fallback: the region is entered with a gather whose
+        # backward psum_scatters, so each position's attention-weight
+        # grads cover only its sequence slice's cotangent.  Ring (ctx)
+        # attention: weights are replicated but applied to this
+        # position's sequence CHUNK only.  Either way: partial sums
+        # over the model axis.
         return _PARTIAL
     return _REP
 
@@ -252,8 +278,115 @@ def tp_specs(cfg, size: int) -> Any:
             out["embed"] = TPSpec(0, "vocab") if plan.vocab else _REP
         elif name == "lm_head":
             out["lm_head"] = TPSpec(1, "col") if plan.vocab else _REP
-        elif name == "ln_f" and plan.seq:
+        elif name == "ln_f" and (plan.seq or plan.seq_ce):
             out["ln_f"] = _PARTIAL          # consumed on sequence shards
         else:                               # ln_f (non-seq), proj_in, ...
             out[name] = _REP
     return out
+
+
+# ======================================================== PipelinePlan
+@dataclasses.dataclass(frozen=True)
+class PipelinePlan:
+    """What the ``pipe`` mesh axis shards for one config (static).
+
+    Layers partition into ``size`` contiguous stages of
+    ``layers_per_stage`` each: stage s owns block-leaf rows
+    [s*layers_per_stage, (s+1)*layers_per_stage) of the L-stacked
+    parameter dim 0.  Non-block leaves (embed / lm_head / ln_f /
+    proj_in / frontend) replicate over ``pipe`` — every stage embeds
+    its own microbatch injection and the last stage computes the CE —
+    so their grads psum over ``pipe`` (``dist.sharding.pipe_grad_sync``).
+
+    The train body runs the microbatch grid as a single differentiable
+    ``lax.scan`` over ``microbatches + size - 1`` ticks: each tick
+    ppermutes the activation carry one stage forward while computing
+    the next microbatch locally, so stage-boundary sends overlap the
+    following microbatch's compute and AD of the scan replays the
+    wavefront in reverse — the interleaved 1F1B order enumerated by
+    :func:`pipeline_schedule`.
+    """
+
+    size: int = 1
+    n_layers: int = 0
+    microbatches: int = 1
+
+    @property
+    def active(self) -> bool:
+        return self.size > 1
+
+    @property
+    def layers_per_stage(self) -> int:
+        return self.n_layers // max(self.size, 1)
+
+    @property
+    def bubble_fraction(self) -> float:
+        """Idle fraction of the microbatch-grid scan: (p-1)/(m+p-1)."""
+        if self.size <= 1:
+            return 0.0
+        return (self.size - 1) / (self.microbatches + self.size - 1)
+
+
+class PipeRuntime(NamedTuple):
+    """Per-trace pipeline context threaded through the train body.
+    ``index`` is this position's pipe-axis coordinate (fed in as a
+    sharded input for the same manual-SPMD reason as TPRuntime)."""
+
+    axis: str
+    size: int
+    index: jax.Array
+    plan: PipelinePlan
+
+
+# Every zoo family L-stacks its block leaves at dim 0, so contiguous
+# stage slicing works uniformly; the map exists so a future family with
+# non-uniform blocks can opt out without crashing the runtime.
+PIPELINE_FAMILIES = ("dense", "audio", "vlm", "moe", "ssm", "hybrid")
+
+
+def build_pipeline_plan(cfg, size: int, microbatches: int = 1) -> PipelinePlan:
+    """The pipe-axis plan for ``cfg`` at ``size`` stages.  Inactive when
+    the family is unknown or the layer count doesn't split into equal
+    contiguous stages."""
+    if (size <= 1 or cfg.family not in PIPELINE_FAMILIES
+            or cfg.n_layers % size != 0):
+        return PipelinePlan(size=1, n_layers=cfg.n_layers,
+                            microbatches=max(microbatches, 1))
+    if microbatches < 1:
+        raise ValueError(f"microbatches must be >= 1, got {microbatches}")
+    return PipelinePlan(size=size, n_layers=cfg.n_layers,
+                        microbatches=microbatches)
+
+
+def pipeline_schedule(size: int, microbatches: int) -> list:
+    """The interleaved 1F1B order as an explicit (tick, stage, µb, dir)
+    grid — the ground truth the scan's wavefront realizes, used by the
+    schedule property test and the roofline's bubble accounting.
+
+    Returns a list of (stage, microbatch, 'F'|'B') in global execution
+    order.  Stage s warms up with ``min(size - s - 1, microbatches)``
+    forwards, then alternates 1F1B until its microbatches drain, then
+    cools down with the remaining backwards.
+    """
+    p, m = size, microbatches
+    order: list = []
+    # per-stage next-forward / next-backward microbatch cursors
+    nf = [0] * p
+    nb = [0] * p
+    # earliest tick stage s can run forward µb i: i + s (wavefront);
+    # backward µb i on stage s: (m + p - 1) + (p - 1 - s) + i of the
+    # reversed wavefront.  Emitting by tick gives a legal global order.
+    fwd_tick = {(s, i): i + s for s in range(p) for i in range(m)}
+    bwd_tick = {(s, i): (m + p - 1) + (p - 1 - s) + i
+                for s in range(p) for i in range(m)}
+    events = ([(t, s, i, "F") for (s, i), t in fwd_tick.items()]
+              + [(t, s, i, "B") for (s, i), t in bwd_tick.items()])
+    for t, s, i, d in sorted(events):
+        if d == "F":
+            assert nf[s] == i
+            nf[s] += 1
+        else:
+            assert nb[s] == i and nf[s] > i
+            nb[s] += 1
+        order.append((s, i, d))
+    return order

@@ -136,10 +136,50 @@ def init_params(key: jax.Array, cfg: ModelConfig) -> dict:
 
 
 # ================================================================= blocks
+def _attn_ctx(cfg: ModelConfig, lp, x, positions, window, tp, seq):
+    """Context-parallel (ring) attention region: the sequence, not the
+    heads, shards over the model axis — the escape hatch for configs
+    whose head counts can't divide (odd heads, GQA kv < tp).  Weights
+    are replicated (grads partial — see shard_plan._leaf_spec); each
+    position projects q/k/v for ITS S/n chunk and K/V chunks rotate
+    through the ppermute ring with online-softmax accumulation.  Under a
+    seq plan the residual stream already IS the chunk, so entry/exit are
+    free; otherwise ctx_enter/ctx_exit slice and reassemble."""
+    B = x.shape[0]
+    n = tp.size
+    h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+    if not seq:
+        h = L.ctx_enter(h, tp.axis, n)
+    C = h.shape[1]
+    cpos = jax.lax.dynamic_slice_in_dim(positions, tp.index * C, C, 1)
+    q = h @ lp["wq"]
+    k = h @ lp["wk"]
+    v = h @ lp["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + lp["bq"], k + lp["bk"], v + lp["bv"]
+    q = q.reshape(B, C, cfg.n_heads, cfg.hd)
+    k = k.reshape(B, C, cfg.n_kv_heads, cfg.hd)
+    v = v.reshape(B, C, cfg.n_kv_heads, cfg.hd)
+    if cfg.qk_norm:
+        q = L.rms_norm(q, lp["q_norm"], cfg.norm_eps)
+        k = L.rms_norm(k, lp["k_norm"], cfg.norm_eps)
+    q = L.rope(q, cpos, cfg.rope_theta)
+    k = L.rope(k, cpos, cfg.rope_theta)
+    out = L.ring_attention(q, k, v, tp.axis, n, window=window)
+    y = out.reshape(B, C, cfg.n_heads * cfg.hd) @ lp["wo"]
+    if not seq:
+        y = L.ctx_exit(y, tp.axis, n)
+    return x + y, None
+
+
 def _attn(cfg: ModelConfig, lp, x, positions, mode, cache, window, tp=None):
     B = x.shape[0]
     tp_attn = tp is not None and tp.plan.attn
     seq = tp is not None and tp.plan.seq
+    if (tp is not None and tp.plan.ctx > 1 and mode == "train"
+            and window != 0
+            and (x.shape[1] * (tp.size if seq else 1)) % tp.size == 0):
+        return _attn_ctx(cfg, lp, x, positions, window, tp, seq)
     n_heads = cfg.n_heads // (tp.size if tp_attn else 1)
     n_kv = cfg.n_kv_heads // (tp.size if tp_attn else 1)
     h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
@@ -507,11 +547,21 @@ def forward(params, cfg: ModelConfig, tokens, frontend_embeds=None,
         body = jax.checkpoint(body, prevent_cse=False,
                               policy=_remat_policy(cfg.remat_policy))
     x, (caches, lb) = jax.lax.scan(body, x, params["blocks"])
+    # seq_ce (ssm/hybrid, whose residual stream stays replicated): run
+    # the final-norm region on this position's sequence chunk — entered
+    # with a slice whose backward ASSEMBLES the chunk cotangents
+    # (ctx_enter), exited into the unembed through the seq conjugate
+    # (all-gather fwd, psum_scatter bwd) so the vocab-partial dL/dx is
+    # summed exactly once.  ln_f grads become partial (shard_plan).
+    seq_ce = (tp is not None and tp.plan.seq_ce and not seq
+              and mode == "train" and x.shape[1] % tp.size == 0)
+    if seq_ce:
+        x = L.ctx_enter(x, tp.axis, tp.size)
     x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
     head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
     if tp is not None and tp.plan.vocab:
         # column-parallel unembed; a seq plan assembles the sequence here
-        x = (L.tp_seq_gather(x, tp.axis, 1) if seq
+        x = (L.tp_seq_gather(x, tp.axis, 1) if (seq or seq_ce)
              else L.tp_enter(x, tp.axis, _ring(cfg, tp)))
     logits = x @ head
     return logits, caches, {"load_balance": lb.mean()}
@@ -544,6 +594,15 @@ def loss_fn(params, cfg: ModelConfig, batch, window=None,
     logits, _, aux = forward(params, cfg, tokens,
                              batch.get("frontend_embeds"), "train", window,
                              tp=tp, inputs_embeds=batch.get("inputs_embeds"))
+    nll = _ce(cfg, logits, tokens, batch.get("loss_mask"), tp)
+    if cfg.family == "moe":
+        nll = nll + 0.01 * aux["load_balance"]
+    return nll
+
+
+def _ce(cfg: ModelConfig, logits, tokens, loss_mask, tp):
+    """Masked next-token CE from (possibly vocab-sharded) logits — the
+    shared tail of ``loss_fn`` and ``pipeline_loss_fn``."""
     # align: for VLM, logits cover [img; text]; predict text tokens only
     n_pre = cfg.n_frontend_tokens if cfg.frontend == "vlm" else 0
     logits = logits[:, n_pre:, :]
@@ -581,15 +640,122 @@ def loss_fn(params, cfg: ModelConfig, batch, window=None,
             jnp.sum(e, axis=-1, dtype=jnp.float32))
         ll = _select_logit(pred, targ).astype(jnp.float32)
     nll = lse - ll
-    mask = batch.get("loss_mask")
-    if mask is not None:
-        m = mask[:, 1:]
+    if loss_mask is not None:
+        m = loss_mask[:, 1:]
         nll = (nll * m).sum() / jnp.maximum(m.sum(), 1)
     else:
         nll = nll.mean()
-    if cfg.family == "moe":
-        nll = nll + 0.01 * aux["load_balance"]
     return nll
+
+
+def pipeline_loss_fn(params, cfg: ModelConfig, batch, window=None,
+                     tp: Optional[TPRuntime] = None, pipe=None):
+    """Causal LM loss with the layer stack split into ``pipe.plan.size``
+    contiguous stages and the batch into ``microbatches`` slices.
+
+    Runs inside the manual shard_map train body with the pipe axis in
+    scope: ``params["blocks"]`` leaves hold this stage's L/p layer rows
+    (everything else replicated over pipe).  One differentiable
+    ``lax.scan`` over the m + p - 1 wavefront ticks: each tick ppermutes
+    the activation carry one stage forward while computing this stage's
+    next resident microbatch — the boundary send overlaps the following
+    microbatch's compute, and AD of the scan replays the wavefront in
+    reverse, realizing the interleaved 1F1B order that
+    ``shard_plan.pipeline_schedule`` enumerates.  Stage 0 injects the
+    embedding of microbatch clip(t, 0, m-1); the last stage folds the CE
+    of the microbatch that entered p - 1 ticks earlier; both are
+    where/mask-selected so every pipe coordinate traces one identical
+    program.  The returned loss is psum'd over pipe (identical on every
+    coordinate) = the mean of the m per-microbatch mean-CEs, which
+    equals ``loss_fn``'s full-batch mean when microbatches weigh equally
+    (no loss_mask, B % m == 0).
+    """
+    if pipe is None or not pipe.plan.active:
+        return loss_fn(params, cfg, batch, window, tp)
+    p, m = pipe.plan.size, pipe.plan.microbatches
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    if B % m != 0:
+        raise ValueError(f"batch {B} not divisible by microbatches {m}")
+    mb = B // m
+    seq = tp is not None and tp.plan.seq
+    tok_mb = tokens.reshape(m, mb, S)
+    mask_mb = (batch["loss_mask"].reshape(m, mb, S)
+               if batch.get("loss_mask") is not None else None)
+    fe_mb = (batch["frontend_embeds"].reshape(
+        m, mb, *batch["frontend_embeds"].shape[1:])
+        if batch.get("frontend_embeds") is not None else None)
+    n_pre = cfg.n_frontend_tokens if cfg.frontend == "vlm" else 0
+    S_h = (S + n_pre) // (tp.size if seq else 1)   # carry seq length
+    positions = jnp.broadcast_to(jnp.arange(S + n_pre), (mb, S + n_pre))
+    perm = [(i, (i + 1) % p) for i in range(p)]
+    stage = pipe.index
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+
+    def block_body(carry, lp):
+        h = carry
+        h, _, aux = _block(cfg, lp, h, positions, "train", None, window, tp)
+        return h, aux.get("load_balance", jnp.zeros((), jnp.float32))
+
+    if cfg.remat_policy != "none":
+        block_body = jax.checkpoint(block_body, prevent_cse=False,
+                                    policy=_remat_policy(cfg.remat_policy))
+
+    def tick(carry, t):
+        x_prev, loss_sum, lb_sum = carry
+        # boundary send: the activation computed last tick moves one
+        # stage forward while this tick's compute proceeds below
+        recv = jax.lax.ppermute(x_prev, pipe.axis, perm)
+        j_in = jnp.clip(t, 0, m - 1)
+        inj = embed_inputs(
+            params, cfg, jax.lax.dynamic_index_in_dim(tok_mb, j_in, 0,
+                                                      keepdims=False),
+            (jax.lax.dynamic_index_in_dim(fe_mb, j_in, 0, keepdims=False)
+             if fe_mb is not None else None), tp)
+        x_in = jnp.where(stage == 0, inj, recv)
+        x_out, lb = jax.lax.scan(block_body, x_in, params["blocks"])
+        # stage s holds real data for microbatch t - s at ticks
+        # s <= t < s + m
+        valid_here = (t >= stage) & (t < stage + m)
+        lb_sum = lb_sum + jnp.where(valid_here, lb.mean(), 0.0)
+        # the microbatch leaving the LAST stage this tick entered the
+        # pipe p - 1 ticks ago
+        j_out = jnp.clip(t - (p - 1), 0, m - 1)
+        h = x_out
+        seq_ce = (tp is not None and tp.plan.seq_ce and not seq
+                  and h.shape[1] % tp.size == 0)
+        if seq_ce:
+            h = L.ctx_enter(h, tp.axis, tp.size)
+        h = L.rms_norm(h, params["ln_f"], cfg.norm_eps)
+        if tp is not None and tp.plan.vocab:
+            h = (L.tp_seq_gather(h, tp.axis, 1) if (seq or seq_ce)
+                 else L.tp_enter(h, tp.axis, _ring(cfg, tp)))
+        logits = h @ head
+        nll = _ce(cfg, logits,
+                  jax.lax.dynamic_index_in_dim(tok_mb, j_out, 0,
+                                               keepdims=False),
+                  (jax.lax.dynamic_index_in_dim(mask_mb, j_out, 0,
+                                                keepdims=False)
+                   if mask_mb is not None else None), tp)
+        valid_out = (stage == p - 1) & (t >= p - 1) & (t < p - 1 + m)
+        loss_sum = loss_sum + jnp.where(valid_out, nll, 0.0)
+        return (x_out, loss_sum, lb_sum), None
+
+    x0 = jnp.zeros((mb, S_h, cfg.d_model), jnp.dtype(cfg.dtype))
+    (xf, loss_sum, lb_sum), _ = jax.lax.scan(
+        tick, (x0, jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        jnp.arange(m + p - 1))
+    del xf
+    # only the last stage accumulated loss; every stage accumulated its
+    # own layers' load-balance aux — both assemble with the psum-forward
+    # / identity-backward conjugate so every stage gets the SAME 1/m
+    # cotangent and prices its own contribution exactly once (a plain
+    # psum transposes to psum under the manual region's check_rep=False,
+    # which would scale every gradient by the stage count)
+    loss = L.tp_pull(loss_sum, pipe.axis) / m
+    if cfg.family == "moe":
+        loss = loss + 0.01 * L.tp_pull(lb_sum, pipe.axis) / (p * m)
+    return loss
 
 
 # ================================================================= decode
@@ -661,11 +827,18 @@ def init_paged_pools(cfg: ModelConfig, num_blocks: int, block_size: int,
 
 
 def _attn_paged(cfg: ModelConfig, lp, x, positions, k_pool, v_pool,
-                block_tables, ctx_lens, window, use_kernel):
+                block_tables, ctx_lens, window, use_kernel, tp=None):
     """One layer's attention against the paged pools.  x: (B, 1, D);
     positions/ctx_lens: (B, 1)/(B,) — the new token's absolute position.
-    Returns (x_out, k_pool, v_pool) with the new K/V scattered in."""
+    Returns (x_out, k_pool, v_pool) with the new K/V scattered in.
+
+    With ``tp`` (inside a manual shard_map serve body) the wq/wk/wv/wo
+    shards and the pools' kv-head shard are this position's — the Pallas
+    kernel sees local head counts, exactly the train path's contract."""
     from repro.kernels import paged_attention as pa
+    tp_attn = tp is not None and tp.plan.attn
+    n_heads = cfg.n_heads // (tp.size if tp_attn else 1)
+    n_kv = cfg.n_kv_heads // (tp.size if tp_attn else 1)
     B = x.shape[0]
     bs = k_pool.shape[2]
     h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
@@ -674,9 +847,9 @@ def _attn_paged(cfg: ModelConfig, lp, x, positions, k_pool, v_pool,
     v = h @ lp["wv"]
     if cfg.qkv_bias:
         q, k, v = q + lp["bq"], k + lp["bk"], v + lp["bv"]
-    q = q.reshape(B, 1, cfg.n_heads, cfg.hd)
-    k = k.reshape(B, 1, cfg.n_kv_heads, cfg.hd)
-    v = v.reshape(B, 1, cfg.n_kv_heads, cfg.hd)
+    q = q.reshape(B, 1, n_heads, cfg.hd)
+    k = k.reshape(B, 1, n_kv, cfg.hd)
+    v = v.reshape(B, 1, n_kv, cfg.hd)
     if cfg.qk_norm:
         q = L.rms_norm(q, lp["q_norm"], cfg.norm_eps)
         k = L.rms_norm(k, lp["k_norm"], cfg.norm_eps)
@@ -691,18 +864,21 @@ def _attn_paged(cfg: ModelConfig, lp, x, positions, k_pool, v_pool,
     v_pool = v_pool.at[pages, :, offs].set(
         v[:, 0].astype(v_pool.dtype))
     fn = (pa.paged_attention
-          if use_kernel and pa.supports(cfg.n_heads, cfg.n_kv_heads, cfg.hd)
+          if use_kernel and pa.supports(n_heads, n_kv, cfg.hd)
           else pa.paged_attention_ref)
     out = fn(q[:, 0], k_pool, v_pool, block_tables, ctx_lens + 1,
              window=window, interpret=_flash_interpret())
-    y = out.reshape(B, 1, cfg.n_heads * cfg.hd) @ lp["wo"]
+    y = out.reshape(B, 1, n_heads * cfg.hd) @ lp["wo"]
+    if tp_attn:
+        y = jax.lax.psum(y, tp.axis)        # row-parallel wo partials
     return x + y, k_pool, v_pool
 
 
 def paged_decode_step(params, cfg: ModelConfig, pools, block_tables,
                       context_lens, tokens,
                       window: Optional[int] = None,
-                      use_kernel: bool = True):
+                      use_kernel: bool = True,
+                      tp: Optional[TPRuntime] = None):
     """One decode step for a batch of requests at DIFFERENT positions.
 
     tokens: (B, 1) int32 — each row's newest token
@@ -712,9 +888,14 @@ def paged_decode_step(params, cfg: ModelConfig, pools, block_tables,
         masks out
     pools: ``init_paged_pools`` tree; block_tables: (B, P) int32
 
+    With ``tp`` (inside a manual shard_map serve body) params and the
+    pools' kv-head dim are this position's shards; logits come back FULL
+    (an all_gather over the model axis after the column-parallel unembed)
+    so the engine's row-wise sampler is unchanged.
+
     Returns (logits (B, 1, V), new_pools).
     """
-    x = params["embed"][tokens]
+    x = embed_inputs(params, cfg, tokens, None, tp)
     B = x.shape[0]
     positions = jnp.broadcast_to(context_lens[:, None], (B, 1))
 
@@ -724,20 +905,23 @@ def paged_decode_step(params, cfg: ModelConfig, pools, block_tables,
         h, kp, vp = _attn_paged(cfg, lp, h, positions,
                                 layer_pools["k"], layer_pools["v"],
                                 block_tables, context_lens, window,
-                                use_kernel)
+                                use_kernel, tp)
         if cfg.family == "moe":
             hh = L.rms_norm(h, lp["ln2"], cfg.norm_eps)
             y, _ = moe_lib.moe_ffn(hh, lp["router"], lp["w_gate"],
                                    lp["w_up"], lp["w_down"],
                                    top_k=cfg.top_k,
                                    capacity_factor=cfg.capacity_factor,
-                                   group=cfg.moe_group_size)
+                                   group=cfg.moe_group_size, tp=tp)
             h = h + y
         else:
-            h = _ffn(cfg, lp, h)
+            h = _ffn(cfg, lp, h, tp)
         return h, {"k": kp, "v": vp}
 
     x, new_pools = jax.lax.scan(body, x, (params["blocks"], pools))
     x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
     head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
-    return x @ head, new_pools
+    logits = x @ head
+    if tp is not None and tp.plan.vocab:
+        logits = jax.lax.all_gather(logits, tp.axis, axis=2, tiled=True)
+    return logits, new_pools

@@ -22,14 +22,19 @@ only — never of slot, step, or co-resident requests — so serving 8
 concurrent requests emits token-identical output to serving each alone
 (the acceptance gate in tests/test_serve.py).
 
-With a ``mesh`` the engine places params in the ``use`` layout
-(TP over 'model', replicated over client axes), shards the pools'
-kv-heads over 'model' and the slot dim of the per-step batch over the
-client axes (``dist.sharding.paged_pool_shardings`` /
-``serve_batch_shardings``), and keeps decode attention on the naive
-gather path — a ``pallas_call`` is opaque to GSPMD, so the kernel path
-belongs to single-host / manual-shard_map serving (its head counts are
-whatever TP-local shard the caller holds).
+With a ``mesh`` the engine shards the pools' kv-heads over 'model' and
+the slot dim of the per-step batch over the client axes
+(``dist.sharding.paged_pool_shardings`` / ``serve_batch_shardings``).
+When the slot count divides the client-axis product the decode step
+runs as a fully-manual ``shard_map`` (the train step's idiom): params
+enter at the TP-plan layout (``dist.sharding.tp_param_in_specs``), the
+body threads a ``TPRuntime`` through ``paged_decode_step`` — local head
+counts, a psum after the row-parallel ``wo``, an all_gather after the
+vocab-parallel unembed — and samples its own slot shard.  Inside the
+manual body a ``pallas_call`` is just per-shard code, so the paged
+Pallas kernel engages under TP instead of falling back to the gather
+reference (GSPMD cannot partition a ``pallas_call``, which is why the
+non-manual mesh fallback keeps the naive path).
 """
 from __future__ import annotations
 
@@ -46,6 +51,18 @@ from repro.models import transformer as tr
 from repro.models.config import ModelConfig
 from repro.serve import cache as pc
 from repro.serve.sampling import SamplingParams, sample
+
+
+def _shard_map(f, mesh, in_specs, out_specs):
+    """Fully-manual shard_map (every mesh axis manual), compatible with
+    both the jax>=0.5 top-level API and the 0.4.x experimental one —
+    the same shim ``launch/train.py`` uses for the train step."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -135,22 +152,63 @@ class ServeEngine:
         self.mesh = mesh
         self.window = (settings.window if settings.window is not None
                        else cfg.sliding_window)
-        if settings.decode_kernel == "auto":
-            self._use_kernel = mesh is None
-        else:
-            self._use_kernel = settings.decode_kernel == "pallas"
         C, P = settings.max_concurrency, settings.max_pages
         dtype = jnp.dtype(settings.cache_dtype)
         pools = tr.init_paged_pools(cfg, settings.num_blocks,
                                     settings.block_size, dtype)
+        self._manual = False
+        self._pool_sh = None
         if mesh is not None:
-            from jax.sharding import NamedSharding
+            from jax.sharding import NamedSharding, PartitionSpec
             from repro.dist import sharding as sh
-            params = jax.device_put(params,
-                                    sh.param_shardings(cfg, mesh, "use"))
-            pools = jax.device_put(pools, sh.paged_pool_shardings(cfg, mesh))
+            n_dev = int(np.prod(mesh.devices.shape))
+            sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+            model = int(sizes.get("model", 1))
+            # decode-safe TP plan: one-token queries have no sequence to
+            # shard, so the seq/ctx activation regions drop out — the
+            # PARAM layout is untouched (those flags never move weights)
+            self._tp_plan = dataclasses.replace(
+                tr.tp_plan(cfg, model), seq=False, seq_ce=False, ctx=1)
+            self._model_size = model
+            # manual path: every client position must own a whole number
+            # of decode slots for the slot dim to enter sharded
+            self._manual = C % max(n_dev // model, 1) == 0
             self._batch_sh = sh.serve_batch_shardings(mesh)
-            self._rep_sh = NamedSharding(mesh, jax.sharding.PartitionSpec())
+            self._rep_sh = NamedSharding(mesh, PartitionSpec())
+            if self._manual:
+                pspecs = sh.tp_param_in_specs(cfg, mesh)
+                params = jax.device_put(params, jax.tree.map(
+                    lambda s: NamedSharding(mesh, s), pspecs,
+                    is_leaf=lambda x: isinstance(x, PartitionSpec)))
+                # plan.attn implies kv-head divisibility; without it the
+                # pools replicate and each model shard runs full heads
+                pool_spec = (PartitionSpec(None, None, "model", None, None)
+                             if self._tp_plan.attn else PartitionSpec())
+                self._pool_sh = {"k": NamedSharding(mesh, pool_spec),
+                                 "v": NamedSharding(mesh, pool_spec)}
+                pools = jax.device_put(pools, self._pool_sh)
+                self._midx = jax.device_put(
+                    jnp.arange(model, dtype=jnp.int32),
+                    NamedSharding(mesh, PartitionSpec("model")))
+                bspec = self._batch_sh.spec
+                self._decode_body = _shard_map(
+                    self._manual_decode_fn, mesh,
+                    in_specs=(PartitionSpec("model"), pspecs,
+                              {"k": pool_spec, "v": pool_spec},
+                              bspec, bspec, bspec, bspec, bspec, bspec,
+                              bspec),
+                    out_specs=(bspec, {"k": pool_spec, "v": pool_spec}))
+            else:
+                params = jax.device_put(
+                    params, sh.param_shardings(cfg, mesh, "use"))
+                self._pool_sh = sh.paged_pool_shardings(cfg, mesh)
+                pools = jax.device_put(pools, self._pool_sh)
+        if settings.decode_kernel == "auto":
+            # the kernel is fine meshless and inside the manual body; it
+            # is only the GSPMD fallback that cannot partition it
+            self._use_kernel = mesh is None or self._manual
+        else:
+            self._use_kernel = settings.decode_kernel == "pallas"
         self.params = params
         self.pools = pools
         self.allocator = pc.BlockAllocator(settings.num_blocks,
@@ -162,7 +220,15 @@ class ServeEngine:
         self._steps = 0
         self._tokens_out = 0
         self._t0: Optional[float] = None
-        self._decode = jax.jit(self._decode_fn, donate_argnums=(1,))
+        if self._manual:
+            midx = self._midx
+            body = self._decode_body
+            self._decode = jax.jit(
+                lambda params, pools, *rest: body(midx, params, pools,
+                                                  *rest),
+                donate_argnums=(1,))
+        else:
+            self._decode = jax.jit(self._decode_fn, donate_argnums=(1,))
         self._prefills: dict = {}
 
     # ------------------------------------------------------ device closures
@@ -171,6 +237,22 @@ class ServeEngine:
         logits, pools = tr.paged_decode_step(
             params, self.cfg, pools, tables, ctxs, toks,
             window=self.window, use_kernel=self._use_kernel)
+        nxt = sample(keys, logits[:, 0], temps, tks, tps)
+        return nxt, pools
+
+    def _manual_decode_fn(self, midx, params, pools, tables, ctxs, toks,
+                          keys, temps, tks, tps):
+        """shard_map body: every array is this position's shard — params
+        at their TP dims, pools at the local kv-heads, the slot batch at
+        this client coordinate's rows.  ``midx`` is the model-axis
+        coordinate fed in as a sharded arange (``axis_index`` is
+        unsupported under fully-manual SPMD)."""
+        tp_rt = (tr.TPRuntime("model", self._model_size, midx[0],
+                              self._tp_plan)
+                 if self._tp_plan.active else None)
+        logits, pools = tr.paged_decode_step(
+            params, self.cfg, pools, tables, ctxs, toks,
+            window=self.window, use_kernel=self._use_kernel, tp=tp_rt)
         nxt = sample(keys, logits[:, 0], temps, tks, tps)
         return nxt, pools
 
@@ -188,7 +270,13 @@ class ServeEngine:
     def _prefill(self, bucket: int):
         fn = self._prefills.get(bucket)
         if fn is None:
-            fn = jax.jit(self._prefill_fn, donate_argnums=(1,))
+            if self.mesh is not None:
+                # pin the pool output to the committed layout so the
+                # decode step (whose specs assume it) never re-lowers
+                fn = jax.jit(self._prefill_fn, donate_argnums=(1,),
+                             out_shardings=(self._rep_sh, self._pool_sh))
+            else:
+                fn = jax.jit(self._prefill_fn, donate_argnums=(1,))
             self._prefills[bucket] = fn
         return fn
 

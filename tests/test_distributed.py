@@ -271,11 +271,13 @@ def test_tp4_composes_with_int8_client_wire():
 def test_512_device_lowering_int8_wire(tmp_path):
     """ROADMAP regression: the 2x16x16 (512-device) config must compile
     under the full-manual lowering (no ``IsManualSubgroup`` abort) WITH
-    model-axis tensor parallelism (no replicated group compute: FFN +
-    vocab sharded 16-way — attention stays replicated only because
-    qwen2's 14 heads don't divide), and the FSA reduce-scatter stage's
-    payload — read from the lowered HLO by ``hlo_analysis`` — must cross
-    the mesh as int8, disjoint from the model-axis psum traffic."""
+    model-axis tensor parallelism and NO replicated group compute: FFN +
+    vocab shard 16-way, and attention — whose heads (kv=2 < 16) can't
+    divide — rides the context-parallel ppermute ring (sequence-sharded
+    K/V rotation) instead of the old replicated fallback.  The FSA
+    reduce-scatter stage's payload — read from the lowered HLO by
+    ``hlo_analysis`` — must cross the mesh as int8, disjoint from the
+    model-axis psum traffic."""
     r = subprocess.run(
         [sys.executable, "-m", "repro.launch.dryrun", "--arch", "qwen2-0.5b",
          "--shape", "train_1k", "--multi-pod", "--int8-wire",
@@ -295,24 +297,34 @@ def test_512_device_lowering_int8_wire(tmp_path):
     a2a = dtypes["all-to-all"]
     assert a2a.get("s8", 0) > 0
     assert a2a.get("s8", 0) > 10 * a2a.get("f32", 0)
-    # nothing falls back to a wide-dtype reduce-scatter
-    assert not dtypes["reduce-scatter"]
+    # the client wire never falls back to a wide-dtype reduce-scatter
+    # (the ctx ring / grad-norm path may emit tiny model-axis f32 ones)
+    cb = rec["collective_bytes_per_device"]
+    assert "reduce-scatter" not in cb["axes"].get("client", {})
+    assert dtypes["reduce-scatter"].get("s8", 0) == 0
+    assert dtypes["reduce-scatter"].get("f32", 0) < 1e4
     # --- tensor parallelism actually engaged on the model axis ---------
     assert rec["tp"] == {"size": 16, "attn": False, "ffn": True,
                          "vocab": True, "moe": False, "mixer": False,
-                         "seq": False, "sharded_leaves": 4}
+                         "seq": False, "ctx": 16, "seq_ce": False,
+                         "sharded_leaves": 4}
     axes = rec["collective_bytes_per_device"]["axes"]
     counts = rec["collective_bytes_per_device"]["axis_counts"]
     # Megatron psums: >= one all-reduce per layer per direction (24
     # layers), carrying real activation bytes
     assert axes["model"]["all-reduce"] > 0
     assert counts["model"]["all-reduce"] >= 2 * 24
+    # ring attention: the K/V rotation ppermutes n-1 hops per layer per
+    # direction on the model axis, and EVERY ppermute classifies onto a
+    # real axis (reverse-direction rings included — nothing priced at
+    # the full 512-device ring)
+    assert counts["model"]["collective-permute"] >= 24 * 15
+    assert counts.get("all", {}).get("collective-permute", 0) == 0
     # the client wire (broadcast all-gather + int8 all-to-all) never
     # rides the model axis
     assert axes["client"]["all-gather"] > 0
     assert axes["client"]["all-to-all"] > 0
     assert "all-to-all" not in axes.get("model", {})
-    assert "all-gather" not in axes.get("model", {})
 
 
 @pytest.mark.slow
@@ -419,3 +431,54 @@ def test_512_device_lowering_seq_parallel(tmp_path):
     # the client wire format is untouched by the activation re-layout
     assert seq["wire_dtype"] == "s8"
     assert s_ax["client"]["all-to-all"] > 0
+
+
+@pytest.mark.slow
+def test_512_device_lowering_26b_pipeline(tmp_path):
+    """ISSUE 9 acceptance: a >=26B-parameter config lowers AND compiles
+    at 512 devices with an ACTIVE pipeline plan — the 2x4x4x16
+    (pod, data, pipe, model) mesh runs qwen3-32b's 64 layers as 4
+    contiguous stages of 16 under the microbatched 1F1B scan, the
+    stage-boundary activation sends classify onto the ``pipe`` axis
+    (m + p - 1 wavefront ticks), and the per-device resident parameter
+    bytes shrink with the pipe x TP product."""
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch",
+         "qwen3-32b", "--shape", "train_4k", "--multi-pod",
+         "--pp", "4", "--microbatches", "8",
+         "--out", str(tmp_path)],
+        capture_output=True, text=True, timeout=1800,
+        env=SUBPROC_ENV)
+    assert r.returncode == 0, (r.stdout[-500:], r.stderr[-2000:])
+    rec = json.loads(
+        (tmp_path / "qwen3-32b__train_4k_mp_pp4.json").read_text())
+    assert rec["devices"] == 512 and rec["mesh"] == "2x4x4x16"
+    assert rec["params"] > 26e9
+    # the pipeline plan engaged: 64 layers / 4 stages, 8 microbatches
+    assert rec["pp"] == {"size": 4, "microbatches": 8,
+                         "layers_per_stage": 16,
+                         "bubble_fraction": pytest.approx(3 / 11)}
+    tp = rec["tp"]
+    assert tp["size"] == 16 and tp["ffn"] and tp["vocab"]
+    # qwen3's GQA kv heads don't divide 16 -> ring attention, not the
+    # replicated fallback (ISSUE 9 closes the PR 4 gap at scale)
+    assert not tp["attn"] and tp["ctx"] == 16
+    axes = rec["collective_bytes_per_device"]["axes"]
+    counts = rec["collective_bytes_per_device"]["axis_counts"]
+    # stage-boundary ppermutes ride the pipe axis: one send per 1F1B
+    # wavefront tick (m + p - 1 = 11), real activation bytes
+    assert counts["pipe"]["collective-permute"] >= 11
+    assert axes["pipe"]["collective-permute"] > 0
+    # non-block grads (embed/lm_head/ln_f) psum over pipe
+    assert counts["pipe"]["all-reduce"] > 0
+    # every ppermute classifies onto a real axis (model ring / pipe
+    # boundary / client) — nothing priced at the 512-device ring
+    assert counts.get("all", {}).get("collective-permute", 0) == 0
+    # resident params shrink with the pipe x TP product: within 2.5x of
+    # the uniform total/(tp*pp) floor (ring attention leaves the attn
+    # weights model-replicated, so exactly uniform is unreachable), and
+    # far below a pipe-only split
+    total_bytes = 4 * rec["params"]
+    per_dev = rec["param_bytes_per_device"]
+    assert per_dev <= 2.5 * total_bytes / (16 * 4), per_dev
+    assert per_dev < total_bytes / 8

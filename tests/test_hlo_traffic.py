@@ -150,3 +150,37 @@ def test_committed_opt_roofline_memory_comparable_to_base():
     # memory sane: mfu bounds are finite and positive
     for rec in (base, opt):
         assert 0 < rec["roofline"]["mfu_upper_bound"] < 1
+
+
+# ----------------------------------------- collective-permute axis labels
+def _pairs_line(pairs):
+    inner = ",".join("{%d,%d}" % p for p in pairs)
+    return ("%cp = f32[128] collective-permute(%x), "
+            "source_target_pairs={" + inner + "}")
+
+
+def test_permute_axis_from_cycle_stride():
+    """ppermutes carry no replica_groups, so the axis label comes from
+    the source-target cycle stride: 1 = the minor-most 'model' ring,
+    model_size = a 'pipe' boundary send, model*pipe = the client ring —
+    and BOTH ring directions must classify identically (a reverse ring's
+    deltas are -stride except the wraparound)."""
+    from repro.launch.hlo_analysis import (_classify_permute,
+                                           _permute_stride)
+    fwd = _pairs_line([(0, 1), (1, 2), (2, 3), (3, 0)])
+    rev = _pairs_line([(1, 0), (2, 1), (3, 2), (0, 3)])
+    assert _permute_stride(fwd) == 1
+    assert _permute_stride(rev) == 1
+    assert _classify_permute(1, model_size=16, pipe_size=4) == "model"
+    # pipe-boundary sends hop model_size ids
+    pipe = _pairs_line([(0, 16), (16, 32), (32, 48), (48, 0)])
+    assert _permute_stride(pipe) == 16
+    assert _classify_permute(16, model_size=16, pipe_size=4) == "pipe"
+    # client rings hop model*pipe ids
+    assert _classify_permute(64, model_size=16, pipe_size=4) == "client"
+    # unknown strides and unparseable lines stay on the 'all' bound
+    assert _classify_permute(7, model_size=16, pipe_size=4) == "all"
+    assert _permute_stride("%cp = f32[128] collective-permute(%x)") is None
+    assert _classify_permute(None, model_size=16, pipe_size=4) == "all"
+    # without a pipe axis, stride model_size is NOT a pipe send
+    assert _classify_permute(16, model_size=16, pipe_size=1) != "pipe"

@@ -8,14 +8,13 @@
 * sampling properties (greedy/top-k/top-p/beam) and the preemption
   replay path;
 * the unified Settings API: ServeSettings validation, AsyncSettings
-  extraction shared by FLConfig/TrainSettings, deprecation shims.
+  extraction shared by FLConfig/TrainSettings.
 """
 import dataclasses
 import json
 import subprocess
 import sys
 import textwrap
-import warnings
 
 import jax
 import jax.numpy as jnp
@@ -286,16 +285,14 @@ def test_engine_rejects_recurrent_families():
         ServeEngine(cfg, tr.init_params(KEY, cfg), tiny_settings())
 
 
-def test_launch_serve_shims_warn():
+def test_launch_serve_unified_surface():
     from repro.launch import serve as serve_lib
-    cfg = tiny_cfg()
-    with warnings.catch_warnings(record=True) as w:
-        warnings.simplefilter("always")
-        serve_lib.make_prefill_step(cfg, None)
-        serve_lib.make_decode_step(cfg, None)
-    assert len(w) == 2
-    assert all(issubclass(x.category, DeprecationWarning) for x in w)
-    assert serve_lib.ServeSettings is ServeSettings   # unified surface
+    assert serve_lib.ServeSettings is ServeSettings
+    # the one-release deprecated make_*_step/lower_serve_step shims are
+    # gone; lower_step is the only lowering entry point
+    for name in ("make_prefill_step", "make_decode_step",
+                 "lower_serve_step"):
+        assert not hasattr(serve_lib, name)
 
 
 def test_async_settings_validation_names_fields():
@@ -382,20 +379,28 @@ MESH_SERVE_SCRIPT = textwrap.dedent("""
     outs = eng.run(prompts)
     print("MESH" + json.dumps({
         "ok": [o.tokens for o in outs] == [o.tokens for o in ref],
+        "manual": eng._manual,
+        "kernel": eng._use_kernel,
+        "attn_sharded": eng._tp_plan.attn,
         "peak": eng.stats()["peak_blocks"],
         "cap": eng.stats()["block_capacity"]}))
 """)
 
 
 def test_small_mesh_serving_smoke():
-    """Tier-1 serving smoke on a (4, 2) host mesh: params in the use
-    layout, pools kv-head-sharded over 'model', decode on the GSPMD
-    gather path — token-identical to the meshless engine."""
+    """Tier-1 serving smoke on a (4, 2) host mesh: decode runs the
+    fully-manual shard_map body (params at the TP-plan layout, pools
+    kv-head-sharded over 'model', slots over 'data') with the paged
+    Pallas kernel path ENGAGED under TP — token-identical to the
+    meshless engine."""
     r = subprocess.run([sys.executable, "-c", MESH_SERVE_SCRIPT],
                        capture_output=True, text=True, timeout=900,
                        env=SUBPROC_ENV)
     assert r.returncode == 0, r.stderr[-3000:]
     line = [ln for ln in r.stdout.splitlines() if ln.startswith("MESH")][-1]
     out = json.loads(line[len("MESH"):])
+    assert out["manual"], "manual decode body should engage on (4, 2)"
+    assert out["kernel"], "paged kernel should engage under the manual body"
+    assert out["attn_sharded"], "qwen2 heads divide model=2 — attn TP"
     assert out["ok"]
     assert out["peak"] <= out["cap"]

@@ -76,11 +76,17 @@ def test_tp_plan_fallbacks():
     assert not p4.attn                  # kv=2 cannot split 4 ways
     assert p4.ffn and p4.vocab and p4.active
     assert not tr.tp_plan(cfg, 1).active
-    assert not tr.tp_plan(cfg, 3).active       # nothing divides by 3
+    p3 = tr.tp_plan(cfg, 3)
+    assert not (p3.attn or p3.ffn or p3.vocab)  # nothing divides by 3
+    assert p3.ctx == 3 and p3.active    # ...but the ctx ring shards the
+    # sequence at ANY size (weights replicated; the runtime still falls
+    # back per-trace when S itself doesn't divide)
     qk = dataclasses.replace(cfg, qk_norm=True)
     specs = sh.tp_specs(qk, 2)
     assert specs["blocks"]["q_norm"].kind == "partial"
-    assert sh.tp_specs(qk, 4)["blocks"]["q_norm"].kind == "replicate"
+    # at tp=4 attention head-sharding falls back, but the ctx ring
+    # sequence-shards the region, so its grads are still slice-partial
+    assert sh.tp_specs(qk, 4)["blocks"]["q_norm"].kind == "partial"
 
 
 def test_family_plans():
