@@ -28,6 +28,9 @@ MODULES = [
     ("serve_snapshot", "committed BENCH_serve.json: ServeEngine tokens/s "
                        "+ p50/p99 latency vs concurrency, batching-"
                        "invariance + block-budget gates"),
+    ("scenario_snapshot", "committed BENCH_pareto.json: utility / MIA AUC "
+                          "/ cumulative (eps,delta) / wire bytes per "
+                          "defense x failure cell, Pareto + drift gates"),
 ]
 
 

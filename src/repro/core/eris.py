@@ -12,6 +12,7 @@ from typing import Any, Callable, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import baselines as bl
 from repro.core import dsc as dsc_lib
 from repro.core import masks as masks_lib
 from repro.core import pipeline as pl
@@ -41,6 +42,12 @@ class ErisConfig:
     staleness_alpha: float = 1.0
     delay_max: int = 0
     client_dropout: float = 0.0
+    # ---- composed-defense / failure scenario axes (rounds.scenarios)
+    ldp: Optional[bl.LDPConfig] = None   # clip + Gaussian noise pre-wire
+    secure_mask: bool = False            # Bonawitz pairwise wire masking
+    agg_dropout: float = 0.0             # aggregator dropout probability
+    link_failure: float = 0.0            # client->aggregator link failure
+    participation: float = 1.0           # Bernoulli client sampling
 
     def gamma_value(self, n: int) -> float:
         if self.gamma is not None:
@@ -57,14 +64,47 @@ def init(key: jax.Array, x0: jax.Array, K: int,
                      key, pl.init_buffer(n) if async_buffer else None)
 
 
-def _round_keys(k_mask: jax.Array, k_comp: jax.Array) -> pl.RoundKeys:
+# Role salts for the composed-scenario paths: when a stage that consumes
+# the noise/fail/part role is actually in the stage list, that role's key
+# is fold_in(k_comp, salt) instead of aliasing k_comp — otherwise LDP
+# noise, failure draws, and participation sampling would be CORRELATED
+# with the compression randomness (and with each other).  Roles with no
+# active consumer keep the historical alias, so the pure-eris trajectory
+# is bit-compatible (guarded by the parity battery).
+ROLE_SALTS = {"noise": 0x4E0E, "fail": 0xFA11, "part": 0x9A87}
+
+
+def stage_roles(compress: tuple[pl.CompressStage, ...],
+                aggregate: pl.AggregateStage) -> frozenset[str]:
+    """Key roles consumed by an eris stage list.  BufferedAggregate with
+    the trivial arrival model draws nothing and is excluded (keeps the
+    degenerate async==sync parity bit-exact)."""
+    roles = {st.key_role for st in compress}
+    agg = aggregate
+    while isinstance(agg, pl.BufferedAggregate):
+        if not agg.arrival.trivial:
+            roles.add(agg.key_role)
+        agg = agg.inner
+    roles.add(agg.key_role)
+    return frozenset(roles)
+
+
+def _round_keys(k_mask: jax.Array, k_comp: jax.Array,
+                active: frozenset[str] = frozenset()) -> pl.RoundKeys:
     """RoundKeys preserving this engine's historical 2-key discipline
-    (mask + comp); the remaining roles alias comp (unused by the eris
-    stage list), keeping trajectories bit-compatible with the
-    pre-stage-list implementation."""
+    (mask + comp); roles without an active consumer alias comp (bit-
+    compatible with the pre-stage-list implementation), while roles in
+    ``active`` get a distinct salted derivation (see ROLE_SALTS)."""
     c0, c1 = jax.random.split(k_comp)
-    return pl.RoundKeys(mask=k_mask, comp=k_comp, noise=k_comp,
-                        fail=k_comp, part=k_comp, comp0=c0, comp1=c1,
+
+    def role(r: str) -> jax.Array:
+        if r in active:
+            return jax.random.fold_in(k_comp, ROLE_SALTS[r])
+        return k_comp
+
+    return pl.RoundKeys(mask=k_mask, comp=k_comp, noise=role("noise"),
+                        fail=role("fail"), part=role("part"),
+                        comp0=c0, comp1=c1,
                         wire=jax.random.fold_in(k_comp, 0x3177))
 
 
@@ -79,11 +119,29 @@ def stages(cfg: ErisConfig, n: int, keep_views: bool = False
     algebraic mean (Theorem B.1 — iterate-identical, no (A, K, n)
     materialization inside a scan)."""
     gamma = cfg.gamma_value(n)
+    failures = cfg.agg_dropout > 0.0 or cfg.link_failure > 0.0
+    if cfg.secure_mask and (failures or cfg.participation < 1.0
+                            or cfg.client_dropout > 0.0):
+        raise ValueError(
+            "secure_mask cannot compose with failures/dropout/partial "
+            "participation: pairwise masks cancel only in the unweighted "
+            "full-cohort mean and this simplified Bonawitz protocol has "
+            "no dropout-recovery round (Sec. 2) — the aggregate would be "
+            "garbage of magnitude `scale`, so refuse loudly")
     compress: tuple[pl.CompressStage, ...] = ()
+    if cfg.ldp is not None:
+        compress += (pl.LDPNoise(ldp=cfg.ldp),)
     if cfg.use_dsc:
-        compress = (pl.DSCCompress(compressor=cfg.compressor, gamma=gamma),)
-    if cfg.fresh_masks or keep_views:
-        aggregate: pl.AggregateStage = pl.FSASharded(
+        compress += (pl.DSCCompress(compressor=cfg.compressor, gamma=gamma),)
+    if cfg.secure_mask:
+        compress += (pl.PairwiseMask(),)
+    if failures:
+        aggregate: pl.AggregateStage = pl.FailureInjectedFSA(
+            A=cfg.A, mask_scheme=cfg.mask_scheme,
+            agg_dropout=cfg.agg_dropout, link_failure=cfg.link_failure,
+            use_dsc=cfg.use_dsc, gamma=gamma, keep_views=keep_views)
+    elif cfg.fresh_masks or keep_views:
+        aggregate = pl.FSASharded(
             A=cfg.A, mask_scheme=cfg.mask_scheme,
             fresh_masks=cfg.fresh_masks, use_dsc=cfg.use_dsc, gamma=gamma,
             keep_views=keep_views)
@@ -114,8 +172,15 @@ def round_step(state: ErisState, cfg: ErisConfig,
     """
     n = state.x.shape[0]
     key, k_mask, k_comp = jax.random.split(state.key, 3)
-    keys = _round_keys(k_mask, k_comp)
     compress, aggregate = stages(cfg, n, keep_views)
+    active = stage_roles(compress, aggregate)
+    sample = cfg.participation < 1.0 and weights is None
+    if sample:
+        active = active | {"part"}
+    keys = _round_keys(k_mask, k_comp, active & set(ROLE_SALTS))
+    if sample:
+        K = state.dsc.s_clients.shape[0]
+        weights = pl.participation_weights(keys.part, K, cfg.participation)
 
     # --- client-side: local stochastic gradients (Algorithm 1 line 3)
     grads = pl.ClientStep()(grad_fn, state.x, client_batches)  # (K, n)

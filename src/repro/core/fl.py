@@ -51,6 +51,9 @@ class FLConfig:
     mask_scheme: str = "strided"
     fresh_masks: bool = False     # re-draw random masks per round (m^t)
     ldp: Optional[bl.LDPConfig] = None
+    secure_mask: bool = False     # Bonawitz pairwise wire masking composed
+                                  # onto the eris wire (rounds.scenarios);
+                                  # refuses dropout/partial participation
     prune_rate: float = 0.1       # priprune
     shatter_chunks: int = 8
     shatter_r: int = 4

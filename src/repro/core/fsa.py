@@ -78,13 +78,20 @@ def fsa_round(x: jax.Array, client_updates: jax.Array, lr: float,
 def fsa_round_with_failures(x: jax.Array, client_updates: jax.Array,
                             assign: jax.Array, A: int, lr: float,
                             agg_alive: jax.Array,
-                            link_alive: jax.Array) -> jax.Array:
+                            link_alive: jax.Array,
+                            keep_views: bool = False):
     """Failure-injected round (Appendix F.5).
 
     agg_alive: (A,) bool — dropped aggregators contribute no segment update
     (their model shard stays at x_(a)^t for the round).
     link_alive: (K, A) bool — a failed client->aggregator link drops that
     client's shard; the aggregator renormalizes over received shards.
+
+    Returns the bare x_new array (historical signature), or — with
+    ``keep_views=True`` — an :class:`FSAOutput` whose ``shard_views`` are
+    what the surviving aggregators actually RECEIVED: shard (a, k) is
+    zero when link k->a failed or aggregator a was down, which is the
+    adversary view the failure-injected scenario audits attack.
     """
     K, n = client_updates.shape
     m = masks_lib.masks_stacked(assign, A)                 # (A, n)
@@ -94,4 +101,9 @@ def fsa_round_with_failures(x: jax.Array, client_updates: jax.Array,
     v_a = jnp.einsum("ak,akn->an", w / cnt, shards)
     v_a = v_a * agg_alive[:, None].astype(jnp.float32)
     x_a = m * x[None, :] - lr * v_a
-    return reassemble(x_a, assign, A)
+    x_new = reassemble(x_a, assign, A)
+    if not keep_views:
+        return x_new
+    views = (shards * w[:, :, None]
+             * agg_alive[:, None, None].astype(jnp.float32))
+    return FSAOutput(x_new, views)

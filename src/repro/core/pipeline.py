@@ -96,8 +96,11 @@ def participation_weights(key: jax.Array, K: int,
     least one participant forced (None when everyone participates)."""
     if fraction >= 1.0:
         return None
-    part = jax.random.bernoulli(key, fraction, (K,))
-    part = part.at[jax.random.randint(key, (), 0, K)].set(True)
+    # Distinct sub-keys: reusing ``key`` for both draws deterministically
+    # coupled the forced index to the Bernoulli mask (same entropy).
+    k_draw, k_force = jax.random.split(key)
+    part = jax.random.bernoulli(k_draw, fraction, (K,))
+    part = part.at[jax.random.randint(k_force, (), 0, K)].set(True)
     return part.astype(jnp.float32)
 
 
@@ -109,6 +112,9 @@ def participation_weights(key: jax.Array, K: int,
 # directly) without changing any synchronous trajectory.
 ARRIVAL_SALT = 0xA51C
 COHORT_SALT = 0xC0C0
+PAIRWISE_SALT = 0x6D5C   # PairwiseMask folds its role key with this, so
+                         # composing it with LDPNoise (same "noise" role)
+                         # draws decorrelated mask and noise streams
 
 
 @dataclasses.dataclass(frozen=True)
@@ -370,6 +376,29 @@ class Int8Wire(CompressStage):
         return deq.reshape(K, n + pad)[:, :n], state
 
 
+@dataclasses.dataclass(frozen=True)
+class PairwiseMask(CompressStage):
+    """Bonawitz pairwise masking as a WIRE stage — the composed-defense
+    form: each client adds its row of the fixed-point pairwise mask grid
+    before transmission, so every downstream aggregator view (FSA shards
+    included) is masked, while the masks cancel exactly in the unweighted
+    full-cohort sum.
+
+    Composition caveat (enforced loudly, not silently): cancellation
+    needs the plain full-cohort mean.  Partial participation, client
+    dropout, or link failure leave unpaired masks of magnitude ``scale``
+    in the aggregate — `rounds.scenarios` refuses those compositions and
+    `SecureAggAggregate` raises on weighted aggregation."""
+
+    scale: float = 100.0
+    key_role: str = "noise"
+
+    def apply(self, keys, state, v):
+        key = jax.random.fold_in(self._key(keys), PAIRWISE_SALT)
+        K, n = v.shape
+        return v + sa_lib.pairwise_masks(key, K, n, self.scale), state
+
+
 # ============================================================== aggregate
 class AggregateResult(NamedTuple):
     update: jax.Array                    # aggregated pseudo-gradient (n,)
@@ -479,9 +508,24 @@ class FSASharded(AggregateStage):
 @dataclasses.dataclass(frozen=True)
 class SecureAggAggregate(AggregateStage):
     """Bonawitz-style pairwise masking: the aggregate is the exact mean,
-    the adversary view is the masked per-client updates."""
+    the adversary view is the masked per-client updates.
+
+    Pairwise masks cancel ONLY in the unweighted full-cohort mean — a
+    weighted or partial sum (participation sampling, client dropout)
+    leaves unpaired masks of magnitude ``scale`` in the aggregate, i.e.
+    garbage.  The simplified protocol has no dropout recovery, so this
+    stage fails loudly instead."""
+
+    use_weights: bool = False
 
     def apply(self, keys, state, v, weights):
+        if weights is not None:
+            raise ValueError(
+                "secure_agg cannot aggregate a weighted/partial cohort: "
+                "pairwise masks cancel only in the unweighted full-cohort "
+                "mean, and this simplified Bonawitz protocol has no "
+                "dropout-recovery round (run with participation=1.0 / "
+                "no client dropout, or pick a different defense)")
         masked = sa_lib.mask_updates(self._key(keys), v)
         return AggregateResult(masked.mean(0), state, masked)
 
@@ -504,7 +548,9 @@ class ShatterAggregate(AggregateStage):
 class FailureInjectedFSA(AggregateStage):
     """Appendix F.5: aggregator dropout + client->aggregator link failures
     on the transmitted shards; DSC shift compensation (when enabled) uses
-    what the aggregators actually received."""
+    what the aggregators actually received.  ``keep_views`` materializes
+    the (A, K, n) received shards (link-failed/dead entries zeroed) so the
+    adversary-view audit can attack the failure-injected wire."""
 
     A: int = 4
     mask_scheme: str = "strided"
@@ -513,6 +559,7 @@ class FailureInjectedFSA(AggregateStage):
     use_dsc: bool = False
     gamma: float = 0.0
     key_role: str = "fail"
+    keep_views: bool = False
 
     def apply(self, keys, state, v, weights):
         K, n = v.shape
@@ -522,8 +569,13 @@ class FailureInjectedFSA(AggregateStage):
                                          (self.A,))
         link_alive = jax.random.bernoulli(kl, 1.0 - self.link_failure,
                                           (K, self.A))
-        x_acc = fsa_lib.fsa_round_with_failures(
-            jnp.zeros(n), v, assign, self.A, 1.0, agg_alive, link_alive)
+        out = fsa_lib.fsa_round_with_failures(
+            jnp.zeros(n), v, assign, self.A, 1.0, agg_alive, link_alive,
+            keep_views=self.keep_views)
+        if self.keep_views:
+            x_acc, views = out.x_new, out.shard_views
+        else:
+            x_acc, views = out, None
         mean_v = -x_acc
         dsc = state.dsc
         if self.use_dsc:
@@ -531,7 +583,7 @@ class FailureInjectedFSA(AggregateStage):
             dsc = dsc._replace(s_agg=dsc.s_agg + self.gamma * mean_v)
         else:
             u = mean_v
-        return AggregateResult(u, state._replace(dsc=dsc))
+        return AggregateResult(u, state._replace(dsc=dsc), views)
 
 
 @dataclasses.dataclass(frozen=True)

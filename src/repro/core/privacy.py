@@ -22,10 +22,12 @@
 from __future__ import annotations
 
 import math
-from typing import Callable
+from typing import Callable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.optim import adam
 
@@ -110,6 +112,18 @@ def _mia_stats(key: jax.Array, grad_fn: Callable, x_traj: jax.Array,
     return out
 
 
+def attack_mesh(n_canaries: int,
+                devices: Optional[Sequence] = None) -> Mesh:
+    """The 1-D ``attack`` mesh for sharded audit compute: the largest
+    device prefix whose size divides the canary count (one device
+    degenerates to the unsharded audit)."""
+    devices = list(jax.devices() if devices is None else devices)
+    d = len(devices)
+    while n_canaries % d:
+        d -= 1
+    return Mesh(np.asarray(devices[:d]), ("attack",))
+
+
 def mia_audit(key: jax.Array,
               grad_fn: Callable[[jax.Array, jax.Array], jax.Array],
               x_traj: jax.Array,           # (T, n) model iterates
@@ -117,16 +131,40 @@ def mia_audit(key: jax.Array,
               obs_mask: jax.Array,         # (n,) 0/1 observed coordinates
               canaries_in: jax.Array,      # (C, ...) member canary samples
               canaries_out: jax.Array,     # (C, ...) non-member canaries
-              n_bootstrap: int = 200) -> dict:
+              n_bootstrap: int = 200,
+              mesh: Optional[Mesh] = None) -> dict:
     """Gradient-alignment membership inference (see :func:`_mia_scores`).
 
     Members (whose gradients actually entered the observed update) score
     higher.  Returns AUC-style pairwise accuracy and balanced accuracy at
     the median threshold — the metric family used for Fig. 2 trends —
     plus 95% bootstrap intervals ``auc_ci`` / ``bal_acc_ci`` keyed on
-    ``key`` (``n_bootstrap=0`` disables them)."""
-    stats = _mia_stats(key, grad_fn, x_traj, views, obs_mask,
-                       canaries_in, canaries_out, n_bootstrap)
+    ``key`` (``n_bootstrap=0`` disables them).
+
+    ``mesh`` (an :func:`attack_mesh`) shards the attack compute: the
+    canary batch is placed split over the ``attack`` axis, so the
+    per-round canary-gradient vmap — the O(C * T * n) wall the
+    transformer-scale audits hit — partitions across devices while the
+    trajectory/views stay replicated.  The calibration mean is the only
+    cross-canary reduction, so the scores match the single-device audit
+    up to reduction order.  At transformer scale this is what makes
+    LARGE canary batches affordable; with a handful of canaries the AUC
+    estimate has so few distinguishable orderings that memorizing runs
+    pin it to exactly 1.0."""
+    if mesh is not None and mesh.devices.size > 1:
+        cast = NamedSharding(mesh, P("attack"))
+        rep = NamedSharding(mesh, P())
+        canaries_in = jax.device_put(canaries_in, cast)
+        canaries_out = jax.device_put(canaries_out, cast)
+        x_traj, views, obs_mask, key = jax.device_put(
+            (x_traj, views, obs_mask, key), rep)
+        stats = jax.jit(
+            lambda *a: _mia_stats(a[0], grad_fn, a[1], a[2], a[3], a[4],
+                                  a[5], n_bootstrap))(
+            key, x_traj, views, obs_mask, canaries_in, canaries_out)
+    else:
+        stats = _mia_stats(key, grad_fn, x_traj, views, obs_mask,
+                           canaries_in, canaries_out, n_bootstrap)
     out = {k: float(v) for k, v in stats.items() if jnp.ndim(v) == 0}
     for k in ("auc_ci", "bal_acc_ci"):
         if k in stats:

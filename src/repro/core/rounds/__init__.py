@@ -1,2 +1,5 @@
-"""Declarative FL method registry: method name -> RoundPipeline."""
+"""Declarative FL method registry: method name -> RoundPipeline, plus
+the cross-silo scenario matrix (defense x failure compositions)."""
 from repro.core.rounds.registry import METHODS, build_round  # noqa: F401
+from repro.core.rounds.scenarios import (  # noqa: F401
+    DEFENSES, FAILURES, Scenario, scenario_matrix)

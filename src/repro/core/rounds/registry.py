@@ -38,9 +38,10 @@ from repro.core.compressors import Int8RoundTrip
 from repro.core.pipeline import (AggregateStage, BufferedAggregate,
                                  ClientStep, DSCAggregate, DSCCompress,
                                  EFCompress, FailureInjectedFSA, FSASharded,
-                                 Int8Wire, LDPNoise, PruneWithhold,
-                                 RoundPipeline, SecureAggAggregate,
-                                 ServerStage, ShatterAggregate)
+                                 Int8Wire, LDPNoise, PairwiseMask,
+                                 PruneWithhold, RoundPipeline,
+                                 SecureAggAggregate, ServerStage,
+                                 ShatterAggregate)
 
 
 def _gamma(cfg, n: int) -> float:
@@ -121,6 +122,10 @@ def _build_eris(cfg, n):
         compressor = Int8RoundTrip(inner=compressor)
         impl = "fused" if impl == "fused" else "jnp"
     compress: tuple = ()
+    if getattr(cfg, "ldp", None) is not None:
+        # composed-defense scenarios: clip + Gaussian noise BEFORE any
+        # compression/masking (SoteriaFL's noise-then-compress order)
+        compress += (LDPNoise(ldp=cfg.ldp, key_role="noise"),)
     if cfg.use_dsc:
         compress += (DSCCompress(compressor=compressor, gamma=gamma,
                                  key_role="comp", impl=impl),)
@@ -128,18 +133,25 @@ def _build_eris(cfg, n):
         compress += (EFCompress(compressor=compressor, key_role="comp"),)
     elif int8:
         compress += (Int8Wire(key_role="wire"),)
-    keep_views = getattr(cfg, "keep_views", False)
-    if cfg.agg_dropout > 0 or cfg.link_failure > 0:
-        if keep_views:
+    secure_mask = getattr(cfg, "secure_mask", False)
+    failures = cfg.agg_dropout > 0 or cfg.link_failure > 0
+    if secure_mask:
+        if (failures or cfg.participation < 1.0
+                or getattr(cfg, "client_dropout", 0.0) > 0.0):
             raise ValueError(
-                "keep_views is not supported with failure injection: "
-                "FailureInjectedFSA does not materialize the (A, K, n) "
-                "aggregator views (audit the failure-free wire, or add "
-                "view capture to the failure path)")
+                "secure_mask cannot compose with failures/dropout/partial "
+                "participation: pairwise masks cancel only in the "
+                "unweighted full-cohort mean, and this simplified "
+                "Bonawitz protocol has no dropout-recovery round — the "
+                "aggregate would be garbage of magnitude `scale`")
+        compress += (PairwiseMask(key_role="noise"),)
+    keep_views = getattr(cfg, "keep_views", False)
+    if failures:
         aggregate = FailureInjectedFSA(
             A=cfg.A, mask_scheme=cfg.mask_scheme,
             agg_dropout=cfg.agg_dropout, link_failure=cfg.link_failure,
-            use_dsc=cfg.use_dsc, gamma=gamma, key_role="fail")
+            use_dsc=cfg.use_dsc, gamma=gamma, key_role="fail",
+            keep_views=keep_views)
     elif getattr(cfg, "fresh_masks", False) or keep_views:
         # the paper's m^t path and/or the privacy-audit path: literal FSA
         # (keyed per-round assignment when fresh; ``keep_views``

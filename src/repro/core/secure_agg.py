@@ -2,37 +2,77 @@
 simplified: no dropout recovery) — the cryptographic alternative the
 paper compares FSA against (Sec. 2 'Privacy-preserving FL').
 
-Each ordered client pair (i < j) shares a PRG seed; client i adds
-PRG(seed_ij), client j subtracts it.  Masks cancel exactly in the sum, so
-the aggregate equals FedAvg while each individual masked update is
-statistically independent of the client's data (perfect per-update
-privacy) — at the cost of O(K^2) mask generation per round and total
-failure on dropout without the recovery protocol (which is the overhead
-FSA avoids)."""
+Each unordered client pair {i, j} (i < j) shares a PRG seed; client i
+adds PRG(seed_ij), client j subtracts it.  Masks cancel exactly in the
+full-cohort sum, so the aggregate equals FedAvg while each individual
+masked update is statistically independent of the client's data
+(perfect per-update privacy) — at the cost of O(K^2) mask generation
+per round and total failure on dropout without the recovery protocol
+(which is the overhead FSA avoids).  Any weighted or partial sum does
+NOT cancel: callers that aggregate with participation weights or
+client dropout must refuse loudly (`pipeline.SecureAggAggregate` and
+`rounds.scenarios` do) rather than produce a garbage aggregate.
+
+Masks are *fixed-point*: integer multiples of a per-(K, scale) quantum
+chosen so every f32 partial sum is exactly representable (mirroring the
+real protocol's modular integer field).  Cancellation across clients is
+therefore EXACTLY zero under jit for any summation order and any K, not
+merely zero up to float round-off.
+"""
 from __future__ import annotations
+
+import math
 
 import jax
 import jax.numpy as jnp
+
+
+def _grid(scale: float, K: int) -> tuple[float, int]:
+    """Fixed-point quantum ``q`` and level count ``L`` (draws lie on
+    q * [-L, L)).  q is the power of two making the worst-case partial
+    sum over all K(K-1) signed pair masks fit in f32's 2^24 exact-integer
+    range, so additions never round and cancellation is exact."""
+    budget = 2.0 ** 24
+    q = 2.0 ** math.ceil(math.log2(max(K * K * scale / budget, 2.0 ** -16)))
+    L = max(1, int(scale / q))
+    return q, L
+
+
+def pairwise_mask_row(key: jax.Array, i: jax.Array, K: int, n: int,
+                      scale: float = 100.0) -> jax.Array:
+    """Client ``i``'s mask: sum over partners j of sign(j - i) * m_ij,
+    where m_ij is drawn from a seed keyed on the *unordered* pair
+    (min, max) — so rows i and j derive the identical pair mask and the
+    signs cancel.  This is the per-participant form the distributed
+    engine evaluates locally (each mesh position draws only its own
+    row); `pairwise_masks` is its vmap over rows."""
+    q, L = _grid(scale, K)
+    i = jnp.asarray(i)
+
+    def pair(j):
+        lo = jnp.minimum(i, j)
+        hi = jnp.maximum(i, j)
+        k = jax.random.fold_in(jax.random.fold_in(key, lo * 131071), hi)
+        m = q * jax.random.randint(k, (n,), -L, L).astype(jnp.float32)
+        return jnp.sign(j - i).astype(jnp.float32) * m
+
+    return jax.vmap(pair)(jnp.arange(K)).sum(0)
 
 
 def pairwise_masks(key: jax.Array, K: int, n: int,
                    scale: float = 100.0) -> jax.Array:
     """(K, n) masks that sum to exactly zero across clients.  ``scale``
     emulates the large modular-field range of the real protocol (masks
-    must dominate the signal for statistical hiding)."""
-    def pair_seed(i, j):
-        return jax.random.fold_in(jax.random.fold_in(key, i * 131071), j)
-
-    masks = jnp.zeros((K, n))
-    for i in range(K):
-        for j in range(i + 1, K):
-            m = scale * jax.random.normal(pair_seed(i, j), (n,))
-            masks = masks.at[i].add(m).at[j].add(-m)
-    return masks
+    must dominate the signal for statistical hiding).  Vectorized as a
+    fold_in seed grid + vmap over rows — jits at scenario-matrix scale
+    (the old version unrolled an O(K^2) Python loop of `.at` updates)."""
+    return jax.vmap(
+        lambda i: pairwise_mask_row(key, i, K, n, scale))(jnp.arange(K))
 
 
 def mask_updates(key: jax.Array, updates: jax.Array) -> jax.Array:
-    """Masked per-client updates; their mean equals the unmasked mean."""
+    """Masked per-client updates; their *unweighted full-cohort* mean
+    equals the unmasked mean.  Weighted/partial means do not cancel."""
     K, n = updates.shape
     return updates + pairwise_masks(key, K, n)
 

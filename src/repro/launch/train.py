@@ -56,9 +56,12 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core import baselines as bl
+from repro.core import secure_agg as sa_lib
 from repro.core.compressors import RandP
-from repro.core.pipeline import (ARRIVAL_SALT, ArrivalModel, CohortSample,
-                                 DSCCompress, split_round_keys)
+from repro.core.eris import ROLE_SALTS
+from repro.core.pipeline import (ARRIVAL_SALT, PAIRWISE_SALT, ArrivalModel,
+                                 CohortSample, DSCCompress, split_round_keys)
 from repro.core.settings import AsyncSettings, resolve_async
 from repro.dist import sharding as sh
 from repro.launch import shapes as shp
@@ -108,6 +111,14 @@ class TrainSettings:
     delay_max: int = 0
     client_dropout: float = 0.0
     async_: Optional[AsyncSettings] = None
+    # ---- composed-defense / failure knobs (the rounds.scenarios matrix
+    # on the real mesh wire):
+    ldp_eps: float = 0.0             # >0: per-client L2 clip + Gaussian
+    ldp_delta: float = 1e-5          # noise BEFORE transmission (the
+    ldp_clip: float = 1.0            # simulator's LDPNoise stage)
+    secure_mask: bool = False        # Bonawitz pairwise wire masking
+    agg_dropout: float = 0.0         # aggregator dropout (Appendix F.5)
+    link_failure: float = 0.0        # client->aggregator link failure
 
     def async_settings(self) -> AsyncSettings:
         """The resolved async-runtime knobs (shared with FLConfig)."""
@@ -115,6 +126,12 @@ class TrainSettings:
 
     def arrival_model(self) -> ArrivalModel:
         return self.async_settings().arrival_model()
+
+    def ldp_config(self) -> Optional[bl.LDPConfig]:
+        if self.ldp_eps <= 0:
+            return None
+        return bl.LDPConfig(eps=self.ldp_eps, delta=self.ldp_delta,
+                            clip=self.ldp_clip)
 
 
 def dsc_stage(settings: TrainSettings) -> DSCCompress:
@@ -194,7 +211,7 @@ def _quant_block_b(n_blocks: int) -> int:
 
 def _int8_wire_exchange(v: jax.Array, dim: int, seed: jax.Array,
                         caxis, n_client: int,
-                        need_round_trip: bool, omega=None):
+                        need_round_trip: bool, omega=None, rx_w=None):
     """The int8 reduce-scatter stage for one leaf.
 
     Splits ``v`` into its n_client FSA segments, quantizes each segment
@@ -232,7 +249,11 @@ def _int8_wire_exchange(v: jax.Array, dim: int, seed: jax.Array,
     q_rx = jax.lax.all_to_all(q, caxis, 0, 0, tiled=True)
     s_rx = jax.lax.all_to_all(scale, caxis, 0, 0, tiled=True)
     rx_rows = deq(q_rx, s_rx)                         # (n_client, m) views
-    if omega is None:
+    if rx_w is not None:
+        # failure-injected receive: rows weighted by live links,
+        # renormalized by the live count (already folded into rx_w)
+        my = jnp.einsum("k,km->m", rx_w, rx_rows)
+    elif omega is None:
         my = rx_rows.mean(0)                          # aggregator-side sum
     else:
         # staleness/dropout-weighted arrivals (async buffer): each row is
@@ -245,7 +266,8 @@ def _int8_wire_exchange(v: jax.Array, dim: int, seed: jax.Array,
 
 def _fused_wire_exchange(g: jax.Array, s: jax.Array, dim: int,
                          seed_mask: jax.Array, seed_round: jax.Array,
-                         caxis, n_client: int, p: float, gamma: float):
+                         caxis, n_client: int, p: float, gamma: float,
+                         rx_w=None):
     """The int8+DSC wire stage for one leaf through the one-pass
     ``kernels/dsc_quantize`` kernel.
 
@@ -283,7 +305,9 @@ def _fused_wire_exchange(g: jax.Array, s: jax.Array, dim: int,
     rx_rows = rx.reshape(n_client, mp)[:, :m]
     shard_shape = list(g.shape)
     shard_shape[dim] //= n_client
-    return rx_rows.mean(0).reshape(shard_shape), s_new, rx_rows
+    my = (rx_rows.mean(0) if rx_w is None
+          else jnp.einsum("k,km->m", rx_w, rx_rows))
+    return my.reshape(shard_shape), s_new, rx_rows
 
 
 def make_train_step(cfg: ModelConfig, mesh: Mesh, opt: Optimizer,
@@ -325,6 +349,42 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh, opt: Optimizer,
             "capture_views does not compose with a pipe axis yet: the "
             "adversary-view tap concatenates wire segments over 'model' "
             "only, so stage-sliced block leaves would alias")
+    # ---- scenario-pack validation (rounds.scenarios on the mesh) --------
+    ldp = settings.ldp_config()
+    failures = settings.agg_dropout > 0 or settings.link_failure > 0
+    if (ldp is not None or settings.secure_mask or failures) \
+            and not settings.fsa:
+        raise ValueError(
+            "ldp/secure_mask/agg_dropout/link_failure are FSA wire "
+            "compositions; fsa=False has no per-aggregator wire to "
+            "defend or fail")
+    if (ldp is not None or settings.secure_mask) and (use_tp or use_pipe):
+        raise ValueError(
+            "ldp/secure_mask need each client's FULL local gradient "
+            "(global-L2 clip / whole-leaf mask rows); run them on a "
+            "client-axes-only mesh (model=pipe=1)")
+    if settings.secure_mask:
+        if settings.use_dsc or settings.int8_wire:
+            raise ValueError(
+                "secure_mask composes with the plain f32 wire only: DSC "
+                "shifts and int8 quantization transform each client's "
+                "payload independently, so the pairwise masks would no "
+                "longer cancel in the cross-client sum")
+        if settings.grad_dtype != "float32":
+            raise ValueError(
+                "secure_mask needs grad_dtype='float32': the fixed-point "
+                "pairwise masks cancel exactly in f32 partial sums; a "
+                "bf16 wire would round them into O(1) noise")
+        if failures or async_cfg.arrival_model().dropout > 0:
+            raise ValueError(
+                "secure_mask cannot compose with failures/client dropout: "
+                "pairwise masks cancel only in the full-cohort sum (the "
+                "simplified protocol has no dropout-recovery round)")
+    if failures and settings.async_buffer:
+        raise ValueError(
+            "agg_dropout/link_failure compose with the synchronous FSA "
+            "step; the async buffered runtime models client dropout "
+            "through its ArrivalModel instead")
     pipe_dim_tree = sh.pipe_dims(cfg, pipe_size)
     scatter_dims = sh.fsa_scatter_dims(cfg, mesh) if settings.fsa else None
     store = sh.param_shardings(cfg, mesh, "store" if settings.fsa else "use")
@@ -359,6 +419,25 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh, opt: Optimizer,
             _, alive, omega = arrival.draw(
                 jax.random.fold_in(key, ARRIVAL_SALT), n_client)
             w_round = omega.mean()
+        # failure injection (Appendix F.5 on the mesh): draws keyed on the
+        # replicated round key salted with the eris engine's fail role —
+        # every mesh position must agree on which aggregators/links died.
+        # link_alive is [client k, aggregator a]; a dead link zeroes k's
+        # contribution to a's segment, the aggregator renormalizes by its
+        # live-receipt count, and a dead aggregator freezes its segment.
+        # Leaves with no FSA scatter dim ride the healthy all-reduce —
+        # only the per-aggregator wire can fail.
+        agg_alive = link_alive = link_cnt = None
+        if failures:
+            ka, kl = jax.random.split(
+                jax.random.fold_in(key, ROLE_SALTS["fail"]))
+            agg_alive = jax.random.bernoulli(
+                ka, 1.0 - settings.agg_dropout, (n_client,)
+                ).astype(jnp.float32)
+            link_alive = jax.random.bernoulli(
+                kl, 1.0 - settings.link_failure, (n_client, n_client)
+                ).astype(jnp.float32)
+            link_cnt = jnp.maximum(link_alive.sum(0), 1.0)
         if use_tp or use_pipe:
             tp_rt = (tr.TPRuntime("model", model_size, midx_arr[0], tp_plan)
                      if use_tp else None)
@@ -387,6 +466,24 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh, opt: Optimizer,
                                      grads)
 
         leaves, treedef = jax.tree.flatten(grads)
+        if ldp is not None:
+            # LDP stage (the simulator's LDPNoise, client-side on the
+            # mesh): clip this position's FULL gradient to ldp.clip in
+            # global L2, then add the calibrated Gaussian leaf-wise.
+            # Noise keys fold the eris noise-role salt + leaf index +
+            # aidx so every client draws independent noise.
+            gn2_c = sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves)
+            clip_s = jnp.minimum(
+                1.0, ldp.clip / jnp.maximum(jnp.sqrt(gn2_c), 1e-12))
+            sigma = bl.gaussian_sigma(ldp.eps, ldp.delta, ldp.clip)
+            leaves = [
+                (l.astype(jnp.float32) * clip_s
+                 + sigma * jax.random.normal(
+                     jax.random.fold_in(jax.random.fold_in(
+                         key, ROLE_SALTS["noise"] + i), aidx), l.shape)
+                 ).astype(l.dtype)
+                for i, l in enumerate(leaves)]
         stage = dsc_stage(settings) if settings.use_dsc else None
         refs = (jax.tree.leaves(dsc_ref["s_clients"]) if settings.use_dsc
                 else [None] * len(leaves))
@@ -406,9 +503,38 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh, opt: Optimizer,
                 rx = rx * alive[:, None].astype(rx.dtype)
             return rx[None]
 
+        def fail_tap(rx):
+            # failure view: rows over dead links never arrived, and a
+            # dead aggregator observed nothing at all
+            if link_alive is not None:
+                rx = rx * (link_alive[:, aidx] * agg_alive[aidx]
+                           )[:, None].astype(rx.dtype)
+            return rx
+
+        # failure-weighted receive: aggregator aidx weights each received
+        # row by its live links, renormalizes by the live count, and
+        # zeroes out entirely when it died itself (replacing the uniform
+        # 1/n_client mean of the healthy path)
+        rx_w = None
+        if link_alive is not None:
+            rx_w = link_alive[:, aidx] * agg_alive[aidx] / link_cnt[aidx]
+
         out_leaves, refs_new, views = [], [], {}
         for i, (g, s_stk, dim) in enumerate(zip(leaves, refs, dims)):
             int8 = settings.int8_wire and settings.fsa and dim >= 0
+            if settings.secure_mask:
+                # Bonawitz pairwise wire masking: this position adds ITS
+                # row of the fixed-point mask grid (key replicated — row
+                # identity comes from aidx), so every row an aggregator
+                # receives is masked while the masks cancel EXACTLY in
+                # the f32 cross-client sum; the aggregate differs from
+                # the unmasked wire only by the f32 absorption error of
+                # adding O(mask-scale) values to O(grad) values.
+                mk = jax.random.fold_in(
+                    jax.random.fold_in(key, PAIRWISE_SALT), i)
+                mrow = sa_lib.pairwise_mask_row(mk, aidx, n_client,
+                                                int(g.size))
+                g = g + mrow.reshape(g.shape).astype(g.dtype)
             if stage is not None:
                 # client-side shifted compression (Sec. 3.2.2) — the SAME
                 # DSCCompress stage the simulator pipeline runs, leaf-wise.
@@ -424,11 +550,12 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh, opt: Optimizer,
                     agg, s_new, rx = _fused_wire_exchange(
                         g, s, dim, jax.random.bits(k, dtype=jnp.uint32),
                         wire_seed(i), caxis, n_client,
-                        p=settings.dsc_p, gamma=settings.dsc_gamma)
+                        p=settings.dsc_p, gamma=settings.dsc_gamma,
+                        rx_w=rx_w)
                     refs_new.append(s_new[None])
                     out_leaves.append(agg)
                     if capture:
-                        views[str(i)] = rx[None]
+                        views[str(i)] = fail_tap(rx)[None]
                     continue
                 if int8:
                     # wire format INSIDE the shifted compressor: s_k must
@@ -437,12 +564,12 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh, opt: Optimizer,
                     v = stage.compressor(k, g.astype(s.dtype) - s)
                     agg, v_hat, rx = _int8_wire_exchange(
                         v, dim, wire_seed(i), caxis, n_client,
-                        need_round_trip=True)
+                        need_round_trip=True, rx_w=rx_w)
                     refs_new.append((s + stage.gamma * v_hat
                                      ).astype(s.dtype)[None])
                     out_leaves.append(agg)
                     if capture:
-                        views[str(i)] = rx[None]
+                        views[str(i)] = fail_tap(rx)[None]
                     continue
                 v, s_new = stage.apply_leaf(k, g, s)
                 refs_new.append(s_new[None])
@@ -450,10 +577,10 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh, opt: Optimizer,
             if int8:
                 agg, _, rx = _int8_wire_exchange(
                     g, dim, wire_seed(i), caxis, n_client,
-                    need_round_trip=False, omega=omega)
+                    need_round_trip=False, omega=omega, rx_w=rx_w)
                 out_leaves.append(agg)
                 if capture:
-                    views[str(i)] = tap(rx)
+                    views[str(i)] = tap(fail_tap(rx))
                 continue
             # un-quantized path: reduce-scatter in grad_dtype
             if omega is not None and not (capture and dim >= 0):
@@ -471,13 +598,34 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh, opt: Optimizer,
                     # aggregator-side — same result, exposed payload
                     rows = sh.split_shards(g, dim, n_client)
                     rx = jax.lax.all_to_all(rows, caxis, 0, 0, tiled=True)
-                    views[str(i)] = tap(rx).astype(jnp.float32)
+                    views[str(i)] = tap(fail_tap(rx)).astype(jnp.float32)
                     shard_shape = list(g.shape)
                     shard_shape[dim] //= n_client
-                    agg_row = (rx.mean(0) if omega is None else
-                               jnp.einsum("k,km->m", omega.astype(rx.dtype),
-                                          rx) / n_client)
+                    if rx_w is not None:
+                        agg_row = jnp.einsum("k,km->m",
+                                             rx_w.astype(rx.dtype), rx)
+                    elif omega is None:
+                        agg_row = rx.mean(0)
+                    else:
+                        agg_row = jnp.einsum(
+                            "k,km->m", omega.astype(rx.dtype), rx
+                            ) / n_client
                     out_leaves.append(agg_row.reshape(shard_shape))
+                    continue
+                if link_alive is not None:
+                    # failure-injected reduce-scatter: client aidx scales
+                    # segment a by link_alive[aidx, a]/cnt_a BEFORE the
+                    # collective, so the sum lands as the renormalized
+                    # mean over live receipts; a dead aggregator's
+                    # segment then freezes (zero update).
+                    rows = sh.split_shards(g, dim, n_client)
+                    w_l = (link_alive[aidx] / link_cnt).astype(g.dtype)
+                    g = sh.merge_shards(rows * w_l[:, None], dim, g.shape,
+                                        n_client)
+                    g = jax.lax.psum_scatter(g, caxis,
+                                             scatter_dimension=dim,
+                                             tiled=True)
+                    out_leaves.append(g * agg_alive[aidx].astype(g.dtype))
                     continue
                 g = jax.lax.psum_scatter(g, caxis, scatter_dimension=dim,
                                          tiled=True)

@@ -44,6 +44,9 @@ class AuditSpec:
     seed: int = 0
     mask_scheme: str = "strided"
     n_bootstrap: int = 200     # bootstrap resamples for the AUC CI
+    shard_attack: bool = False  # partition the canary-gradient attack
+                                # compute over an ``attack`` device mesh
+                                # (transformer-scale audits)
 
 
 def fl_config(spec: AuditSpec) -> FLConfig:
@@ -157,10 +160,12 @@ def _audit_captured(spec: AuditSpec, run, x_traj, views, grad_fn,
     assign = masks_lib.make_assignment(run.n, spec.A, spec.mask_scheme)
     obs, v = coalition_views(views, assign, spec.a_c)
     v = deshift_views(v, dsc_gamma_of(run))
+    mesh = (privacy.attack_mesh(members.shape[0])
+            if spec.shard_attack else None)
     res = privacy.mia_audit(
         jax.random.fold_in(jax.random.PRNGKey(spec.seed), key_salt),
         grad_fn, x_traj, v, obs, members, non,
-        n_bootstrap=spec.n_bootstrap)
+        n_bootstrap=spec.n_bootstrap, mesh=mesh)
     # amplification by subsampling: each round leaks with prob. q, so
     # the linear-in-T Thm 3.3 budget scales by the participation rate
     res["mi_bound"] = spec.q * privacy.mi_bound(

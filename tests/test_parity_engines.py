@@ -51,6 +51,10 @@ def quad_problem(K: int = 4, n: int = 96):
 
 def config_from_draw(method, A, use_dsc, int8_wire, fresh_masks, p,
                      server_opt, participation):
+    if method == "secure_agg":
+        # pairwise masks cancel only in the unweighted full cohort;
+        # SecureAggAggregate (correctly) raises on weighted aggregation
+        participation = 1.0
     kw = dict(method=method, K=4, A=A, lr=0.05, participation=participation,
               seed=3)
     if method == "eris":

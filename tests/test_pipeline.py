@@ -76,8 +76,12 @@ class SeedReference:
         views = None
         ef_new = ef
         if cfg.participation < 1.0:
-            part = jax.random.bernoulli(k_p, cfg.participation, (cfg.K,))
-            part = part.at[jax.random.randint(k_p, (), 0, cfg.K)].set(True)
+            # mirrors pipeline.participation_weights' key split (the draw
+            # and the forced index consume distinct sub-keys)
+            k_draw, k_force = jax.random.split(k_p)
+            part = jax.random.bernoulli(k_draw, cfg.participation, (cfg.K,))
+            part = part.at[
+                jax.random.randint(k_force, (), 0, cfg.K)].set(True)
             weights = part.astype(jnp.float32)
         else:
             weights = None

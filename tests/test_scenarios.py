@@ -1,0 +1,264 @@
+"""Cross-silo scenario pack: key discipline, exact mask cancellation,
+composition identities, failure injection, the RDP accountant, and the
+tier-1 quick smoke over the defense x failure matrix."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import accountant as acct
+from repro.core import baselines as bl
+from repro.core import eris
+from repro.core import pipeline as pl
+from repro.core import secure_agg as sa
+from repro.core.fl import FLConfig, FLRun
+from repro.core.rounds import DEFENSES, FAILURES, Scenario, scenario_matrix
+from repro.core.rounds import scenarios as sc
+
+KEY = jax.random.PRNGKey(0)
+
+
+def quad_problem(key, K=6, n=40):
+    ka, kb = jax.random.split(key)
+    a = 1.0 + jax.random.uniform(ka, (K, n))
+    b = jax.random.normal(kb, (K, n))
+
+    def loss_fn(params, batch):
+        aa, bb = batch
+        return 0.5 * jnp.mean((aa * params - bb) ** 2)
+
+    return jnp.zeros(n), loss_fn, (a, b)
+
+
+# ----------------------------------------------------- RNG key discipline
+@given(role_bits=st.integers(0, 7), seed=st.integers(0, 2 ** 16))
+@settings(max_examples=30, deadline=None)
+def test_role_keys_pairwise_independent(role_bits, seed):
+    """Active roles get keys distinct from k_comp AND from each other;
+    inactive roles alias k_comp bit-exactly (pure-eris compatibility)."""
+    all_roles = sorted(eris.ROLE_SALTS)
+    roles = {r for i, r in enumerate(all_roles) if role_bits >> i & 1}
+    k_mask, k_comp = jax.random.split(jax.random.PRNGKey(seed))
+    keys = eris._round_keys(k_mask, k_comp, active=frozenset(roles))
+    by_role = {"noise": keys.noise, "fail": keys.fail, "part": keys.part}
+    seen = [np.asarray(k_comp)]
+    for role, k in by_role.items():
+        k = np.asarray(k)
+        if role in roles:
+            assert not any(np.array_equal(k, s) for s in seen), role
+            seen.append(k)
+        else:
+            np.testing.assert_array_equal(k, np.asarray(k_comp))
+
+
+def test_pure_eris_keys_bit_compatible():
+    """No active stage -> every per-role key IS k_comp (frozen seed
+    trajectories stay valid)."""
+    k_mask, k_comp = jax.random.split(KEY)
+    keys = eris._round_keys(k_mask, k_comp)
+    for k in (keys.noise, keys.fail, keys.part):
+        np.testing.assert_array_equal(np.asarray(k), np.asarray(k_comp))
+
+
+@given(seed=st.integers(0, 2 ** 16), frac=st.floats(0.005, 0.05))
+@settings(max_examples=10, deadline=None)
+def test_participation_always_nonempty(seed, frac):
+    w = pl.participation_weights(jax.random.PRNGKey(seed), 16, frac)
+    assert float(jnp.sum(w)) >= 1.0
+
+
+def test_participation_force_decoupled_from_mask():
+    """Regression for the participation_weights key reuse: the forced
+    fallback index must come from its OWN key stream, not the bernoulli
+    mask's.  At a tiny fraction the mask is almost always empty, so the
+    forced index dominates — across many rounds it must cover the cohort
+    roughly uniformly instead of tracking the mask draw."""
+    K, T = 8, 400
+    counts = np.zeros(K)
+    for t in range(T):
+        key = jax.random.PRNGKey(t)
+        w = np.asarray(pl.participation_weights(key, K, 0.01))
+        if w.sum() == 1.0:                     # forced-singleton round
+            counts[int(np.argmax(w))] += 1
+        # the OLD coupled draw: randint on the undivided round key
+        old = int(jax.random.randint(key, (), 0, K))
+        assert w.sum() >= 1.0 and (old or True)
+    assert (counts > 0).all(), counts          # every index reachable
+    expect = counts.sum() / K
+    assert counts.max() < 2.5 * expect, counts # roughly uniform
+
+
+# ------------------------------------------------ exact mask cancellation
+@given(K=st.integers(2, 24), n=st.integers(1, 300),
+       scale=st.sampled_from([1.0, 100.0, 1e4]),
+       seed=st.integers(0, 2 ** 16))
+@settings(max_examples=30, deadline=None)
+def test_pairwise_masks_cancel_exactly_under_jit(K, n, scale, seed):
+    """Fixed-point pairwise masks sum to EXACTLY zero for any cohort
+    size, any coordinate count, any summation order jit picks."""
+    masks = jax.jit(sa.pairwise_masks, static_argnums=(1, 2, 3))(
+        jax.random.PRNGKey(seed), K, n, scale)
+    total = np.asarray(jax.jit(lambda m: m.sum(0))(masks))
+    assert (total == 0.0).all()
+    assert float(np.abs(np.asarray(masks)).mean()) > 0.05 * scale
+
+
+@given(K=st.integers(2, 12), seed=st.integers(0, 2 ** 16))
+@settings(max_examples=20, deadline=None)
+def test_pairwise_mask_row_matches_matrix(K, seed):
+    """The per-participant row form (what the distributed engine adds at
+    position aidx) is exactly the matrix row."""
+    key = jax.random.PRNGKey(seed)
+    full = np.asarray(sa.pairwise_masks(key, K, 17))
+    for i in range(K):
+        row = np.asarray(sa.pairwise_mask_row(key, i, K, 17))
+        np.testing.assert_array_equal(row, full[i])
+
+
+def test_secure_agg_refuses_weighted_cohort():
+    """SecureAggAggregate must fail loudly on any weighted/partial
+    cohort — unpaired masks would leave O(scale) garbage in the mean."""
+    key = jax.random.PRNGKey(3)
+    v = jax.random.normal(key, (4, 20))
+    stage = pl.SecureAggAggregate()
+    keys = pl.split_round_keys(key)
+    state = pl.RoundState(x=jnp.zeros(20), dsc=None, ef=None, server=None)
+    with pytest.raises(ValueError, match="full-cohort"):
+        stage.apply(keys, state, v, jnp.ones(4).at[0].set(0.0))
+    res = stage.apply(keys, state, v, None)
+    np.testing.assert_allclose(np.asarray(res.update),
+                               np.asarray(v.mean(0)), atol=1e-4)
+
+
+# ----------------------------------------------- composition identities
+def test_scenario_matrix_shape():
+    cells = scenario_matrix(feasible_only=False)
+    assert len(cells) == len(DEFENSES) * len(FAILURES) == 18
+    feasible = scenario_matrix()
+    assert len(feasible) == 15
+    for cell in cells:
+        assert cell.feasible == (cell.refusal is None)
+
+
+def test_infeasible_cells_refuse_loudly():
+    for name in ("secure_agg+agg_fail", "secure_agg+client_drop",
+                 "dsc_int8+client_drop"):
+        cell = sc.get(name)
+        assert not cell.feasible
+        with pytest.raises(ValueError, match="infeasible"):
+            cell.fl_config()
+
+
+def test_secure_mask_composition_refused_in_registry():
+    x0, loss_fn, batches = quad_problem(KEY)
+    with pytest.raises(ValueError, match="mask"):
+        FLRun(FLConfig(method="eris", K=6, A=4, secure_mask=True,
+                       participation=0.5), x0, loss_fn)
+
+
+def test_secure_agg_scenario_matches_undefended_trajectory():
+    """secure_agg+none == none+none up to the f32 absorption error of
+    the mask magnitude: masks cancel in the cohort sum, so the defense
+    changes the wire, not the aggregate."""
+    x0, loss_fn, batches = quad_problem(KEY)
+    runs = {}
+    for name in ("none+none", "secure_agg+none"):
+        run = FLRun(sc.get(name).fl_config(K=6, A=4, rounds=1, lr=0.3),
+                    x0, loss_fn)
+        for _ in range(6):
+            run.step(batches)
+        runs[name] = np.asarray(run.x)
+    np.testing.assert_allclose(runs["secure_agg+none"], runs["none+none"],
+                               atol=1e-4)
+    assert np.abs(runs["none+none"]).max() > 1e-3
+
+
+def test_eris_ldp_equals_fedavg_ldp_at_A1():
+    """Composed LDP on the eris wire with a single aggregator IS
+    fedavg_ldp: same noise role key, FSA(A=1) aggregation == mean."""
+    x0, loss_fn, batches = quad_problem(jax.random.fold_in(KEY, 7))
+    ldp = sc.SCENARIO_LDP
+    run_e = FLRun(FLConfig(method="eris", K=6, A=1, lr=0.1, ldp=ldp),
+                  x0, loss_fn)
+    run_f = FLRun(FLConfig(method="fedavg_ldp", K=6, A=1, lr=0.1, ldp=ldp),
+                  x0, loss_fn)
+    for _ in range(4):
+        run_e.step(batches)
+        run_f.step(batches)
+    np.testing.assert_allclose(np.asarray(run_e.x), np.asarray(run_f.x),
+                               atol=1e-5)
+
+
+def test_failure_views_zeroed_and_training_continues():
+    """none+agg_fail with captured views: the adversary tap shows whole
+    rows zeroed (dead links / dead aggregators) and the run still
+    optimizes."""
+    x0, loss_fn, batches = quad_problem(KEY, K=6, n=40)
+    cell = sc.get("none+agg_fail")
+    run = FLRun(cell.fl_config(K=6, A=4, rounds=8, lr=0.3,
+                               keep_views=True), x0, loss_fn)
+    stacked = jax.tree.map(lambda b: jnp.stack([b] * 8), batches)
+    xs, views = run.run_scanned(stacked, collect_views=True)
+    v = np.asarray(views)
+    assert v.shape == (8, 4, 6, 40)
+    row_max = np.abs(v).max(axis=-1)            # (T, A, K)
+    assert (row_max == 0.0).any()               # some links/aggs died
+    assert (row_max > 0.0).any()                # but not all
+    loss0 = float(loss_fn(run.unravel(jnp.zeros_like(run.x)),
+                          jax.tree.map(lambda b: b[0], batches)))
+    lossT = float(loss_fn(run.unravel(xs[-1]),
+                          jax.tree.map(lambda b: b[0], batches)))
+    assert lossT < loss0
+
+
+# ------------------------------------------------------- RDP accountant
+def test_accountant_eps_monotone_in_rounds():
+    accs = [acct.ldp_cumulative_epsilon(sc.SCENARIO_LDP, T)["eps"]
+            for T in (1, 5, 20, 80)]
+    assert all(a < b for a, b in zip(accs, accs[1:])), accs
+    assert np.isfinite(accs[-1])
+
+
+def test_accountant_eps_decreasing_in_noise():
+    a = acct.RDPAccountant()
+    a.step(noise_multiplier=0.6, q=1.0, steps=10)
+    b = acct.RDPAccountant()
+    b.step(noise_multiplier=2.0, q=1.0, steps=10)
+    assert b.epsilon(1e-5) < a.epsilon(1e-5)
+
+
+def test_accountant_subsampling_amplifies():
+    full = acct.ldp_cumulative_epsilon(sc.SCENARIO_LDP, 20, q=1.0)["eps"]
+    sub = acct.ldp_cumulative_epsilon(sc.SCENARIO_LDP, 20, q=0.75)["eps"]
+    assert sub < full
+
+
+def test_accountant_none_for_noiseless():
+    assert acct.ldp_cumulative_epsilon(None, 20) is None
+
+
+def test_rdp_gaussian_known_value():
+    # alpha/(2 z^2): the Renyi divergence of N(0,z^2) vs N(1,z^2)
+    assert acct.rdp_gaussian(8, 2.0) == pytest.approx(1.0)
+
+
+# -------------------------------------------------- tier-1 quick smoke
+@pytest.mark.parametrize("name", ["none+none", "ldp+none",
+                                  "secure_agg+none", "int8+agg_fail",
+                                  "int8+client_drop"])
+def test_scenario_smoke_step_scan_parity(name):
+    """Representative matrix cells: 3 rounds, the step engine and the
+    scan engine land on the same iterate (one round implementation)."""
+    x0, loss_fn, batches = quad_problem(KEY, K=6, n=30)
+    cell = sc.get(name)
+    cfg = cell.fl_config(K=6, A=4, rounds=3, lr=0.2)
+    run_step = FLRun(cfg, x0, loss_fn)
+    for _ in range(3):
+        run_step.step(batches)
+    run_scan = FLRun(cfg, x0, loss_fn)
+    stacked = jax.tree.map(lambda b: jnp.stack([b] * 3), batches)
+    xs = run_scan.run_scanned(stacked)
+    np.testing.assert_allclose(np.asarray(run_step.x), np.asarray(xs[-1]),
+                               rtol=1e-5, atol=1e-5)
+    assert np.isfinite(np.asarray(xs)).all()
